@@ -1,0 +1,57 @@
+"""Shared helpers for the benchmark harness.
+
+Benchmark configs are small-but-not-tiny (state ~100 MB class) so
+copy-persist costs are measurable against iteration time on this CPU host.
+Absolute times are container-specific; the *ratios* reproduce the paper's
+relative claims (noted per benchmark).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+import jax
+
+import repro.configs as C
+from repro.dist.sharding import ShardingRules, make_smoke_mesh
+
+
+def bench_config(arch: str, **over):
+    cfg = C.get(arch)
+    kw = dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+              head_dim=64, d_ff=1024, vocab_size=8192, microbatches=1,
+              attn_q_chunk=64, attn_kv_chunk=128)
+    if cfg.num_experts:
+        kw.update(num_experts=4, top_k=2, moe_d_ff=512)
+    if cfg.ssm_state:
+        kw.update(ssm_state=32, ssm_head_dim=32, ssm_chunk=32)
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    if cfg.encoder_layers:
+        kw.update(encoder_layers=2, encoder_seq=64)
+    if cfg.num_patches:
+        kw.update(num_patches=16)
+    kw.update(over)
+    return replace(cfg, name=cfg.name + "-bench", **kw)
+
+
+def smoke_env():
+    mesh = make_smoke_mesh()
+    return mesh, ShardingRules(mesh)
+
+
+def timeit(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig6,...]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+Mapping to the paper:
+  savings            -> Fig 1, Fig 11, §6.7, App. A/B anchors
+  stalls             -> Fig 2 (per-iteration stalls per system)
+  throughput         -> Fig 6 (throughput x checkpoint count, 4 model fams)
+  shadow_timing      -> Fig 7 (shadow keeps up; min CPU nodes)
+  optimizer_scaling  -> Fig 8 (opt-step scaling across shadow partitions)
+  correctness        -> Fig 9 (recovered == uninterrupted)
+  multicast_overhead -> Fig 10 (replication factor sweep)
+  kernels            -> Pallas kernels vs jnp refs
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("savings", "benchmarks.savings"),
+    ("multicast_overhead", "benchmarks.multicast_overhead"),
+    ("optimizer_scaling", "benchmarks.optimizer_scaling"),
+    ("kernels", "benchmarks.kernels"),
+    ("stalls", "benchmarks.stalls"),
+    ("shadow_timing", "benchmarks.shadow_timing"),
+    ("correctness", "benchmarks.correctness"),
+    ("throughput", "benchmarks.throughput"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            __import__(mod, fromlist=["run"]).run()
+        except Exception as e:                      # keep the harness going
+            traceback.print_exc()
+            failures.append(name)
+            print(f"{name}.FAILED,0,{type(e).__name__}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

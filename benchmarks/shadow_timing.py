@@ -1,0 +1,43 @@
+"""Fig 7: can the shadow keep up? Batch-size sweep — iteration time vs
+shadow pull+optimizer time, and the min shadow-node count (§6.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import bench_config, csv_row, smoke_env
+from repro.core.buckets import layout_for_tree
+from repro.core.shadow import ShadowCluster, plan_shadow_nodes
+from repro.optim import OptimizerConfig
+from repro.train.loop import train
+from repro.train.step import make_train_state
+
+
+def run():
+    mesh, rules = smoke_env()
+    opt = OptimizerConfig(lr=1e-3)
+    for arch in ("gpt2-1.5b", "vit-h-14"):
+        cfg = bench_config(arch)
+        for batch in (2, 8, 16):
+            s0 = make_train_state(jax.random.PRNGKey(0), cfg, rules)
+            layout = layout_for_tree(s0.params)
+            shadow = ShadowCluster(layout, opt, n_nodes=1)
+            shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
+            from repro.core.checkpoint import CheckmateCheckpointer
+            _, stats = train(cfg, rules, steps=5, batch=batch, seq=64,
+                             opt=opt, state=s0,
+                             checkpointer=CheckmateCheckpointer(shadow))
+            st = shadow.stats()
+            tree = {k: np.asarray(v) for k, v in s0.params.items()}
+            n_min, t_apply = plan_shadow_nodes(layout, opt, stats.steady_iter,
+                                               tree)
+            keeps_up = st.mean_apply_s < stats.steady_iter
+            csv_row(f"fig7.{cfg.name}.b{batch}", stats.steady_iter * 1e6,
+                    f"iter={stats.steady_iter*1e3:.0f}ms "
+                    f"opt_step={st.mean_apply_s*1e3:.1f}ms "
+                    f"min_nodes={n_min} keeps_up={keeps_up}")
+
+
+if __name__ == "__main__":
+    run()

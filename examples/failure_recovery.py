@@ -1,0 +1,53 @@
+"""Failure recovery (paper Fig 9): a run with injected failures, recovered
+from the per-iteration shadow checkpoint, converges IDENTICALLY to an
+uninterrupted run — bit-for-bit.
+
+    PYTHONPATH=src python examples/failure_recovery.py
+"""
+import numpy as np
+import jax
+
+import repro.configs as C
+from repro.core.buckets import layout_for_tree
+from repro.core.checkpoint import CheckmateCheckpointer
+from repro.core.recovery import FailurePlan
+from repro.core.shadow import ShadowCluster
+from repro.dist.sharding import ShardingRules, make_smoke_mesh
+from repro.optim import OptimizerConfig
+from repro.train.loop import train
+from repro.train.step import make_train_state
+
+
+def main():
+    cfg = C.get("llama3.2-3b").reduced()
+    mesh = make_smoke_mesh()
+    rules = ShardingRules(mesh)
+    opt = OptimizerConfig(lr=1e-3)
+    steps, batch, seq, seed = 16, 8, 64, 7
+
+    # Run A: uninterrupted.
+    state_a, stats_a = train(cfg, rules, steps=steps, batch=batch, seq=seq,
+                             opt=opt, seed=seed)
+
+    # Run B: failures at steps 6 and 12, recovery from shadow.
+    s0 = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
+    shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=2)
+    shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
+    state_b, stats_b = train(cfg, rules, steps=steps, batch=batch, seq=seq,
+                             opt=opt, seed=seed, state=s0,
+                             checkpointer=CheckmateCheckpointer(shadow),
+                             failure_plan=FailurePlan((6, 12)))
+
+    same = all(np.array_equal(np.asarray(state_a.params[k]),
+                              np.asarray(state_b.params[k]))
+               for k in state_a.params)
+    print(f"run A losses: {[f'{l:.4f}' for l in stats_a.losses[-4:]]}")
+    print(f"run B losses: {[f'{l:.4f}' for l in stats_b.losses[-4:]]}")
+    print(f"failures={stats_b.failures} recoveries={stats_b.recoveries} "
+          f"recovered_at={stats_b.recovered_at}")
+    print(f"final states identical: {same}")
+    assert same and stats_b.recoveries == 2
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.core.tagging import (  # noqa: F401
+    chunk_at, is_tagged, tag_schedule, tagged_chunks_per_rank, TagEvent,
+)
+from repro.core.buckets import (  # noqa: F401
+    Bucket, BucketLayout, build_buckets, pack_bucket, unpack_bucket,
+)
+from repro.core.multicast import (  # noqa: F401
+    MulticastGroup, SwitchControlPlane, assign_buckets,
+)
+from repro.core.shadow import ShadowCluster, ShadowNode  # noqa: F401
+from repro.core.checkpoint import (  # noqa: F401
+    CheckmateCheckpointer, SyncCheckpointer, AsyncCheckpointer,
+    ShardedAsyncCheckpointer, GeminiLikeCheckpointer, CheckFreqCheckpointer,
+    NoCheckpointer,
+)
+from repro.core import costmodel  # noqa: F401

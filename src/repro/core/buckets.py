@@ -1,0 +1,121 @@
+"""DDP-style gradient bucketing (paper §4.2.2).
+
+Frameworks bin-pack gradients into fixed-size buckets starting from the LAST
+model layer and working backwards (the backward pass produces gradients in
+that order, so buckets become ready for communication early). A leaf larger
+than the cap gets a dedicated bucket. Shadow nodes keep the *same* mapping so
+each model layer points at an offset inside a received bucket without extra
+copies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import numpy as np
+
+DEFAULT_BUCKET_BYTES = 25 * 1024 * 1024       # PyTorch DDP default
+
+
+@dataclass(frozen=True)
+class LeafSlot:
+    name: str
+    offset: int          # element offset inside the bucket
+    size: int            # element count
+    shape: tuple
+    dtype: str
+
+
+@dataclass(frozen=True)
+class Bucket:
+    bucket_id: int
+    slots: tuple[LeafSlot, ...]
+    size: int            # total element count
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.size * np.dtype(s.dtype).itemsize for s in self.slots)
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    buckets: tuple[Bucket, ...]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b.nbytes for b in self.buckets)
+
+    def leaf_index(self) -> dict[str, tuple[int, LeafSlot]]:
+        out = {}
+        for b in self.buckets:
+            for s in b.slots:
+                out[s.name] = (b.bucket_id, s)
+        return out
+
+
+def build_buckets(named_leaves: Iterable[tuple[str, tuple, str]],
+                  cap_bytes: int = DEFAULT_BUCKET_BYTES,
+                  reverse: bool = True) -> BucketLayout:
+    """named_leaves: iterable of (name, shape, dtype) in model order."""
+    leaves = list(named_leaves)
+    if reverse:
+        leaves = leaves[::-1]
+    buckets: list[Bucket] = []
+    cur: list[LeafSlot] = []
+    cur_elems = 0
+    cur_bytes = 0
+
+    def flush():
+        nonlocal cur, cur_elems, cur_bytes
+        if cur:
+            buckets.append(Bucket(len(buckets), tuple(cur), cur_elems))
+            cur, cur_elems, cur_bytes = [], 0, 0
+
+    for name, shape, dtype in leaves:
+        size = int(np.prod(shape)) if shape else 1
+        nbytes = size * np.dtype(dtype).itemsize
+        if nbytes >= cap_bytes:                  # dedicated bucket
+            flush()
+            buckets.append(Bucket(
+                len(buckets),
+                (LeafSlot(name, 0, size, tuple(shape), dtype),), size))
+            continue
+        if cur_bytes + nbytes > cap_bytes:
+            flush()
+        cur.append(LeafSlot(name, cur_elems, size, tuple(shape), dtype))
+        cur_elems += size
+        cur_bytes += nbytes
+    flush()
+    return BucketLayout(tuple(buckets))
+
+
+def layout_for_tree(tree: dict, cap_bytes: int = DEFAULT_BUCKET_BYTES
+                    ) -> BucketLayout:
+    return build_buckets(
+        [(k, tuple(v.shape), str(v.dtype)) for k, v in tree.items()],
+        cap_bytes=cap_bytes)
+
+
+def pack_bucket(bucket: Bucket, tree: dict, xp=np):
+    """Flatten the bucket's leaves into one contiguous array."""
+    parts = [xp.ravel(xp.asarray(tree[s.name])) for s in bucket.slots]
+    return xp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unpack_bucket(bucket: Bucket, flat, xp=np) -> dict:
+    """Inverse of pack_bucket: bucket array -> {leaf name: array}."""
+    out = {}
+    for s in bucket.slots:
+        out[s.name] = xp.reshape(flat[s.offset:s.offset + s.size], s.shape)
+    return out
+
+
+def pack_all(layout: BucketLayout, tree: dict, xp=np) -> dict[int, object]:
+    return {b.bucket_id: pack_bucket(b, tree, xp) for b in layout.buckets}
+
+
+def unpack_all(layout: BucketLayout, flats: dict[int, object], xp=np) -> dict:
+    out = {}
+    for b in layout.buckets:
+        out.update(unpack_bucket(b, flats[b.bucket_id], xp))
+    return out

@@ -1,0 +1,81 @@
+"""Failure injection + recovery from the shadow checkpoint, including
+elastic restart (restore onto a different mesh / DP width).
+
+Recovery flow (paper §4.2.4): consolidate shadow partitions into a full
+checkpoint (configurable timeout), rebuild the device TrainState from it,
+and reset the data iterator to the checkpoint step. Because the data
+pipeline is PRNG-counter addressed (repro.data.synthetic), resume is exact:
+the recovered run replays the identical batch sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shadow import ShadowCluster
+from repro.dist.sharding import ShardingRules
+from repro.optim import TrainState
+from repro.train.step import state_shardings
+
+
+@dataclass
+class FailurePlan:
+    """Deterministic failure injection for tests/benchmarks.
+
+    Each planned failure fires ONCE (a failure is an event): after recovery
+    the re-executed iteration proceeds normally, exactly like a real node
+    replacement."""
+    fail_at_steps: tuple[int, ...] = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def should_fail(self, step: int) -> bool:
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            return True
+        return False
+
+
+def state_from_checkpoint(ckpt: dict, cfg, rules: ShardingRules) -> TrainState:
+    """Rebuild a device TrainState from a consolidated shadow checkpoint.
+
+    Works across meshes: leaves are host arrays; ``device_put`` against the
+    *target* mesh's shardings performs the elastic reshard.
+    """
+    sh = state_shardings(cfg, rules)
+    params = {k: jax.device_put(np.asarray(v), sh.params[k])
+              for k, v in ckpt["params"].items()}
+    mu = {k: jax.device_put(np.asarray(v), sh.mu[k])
+          for k, v in ckpt["mu"].items()}
+    nu = {k: jax.device_put(np.asarray(v), sh.nu[k])
+          for k, v in ckpt["nu"].items()}
+    return TrainState(params=params, mu=mu, nu=nu,
+                      step=jnp.asarray(ckpt["step"], jnp.int32))
+
+
+def checkpoint_from_state(state: TrainState) -> dict:
+    """Host-side snapshot of a TrainState (used by baselines & tests)."""
+    return {
+        "params": {k: np.asarray(v) for k, v in state.params.items()},
+        "mu": {k: np.asarray(v) for k, v in state.mu.items()},
+        "nu": {k: np.asarray(v) for k, v in state.nu.items()},
+        "step": int(state.step),
+    }
+
+
+def recover(shadow: ShadowCluster, cfg, rules: ShardingRules,
+            timeout: Optional[float] = None) -> tuple[TrainState, int]:
+    """Consolidate the shadow cluster and rebuild training state.
+
+    Returns (state, resume_step). All shadow nodes serve the consolidated
+    checkpoint simultaneously in the paper; here consolidation is a merge of
+    node partitions.
+    """
+    ckpt = shadow.consolidate(timeout=timeout)
+    state = state_from_checkpoint(ckpt, cfg, rules)
+    return state, int(ckpt["step"])

@@ -1,0 +1,241 @@
+"""Shadow cluster (paper §4.2): CPU replicas that turn captured gradients
+into per-iteration checkpoints.
+
+Each shadow node owns a byte-balanced partition of the gradient buckets
+(§4.2.4) and holds params + optimizer moments for exactly the leaves in its
+buckets. On every iteration it receives that iteration's reduced-gradient
+buckets and applies the same functional optimizer step the training nodes
+apply — no forward/backward (paper Listing 2):
+
+    while True:
+        buckets.recv()
+        optimizer.step()
+
+Async mode runs one worker thread per node (the paper's timeliness
+requirement §6.3: shadow must finish before training starts the next
+optimizer step); queue depth and per-apply wall time are tracked so the
+timeliness condition is observable.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.buckets import BucketLayout, pack_bucket, unpack_bucket
+from repro.core.multicast import assign_buckets
+from repro.optim.functional import OptimizerConfig, UPDATE_FNS
+
+
+class ShadowNode:
+    """One CPU shadow node: partition state + functional optimizer."""
+
+    def __init__(self, node_id: int, opt: OptimizerConfig,
+                 layout: BucketLayout, bucket_ids: list[int]):
+        self.node_id = node_id
+        self.opt = opt
+        self.layout = layout
+        self.bucket_ids = sorted(bucket_ids)
+        self._leaves = [s.name for b in layout.buckets
+                        if b.bucket_id in set(bucket_ids) for s in b.slots]
+        self.params: dict[str, jnp.ndarray] = {}
+        self.mu: dict[str, jnp.ndarray] = {}
+        self.nu: dict[str, jnp.ndarray] = {}
+        self.step = 0
+        self.apply_times: list[float] = []
+        self._update = jax.jit(self._update_fn)
+
+    # -- state ---------------------------------------------------------------
+    def bootstrap(self, params, mu, nu, step: int):
+        for name in self._leaves:
+            self.params[name] = jnp.asarray(params[name])
+            self.mu[name] = jnp.asarray(mu[name])
+            self.nu[name] = jnp.asarray(nu[name])
+        self.step = int(step)
+
+    # -- update --------------------------------------------------------------
+    def _update_fn(self, params, mu, nu, grads, step, lr, scale):
+        fn = UPDATE_FNS[self.opt.name]
+        out_p, out_m, out_v = {}, {}, {}
+        for name, g in grads.items():
+            p, m, v = (fn(params[name], g * scale, mu[name], nu[name],
+                          step, self.opt, lr))
+            out_p[name], out_m[name], out_v[name] = p, m, v
+        return out_p, out_m, out_v
+
+    def apply(self, step: int, lr: float, flats: dict[int, np.ndarray],
+              grad_scale: float = 1.0):
+        """Apply one iteration's bucket gradients for this node's partition."""
+        t0 = time.perf_counter()
+        grads = {}
+        by_id = {b.bucket_id: b for b in self.layout.buckets}
+        for bid in self.bucket_ids:
+            bucket = by_id[bid]
+            grads.update(unpack_bucket(bucket, jnp.asarray(flats[bid]), xp=jnp))
+        grads = {k: v for k, v in grads.items() if k in self.params}
+        p, m, v = self._update(self.params, self.mu, self.nu, grads,
+                               jnp.float32(step), jnp.float32(lr),
+                               jnp.float32(grad_scale))
+        self.params.update(p)
+        self.mu.update(m)
+        self.nu.update(v)
+        self.step = step
+        self.apply_times.append(time.perf_counter() - t0)
+
+
+@dataclass
+class ShadowStats:
+    steps_applied: int
+    lag: int                       # training step - shadow step
+    max_queue_depth: int
+    mean_apply_s: float
+    max_apply_s: float
+    per_node_apply_s: list[float]
+
+
+class ShadowCluster:
+    """Checkmate's shadow plane: N nodes x partitioned functional optimizer."""
+
+    def __init__(self, layout: BucketLayout, opt: OptimizerConfig,
+                 n_nodes: int = 1, async_mode: bool = False):
+        self.layout = layout
+        self.opt = opt
+        self.n_nodes = n_nodes
+        self.assignment = assign_buckets(layout, n_nodes)
+        self.nodes = [
+            ShadowNode(i, opt, layout,
+                       [b for b, n in self.assignment.items() if n == i])
+            for i in range(n_nodes)
+        ]
+        self.async_mode = async_mode
+        self.train_step_seen = 0
+        self.max_queue_depth = 0
+        self._queues: list[queue.Queue] = []
+        self._workers: list[threading.Thread] = []
+        if async_mode:
+            self._start_workers()
+
+    # -- async plumbing --------------------------------------------------------
+    def _start_workers(self):
+        for node in self.nodes:
+            q: queue.Queue = queue.Queue()
+            t = threading.Thread(target=self._worker, args=(node, q),
+                                 daemon=True)
+            t.start()
+            self._queues.append(q)
+            self._workers.append(t)
+
+    def _worker(self, node: ShadowNode, q: queue.Queue):
+        by_id = {b.bucket_id: b for b in self.layout.buckets}
+        while True:
+            item = q.get()
+            if item is None:
+                q.task_done()
+                return
+            step, lr, scale, grads = item
+            # bucket packing happens HERE, on the shadow node — the caller
+            # only enqueued a reference (the paper's zero-copy hand-off)
+            flats = {bid: pack_bucket(by_id[bid], grads, xp=np)
+                     for bid in node.bucket_ids}
+            node.apply(step, lr, flats, scale)
+            q.task_done()
+
+    # -- API -------------------------------------------------------------------
+    def bootstrap(self, params, mu, nu, step: int = 0):
+        """Install the initial replica (paper: shadow starts from a copy)."""
+        params = {k: np.asarray(v) for k, v in params.items()}
+        mu = {k: np.asarray(v) for k, v in mu.items()}
+        nu = {k: np.asarray(v) for k, v in nu.items()}
+        for node in self.nodes:
+            node.bootstrap(params, mu, nu, step)
+        self.train_step_seen = int(step)
+
+    def on_gradients(self, step: int, lr: float, grads: dict,
+                     grad_scale: float = 1.0):
+        """Deliver one iteration's reduced gradients (the multicast payload).
+
+        Async mode enqueues a REFERENCE only — packing and the optimizer
+        replay run on the shadow workers, off the training critical path.
+        """
+        self.train_step_seen = step
+        if self.async_mode:
+            for node, q in zip(self.nodes, self._queues):
+                q.put((step, lr, grad_scale, grads))
+                self.max_queue_depth = max(self.max_queue_depth, q.qsize())
+        else:
+            flats = {b.bucket_id: pack_bucket(b, grads, xp=np)
+                     for b in self.layout.buckets}
+            for node in self.nodes:
+                sub = {bid: flats[bid] for bid in node.bucket_ids}
+                node.apply(step, lr, sub, grad_scale)
+
+    def consolidate(self, timeout: Optional[float] = None) -> dict:
+        """Assemble a complete checkpoint for recovery (§4.2.4).
+
+        Waits (up to ``timeout``) for in-flight updates, then merges node
+        partitions into full params/mu/nu trees.
+        """
+        if self.async_mode:
+            deadline = time.time() + (timeout or 60.0)
+            for q in self._queues:
+                while not q.empty() and time.time() < deadline:
+                    time.sleep(0.001)
+                q.join()
+        params: dict = {}
+        mu: dict = {}
+        nu: dict = {}
+        step = min((n.step for n in self.nodes), default=0)
+        for node in self.nodes:
+            params.update(node.params)
+            mu.update(node.mu)
+            nu.update(node.nu)
+        return {"params": params, "mu": mu, "nu": nu, "step": step}
+
+    def stats(self) -> ShadowStats:
+        times = [t for n in self.nodes for t in n.apply_times]
+        per_node = [float(np.mean(n.apply_times)) if n.apply_times else 0.0
+                    for n in self.nodes]
+        return ShadowStats(
+            steps_applied=min((n.step for n in self.nodes), default=0),
+            lag=self.train_step_seen - min((n.step for n in self.nodes),
+                                           default=0),
+            max_queue_depth=self.max_queue_depth,
+            mean_apply_s=float(np.mean(times)) if times else 0.0,
+            max_apply_s=float(np.max(times)) if times else 0.0,
+            per_node_apply_s=per_node)
+
+    def shutdown(self):
+        if self.async_mode:
+            for q in self._queues:
+                q.put(None)
+            for t in self._workers:
+                t.join(timeout=5)
+
+
+def plan_shadow_nodes(layout: BucketLayout, opt: OptimizerConfig,
+                      iter_time_s: float, trial_tree: dict,
+                      max_nodes: int = 16) -> tuple[int, float]:
+    """Paper §4.2.4: 'Before starting training, Checkmate profiles shadow
+    nodes and configures the system for optimal performance.'
+
+    Measures one full-tree optimizer apply on this host and returns the
+    minimum node count whose per-node apply time fits inside an iteration,
+    plus the measured single-node apply time.
+    """
+    cluster = ShadowCluster(layout, opt, n_nodes=1)
+    zeros = {k: np.zeros(v.shape, np.float32) for k, v in trial_tree.items()}
+    cluster.bootstrap(zeros, zeros, zeros, 0)
+    grads = {k: np.ones(v.shape, np.float32) for k, v in trial_tree.items()}
+    cluster.on_gradients(1, 1e-3, grads)      # warmup/compile
+    t0 = time.perf_counter()
+    cluster.on_gradients(2, 1e-3, grads)
+    t1 = time.perf_counter() - t0
+    need = max(1, int(np.ceil(t1 / max(iter_time_s, 1e-9))))
+    return min(need, max_nodes), t1

@@ -1,0 +1,92 @@
+"""Flash attention (online softmax) Pallas kernel — the training-side
+compute hot spot.
+
+Grid: (batch*heads, q_blocks); the kernel loops kv blocks with running
+(max, sum, acc) f32 scratch in VMEM, never materializing the (s, s) score
+matrix. Causal masking prunes fully-masked kv blocks via the loop bound
+(exact-flops causality, unlike the masked-dense jnp path). GQA is handled
+by the wrapper (kv heads expanded view, zero-copy broadcast on TPU).
+
+Block sizes default to (512, 512): at head_dim 128 / bf16 that is
+q 128 KB + k/v tiles 128 KB each + f32 acc 256 KB — well inside VMEM, and
+all matmul dims are multiples of the 128x128 MXU tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_blocks, block_q, block_k,
+                  causal, sm_scale):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (block_q, d)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[0, pl.ds(j * block_k, block_k)].astype(jnp.float32)
+        v = v_ref[0, pl.ds(j * block_k, block_k)].astype(jnp.float32)
+        s = q @ k.T                                      # (block_q, block_k)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    m0 = jnp.full((block_q, 1), NEG, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    if causal:
+        # kv blocks at or before this q block's diagonal
+        upper = jnp.minimum(kv_blocks, (qi * block_q) // block_k + block_q // block_k + 1)
+    else:
+        upper = kv_blocks
+    acc, m_i, l_i = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l_i, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True):
+    """q, k, v: (b, s, h, d) with kv already expanded to h heads."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    sm_scale = 1.0 / (d ** 0.5)
+
+    # (b*h, s, d) layout: one (batch, head) pair per grid row
+    qh = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kh = jnp.moveaxis(k, 2, 1).reshape(b * h, skv, d)
+    vh = jnp.moveaxis(v, 2, 1).reshape(b * h, skv, d)
+
+    grid = (b * h, sq // block_q)
+    kernel = functools.partial(
+        _flash_kernel, kv_blocks=skv // block_k, block_q=block_q,
+        block_k=block_k, causal=causal, sm_scale=sm_scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, skv, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, skv, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out.reshape(b, h, sq, d), 1, 2)

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel body
+executes in Python per grid cell, which is what the correctness sweeps
+exercise. On TPU, ``interpret=False`` compiles to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bucket_pack as _bp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_adamw as _fw
+
+_ON_TPU = jax.default_backend() == "tpu"
+INTERPRET = not _ON_TPU
+
+LANES = 128
+
+
+def _pad_to(x, mult):
+    pad = (-x.size) % mult
+    if pad:
+        x = jnp.concatenate([jnp.ravel(x), jnp.zeros((pad,), x.dtype)])
+    return jnp.ravel(x), pad
+
+
+@partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "block_rows"))
+def fused_adamw(p, g, m, v, step, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+                block_rows=256):
+    """Fused AdamW on arbitrary-shaped leaves (flattened + padded)."""
+    shape = p.shape
+    n = p.size
+    mult = LANES * block_rows
+    pf, _ = _pad_to(p, mult)
+    gf, _ = _pad_to(g, mult)
+    mf, _ = _pad_to(m, mult)
+    vf, _ = _pad_to(v, mult)
+    po, mo, vo = _fw.fused_adamw_flat(pf, gf, mf, vf, step, lr, b1, b2, eps,
+                                      wd, block_rows=block_rows,
+                                      interpret=INTERPRET)
+    return (po[:n].reshape(shape), mo[:n].reshape(shape),
+            vo[:n].reshape(shape))
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal=True, block_q=512, block_k=512):
+    """(b, s, h, d) attention; kv heads must already be expanded to h."""
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=INTERPRET)
+
+
+@jax.jit
+def packed_copy(flat):
+    n = flat.size
+    mult = LANES
+    f, pad = _pad_to(flat, mult)
+    rows = f.size // LANES
+    # choose the largest block that divides rows
+    block = rows
+    for cand in (4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % cand == 0:
+            block = cand
+            break
+    out = _bp.packed_copy(f, block_rows=block, interpret=INTERPRET)
+    return out[:n]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_ref(p, g, m, v, step, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    """Reference fused AdamW update. All f32; returns (p', m', v')."""
+    g = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p32
+    return (p32 - lr * upd).astype(p.dtype), m, v
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Naive softmax attention. q,k,v: (b, s, h, d) with kv already expanded."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def bucket_pack_ref(leaves: list, total: int):
+    """Concatenate raveled leaves into one flat f32 buffer of size total."""
+    flat = jnp.concatenate([jnp.ravel(x) for x in leaves])
+    assert flat.size == total
+    return flat
+
+
+def bucket_unpack_ref(flat, shapes: list):
+    out, off = [], 0
+    for shp in shapes:
+        n = 1
+        for s in shp:
+            n *= s
+        out.append(flat[off:off + n].reshape(shp))
+        off += n
+    return out

@@ -1,0 +1,160 @@
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell against the production mesh, with 512 placeholder host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod    # 2x16x16
+    PYTHONPATH=src python -m repro.launch.dryrun --out results.json
+
+Results (memory_analysis, cost_analysis, HLO-walk roofline terms, collective
+breakdown) are appended incrementally to the JSON so interrupted runs resume.
+"""
+# The VERY FIRST lines — before ANY other import — so jax sees 512 devices.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.configs.base import SHAPES, shape_applicable
+from repro.dist.sharding import ShardingRules
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, model_flops_for
+from repro.models import registry
+from repro.optim import OptimizerConfig
+from repro.train.step import (abstract_train_state, build_decode_step,
+                              build_prefill_step, build_train_step)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatches=None, save_hlo: str | None = None):
+    """Lower+compile one cell; returns the result record."""
+    cfg = C.get(arch)
+    if microbatches is not None:
+        from dataclasses import replace
+        cfg = replace(cfg, microbatches=microbatches)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = ShardingRules(mesh, fsdp=cfg.fsdp)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step = build_train_step(cfg, mesh, rules, OptimizerConfig(),
+                                    lambda s: 1e-3)
+            state = abstract_train_state(cfg, rules)
+            inputs = registry.input_specs(cfg, shape, rules)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, inputs)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(cfg, shape, rules)
+            params = registry.abstract_params(cfg, rules)
+            inputs = registry.input_specs(cfg, shape, rules)
+            lowered = jax.jit(step).lower(params, inputs)
+        else:  # decode
+            step = build_decode_step(cfg, rules)
+            params = registry.abstract_params(cfg, rules)
+            cache = registry.abstract_cache(cfg, rules, shape.global_batch,
+                                            shape.seq_len)
+            inputs = registry.input_specs(cfg, shape, rules)
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params, cache, inputs["token"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+
+    summary = analyze_compiled(compiled)
+    rf = Roofline(
+        arch=arch, shape=shape_name,
+        mesh="multi" if multi_pod else "single", chips=chips,
+        flops_per_device=summary["flops_per_device"],
+        bytes_per_device=summary["bytes_per_device"],
+        collective_bytes_per_device=summary["collective_bytes_per_device"],
+        model_flops=model_flops_for(cfg, shape),
+        per_collective=summary["per_collective"])
+
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "status": "ok", "chips": chips,
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+           "memory": summary["memory"],
+           "bytes_per_device_hbm": summary["memory"]["argument_bytes"]
+           + summary["memory"]["temp_bytes"],
+           **{k: v for k, v in rf.row().items()
+              if k not in ("arch", "shape", "mesh", "chips")}}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else C.all_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for multi in meshes:
+        mesh_name = "multi" if multi else "single"
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_name)
+                if key in done:
+                    continue
+                print(f"=== {arch} x {shape} x {mesh_name} ===", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi,
+                                     microbatches=args.microbatches,
+                                     save_hlo=args.save_hlo)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+                if rec["status"] == "ok":
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"bound={rec['bound']} "
+                          f"compute={rec['compute_s']*1e3:.1f}ms "
+                          f"memory={rec['memory_s']*1e3:.1f}ms "
+                          f"coll={rec['collective_s']*1e3:.1f}ms "
+                          f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+                else:
+                    print(f"  {rec['status']}: {rec.get('reason', rec.get('error'))}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+Target hardware: TPU v5e —
+  peak_bf16   = 197 TFLOP/s per chip
+  hbm_bw      = 819 GB/s per chip
+  ici_bw      = ~50 GB/s per link (we charge all collective bytes against
+                one link's bandwidth per chip, a conservative serialization
+                assumption; see EXPERIMENTS.md §Roofline)
+
+  compute term    = HLO_FLOPs / (chips x peak)
+  memory term     = HLO_bytes / (chips x hbm_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs/bytes come from repro.launch.hlo_analysis (while-loop trip counts
+accounted). All values from the analyzer are per-device (SPMD module), so
+the per-chip terms divide by peak only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9              # B/s per chip
+ICI_BW = 50e9               # B/s per link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float            # analytic 6*N*D (train) / 2*N*D (serve)
+    per_collective: dict
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — remat/redundancy waste detector."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.step_time_s * self.chips * PEAK_BF16
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "step_time_s": self.step_time_s,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.flops_per_device * self.chips,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_at_roofline": self.mfu,
+            "per_collective": self.per_collective,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (N = active params for MoE),
+    2*N*D forward-only for prefill/decode (D = tokens processed)."""
+    n = cfg.active_param_count() if cfg.num_experts else cfg.param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch * 1          # decode: one token per sequence
+    return 2.0 * n * d

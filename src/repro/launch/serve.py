@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default="smoke", choices=["smoke", "single", "multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    import repro.configs as C
+    from repro.dist.sharding import ShardingRules, make_smoke_mesh
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import registry
+    from repro.train.step import build_decode_step
+
+    cfg = C.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_smoke_mesh() if args.mesh == "smoke"
+            else make_production_mesh(multi_pod=args.mesh == "multi"))
+    rules = ShardingRules(mesh)
+
+    rng = np.random.default_rng(args.seed)
+    params = registry.init_params(jax.random.PRNGKey(args.seed), cfg, rules)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                      (args.batch, args.prompt_len)), jnp.int32)
+    max_seq = args.prompt_len + args.gen
+
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.bfloat16) * 0.02
+    if cfg.family == "vlm":
+        extra["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.num_patches, cfg.d_model)),
+            jnp.bfloat16) * 0.02
+
+    t0 = time.time()
+    cache, logits = registry.prefill(params, cfg, rules, tokens,
+                                     max_seq=max_seq, **extra)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(build_decode_step(cfg, rules), donate_argnums=(1,))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    generated = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        tok, cache = decode(params, cache, tok)
+        generated.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    out = np.concatenate(generated, axis=1)
+    print(json.dumps({
+        "arch": cfg.name, "batch": args.batch,
+        "prompt_len": args.prompt_len, "generated": args.gen,
+        "prefill_s": round(t_prefill, 3),
+        "decode_s": round(t_decode, 3),
+        "decode_tok_per_s": round(args.batch * (args.gen - 1)
+                                  / max(t_decode, 1e-9), 1),
+        "sample_tokens": out[0][:8].tolist(),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Parameter-spec infrastructure shared by all model families.
+
+A model family module exposes ``param_specs(cfg) -> dict[path, ParamSpec]``.
+The same spec tree materializes three ways:
+
+* ``init_params``      — PRNG-initialized concrete arrays (smoke/real runs),
+* ``abstract_params``  — ShapeDtypeStructs with shardings (dry-run lowering),
+* ``param_count``      — analytic parameter counts (MODEL_FLOPS).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import ShardingRules
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple                  # one logical axis name (or None) per dim
+    init: str = "fan_in"            # fan_in | zeros | ones | normal | ssm_a | ssm_dt
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def _init_leaf(rng, spec: ParamSpec) -> jnp.ndarray:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "ssm_a":        # A_log init: log(uniform[1,16])
+        u = jax.random.uniform(rng, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if spec.init == "ssm_dt":       # dt_bias: inverse-softplus of uniform dt
+        dt0 = jnp.exp(jax.random.uniform(rng, spec.shape, jnp.float32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(dt)
+    if spec.init == "normal":
+        return (jax.random.normal(rng, spec.shape, jnp.float32) * 0.02).astype(dt)
+    # fan_in: scaled by 1/sqrt(fan_in) — fan_in = second-to-last dim (or last for 1D)
+    fan = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.normal(rng, spec.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(rng, specs: dict, rules: ShardingRules) -> dict:
+    leaves = sorted(specs.keys())
+    keys = jax.random.split(rng, len(leaves))
+    out = {}
+    for k, name in zip(keys, leaves):
+        spec = specs[name]
+        arr = _init_leaf(k, spec)
+        arr = jax.device_put(arr, rules.sharding(*spec.logical, dims=spec.shape))
+        out[name] = arr
+    return out
+
+
+def abstract_params(specs: dict, rules: ShardingRules) -> dict:
+    return {
+        name: jax.ShapeDtypeStruct(
+            spec.shape, jnp.dtype(spec.dtype),
+            sharding=rules.sharding(*spec.logical, dims=spec.shape))
+        for name, spec in specs.items()
+    }
+
+
+def spec_param_count(specs: dict, active_only: bool = False,
+                     top_k: int = 0, num_experts: int = 0) -> int:
+    total = 0
+    for spec in specs.values():
+        n = spec.size
+        if active_only and num_experts and "expert" in spec.logical:
+            n = n * top_k // num_experts
+        total += n
+    return total

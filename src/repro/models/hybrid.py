@@ -1,0 +1,220 @@
+"""zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every ``attn_every`` SSM layers (weight sharing across invocations).
+
+Each shared-block invocation sees different activations, so at decode time it
+gets its own KV cache slot: caches are stacked (n_shared, b, S, kv, hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingRules
+from repro.models import layers as L
+from repro.models import ssm as M
+from repro.models import transformer as T
+from repro.models.common import ParamSpec
+
+
+def n_shared_calls(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def segments(cfg: ModelConfig) -> list[tuple[int, int, bool]]:
+    """List of (start, end, attn_after) covering all ssm layers."""
+    out, start = [], 0
+    while start < cfg.num_layers:
+        end = min(start + cfg.attn_every, cfg.num_layers)
+        out.append((start, end, end - start == cfg.attn_every))
+        start = end
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs = {
+        "embed": ParamSpec((v, d), ("vocab", "wemb"), init="normal"),
+        "final_norm": ParamSpec((d,), ("unsharded",), init="ones"),
+        "unembed": ParamSpec((d, v), ("wemb", "vocab")),
+    }
+    specs.update(M.layer_param_specs(cfg, cfg.num_layers))
+    # one shared transformer block (unstacked)
+    specs.update({("shared_" + k): v for k, v in
+                  T.layer_param_specs(cfg, 1, stacked=False).items()})
+    return specs
+
+
+def _shared_lp(params):
+    return {k[len("shared_"):]: v for k, v in params.items()
+            if k.startswith("shared_")}
+
+
+def _ssm_stacked(params):
+    return {k: params[k] for k in M.SSM_LAYER_KEYS if k in params}
+
+
+def _backbone(x, params, cfg, rules, positions, *, collect=None):
+    """Shared forward skeleton. ``collect``: optional fn(x, call_idx, shared_lp)
+    applied at each shared-attention point; must return new x (+ side outputs
+    appended to the returned list)."""
+    stacked = _ssm_stacked(params)
+    shared = _shared_lp(params)
+    side = []
+
+    def ssm_body(x, lp):
+        y = M.mamba_block(x, lp, cfg, rules)
+        return rules.shard(y, "batch", "seq", "emb"), None
+
+    body = jax.checkpoint(ssm_body) if cfg.remat else ssm_body
+    call = 0
+    for (s0, s1, attn_after) in segments(cfg):
+        seg = {k: v[s0:s1] for k, v in stacked.items()}
+        x, _ = jax.lax.scan(body, x, seg)
+        if attn_after:
+            x, extra = collect(x, call, shared)
+            if extra is not None:
+                side.append(extra)
+            call += 1
+    return x, side
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens):
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def attn_call(x, call, shared):
+        def blk(x):
+            y, _ = T.dense_block(x, shared, cfg, rules, positions)
+            return y
+        y = jax.checkpoint(blk)(x) if cfg.remat else blk(x)
+        return y, None
+
+    x, _ = _backbone(x, params, cfg, rules, positions, collect=attn_call)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.lm_logits(x, params["unembed"], rules)
+
+
+def loss_fn(params, cfg, rules, batch):
+    logits = forward(params, cfg, rules, batch["tokens"])
+    return L.xent_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    specs = M.cache_specs(cfg, batch, max_seq)
+    kv, hd, nsh = cfg.num_kv_heads, cfg.head_dim, n_shared_calls(cfg)
+    shape = (nsh, batch, max_seq, kv, hd)
+    logical = (None, "batch", "kv_seq", None, None)
+    specs["attn_k"] = ParamSpec(shape, logical, init="zeros",
+                                dtype=cfg.compute_dtype)
+    specs["attn_v"] = ParamSpec(shape, logical, init="zeros",
+                                dtype=cfg.compute_dtype)
+    return specs
+
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, tokens, max_seq):
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    h, p, w = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    stacked = _ssm_stacked(params)
+    shared = _shared_lp(params)
+    ssm_states, conv_tails, attn_kvs = [], [], []
+
+    def ssm_prefill_scan(x, seg):
+        def one_layer(x, lp):
+            xn = L.rmsnorm(x, lp["ssm_norm"], cfg.norm_eps)
+            z = xn @ lp["wz"].astype(cd)
+            xi0 = xn @ lp["wx"].astype(cd)
+            Bp0 = xn @ lp["wB"].astype(cd)
+            Cp0 = xn @ lp["wC"].astype(cd)
+            dt = xn @ lp["wdt"].astype(cd)
+            xi = jax.nn.silu(M.causal_conv(xi0, lp["conv_x"].astype(cd))
+                             .astype(jnp.float32)).astype(cd)
+            Bp = jax.nn.silu(M.causal_conv(Bp0, lp["conv_B"].astype(cd))
+                             .astype(jnp.float32)).astype(cd)
+            Cp = jax.nn.silu(M.causal_conv(Cp0, lp["conv_C"].astype(cd))
+                             .astype(jnp.float32)).astype(cd)
+            dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+            A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+            y, S = M.ssd_chunked(xi.reshape(b, s, h, p), dt, A, Bp, Cp,
+                                 cfg.ssm_chunk)
+            y = y + xi.reshape(b, s, h, p) * lp["D"].astype(cd)[:, None]
+            y = y.reshape(b, s, -1)
+            y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cd),
+                          lp["gate_norm"], cfg.norm_eps)
+            tails = (xi0[:, -(w - 1):], Bp0[:, -(w - 1):], Cp0[:, -(w - 1):])
+            return x + y @ lp["w_out"].astype(cd), (S, tails)
+        return jax.lax.scan(one_layer, x, seg)
+
+    for (s0, s1, attn_after) in segments(cfg):
+        seg = {k: v[s0:s1] for k, v in stacked.items()}
+        x, (S, tails) = ssm_prefill_scan(x, seg)
+        ssm_states.append(S)
+        conv_tails.append(tails)
+        if attn_after:
+            x, kv = T.dense_block(x, shared, cfg, rules, positions,
+                                  prefill=True)
+            attn_kvs.append(kv)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x[:, -1:], params["unembed"], rules)
+
+    S = jnp.concatenate(ssm_states, axis=0)
+    # conv tails from scan come stacked (layers_in_seg, b, w-1, c)
+    tx = jnp.concatenate([t[0] for t in conv_tails], axis=0)
+    tB = jnp.concatenate([t[1] for t in conv_tails], axis=0)
+    tC = jnp.concatenate([t[2] for t in conv_tails], axis=0)
+    pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+    ks = rules.shard(jnp.pad(jnp.stack([k for k, _ in attn_kvs]), pad),
+                     None, "batch", "kv_seq", None, None)
+    vs = rules.shard(jnp.pad(jnp.stack([v for _, v in attn_kvs]), pad),
+                     None, "batch", "kv_seq", None, None)
+    cache = {"state": S, "conv_x": tx, "conv_B": tB, "conv_C": tC,
+             "attn_k": ks, "attn_v": vs, "length": jnp.int32(s)}
+    return cache, logits
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, cache, token):
+    x = L.embed_tokens(params["embed"], token, rules, cfg.compute_dtype)
+    stacked = _ssm_stacked(params)
+    shared = _shared_lp(params)
+    pos = cache["length"]
+
+    def ssm_decode_scan(x, seg):
+        def one_layer(x, layer_in):
+            lp, S, cx, cB, cC = layer_in
+            y, S, cc = M.mamba_decode_block(
+                x, lp, S, {"x": cx, "B": cB, "C": cC}, cfg, rules)
+            return y.astype(x.dtype), (S, cc["x"], cc["B"], cc["C"])
+        return jax.lax.scan(one_layer, x, seg)
+
+    new_S, new_cx, new_cB, new_cC, new_k, new_v = [], [], [], [], [], []
+    call = 0
+    for (s0, s1, attn_after) in segments(cfg):
+        seg = ({k: v[s0:s1] for k, v in stacked.items()},
+               cache["state"][s0:s1], cache["conv_x"][s0:s1],
+               cache["conv_B"][s0:s1], cache["conv_C"][s0:s1])
+        x, (S, cx, cB, cC) = ssm_decode_scan(x, seg)
+        new_S.append(S); new_cx.append(cx); new_cB.append(cB); new_cC.append(cC)
+        if attn_after:
+            y, kc, vc = T.decode_block(x, shared, cache["attn_k"][call],
+                                       cache["attn_v"][call], pos, cfg, rules)
+            x = y.astype(x.dtype)
+            new_k.append(kc); new_v.append(vc)
+            call += 1
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["unembed"], rules)
+    new_cache = {
+        "state": jnp.concatenate(new_S, axis=0),
+        "conv_x": jnp.concatenate(new_cx, axis=0),
+        "conv_B": jnp.concatenate(new_cB, axis=0),
+        "conv_C": jnp.concatenate(new_cC, axis=0),
+        "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
+        "length": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,327 @@
+"""Shared neural layers: norms, RoPE, attention (3 paths), MLP, logits/loss.
+
+Attention paths
+---------------
+* ``attention_qchunk``   — q-block-chunked online-softmax attention (grad-
+  friendly; used for training and encoder/bidirectional attention). Memory is
+  O(q_chunk * s_kv) per block instead of O(s^2).
+* ``attention_tri``      — causal lower-triangular *block-pair* scan: computes
+  exactly the s(s+1)/2 needed score blocks (no masked-out waste). Used for
+  long prefill (inference; not differentiated).
+* ``attention_decode``   — single-token query against a (possibly
+  'model'-sharded) KV cache; softmax over the sharded kv_seq dim lowers to a
+  tiny psum (flash-decode communication pattern) under GSPMD.
+
+All matmuls run in the config compute dtype (bf16) with f32 softmax/norm
+statistics, matching TPU MXU-native mixed precision.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]                             # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def expand_kv(k, heads: int):
+    """(b, s, kv, d) -> (b, s, heads, d) by GQA group broadcast."""
+    kv = k.shape[-2]
+    if kv == heads:
+        return k
+    return jnp.repeat(k, heads // kv, axis=-2)
+
+
+def attention_qchunk(q, k, v, *, causal: bool, q_chunk: int,
+                     q_offset=0, bias=None):
+    """Online-softmax attention chunked over query blocks.
+
+    q: (b, sq, h, d); k, v: (b, skv, h, d). Returns (b, sq, h, d).
+    ``q_offset`` is the absolute position of q[0] (for causal masking of a
+    suffix, e.g. chunked prefill).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    if sq % q_chunk:
+        q_chunk = sq                    # fallback: single chunk
+    nq = sq // q_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qb = q.reshape(b, nq, q_chunk, h, d)
+    kpos = jnp.arange(skv)
+
+    def one_block(i, qi):
+        # qi: (b, q_chunk, h, d)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k,
+                       preferred_element_type=jnp.float32)
+        s = s * scale
+        if bias is not None:
+            s = s + bias
+        if causal:
+            qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, _NEG)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bkhd->bqhd", (p / l).astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    if nq == 1:
+        return one_block(0, qb[:, 0])
+    out = jax.lax.map(lambda args: one_block(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, d)
+
+
+def attention_tri(q, k, v, *, q_chunk: int, kv_chunk: int):
+    """Exact-flops causal attention for long prefill (inference only).
+
+    Outer scan over query blocks; inner ``fori_loop`` with a *dynamic* upper
+    bound (i+1 kv blocks), so only the ~s^2/2 live score blocks are computed
+    and the carried state is one block's (acc, m, l) — O(q_chunk) memory.
+    Not reverse-differentiable (dynamic trip count); training uses
+    attention_qchunk.
+    """
+    b, s, h, d = q.shape
+    if s % q_chunk or s % kv_chunk or q_chunk != kv_chunk:
+        return attention_qchunk(q, k, v, causal=True, q_chunk=q_chunk)
+    nb = s // q_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qb = jnp.moveaxis(q.reshape(b, nb, q_chunk, h, d), 1, 0)
+
+    def one_q_block(args):
+        i, qi = args                          # qi: (b, Q, h, d)
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+
+        def body(j, carry):
+            acc, m, l = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+            sij = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                             preferred_element_type=jnp.float32) * scale
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            sij = jnp.where((qpos[:, None] >= kpos[None, :])[None, None],
+                            sij, _NEG)
+            m_new = jnp.maximum(m, jnp.max(sij, axis=-1, keepdims=True))
+            p = jnp.exp(sij - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vj.dtype), vj,
+                           preferred_element_type=jnp.float32)
+            acc_new = acc * jnp.moveaxis(corr, 1, 2) + o
+            return acc_new, m_new, l_new
+
+        acc0 = jnp.zeros((b, q_chunk, h, d), jnp.float32)
+        m0 = jnp.full((b, h, q_chunk, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk, 1), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(0, i + 1, body, (acc0, m0, l0))
+        return (acc / jnp.moveaxis(l, 1, 2)[..., 0][..., None]).astype(q.dtype)
+
+    out = jax.lax.map(one_q_block, (jnp.arange(nb), qb))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_jnp(q, k, v, causal: bool = True, q_offset: int = 0):
+    """Flash-semantics attention (pure jnp): the backward pass RECOMPUTES
+    probabilities from (q, k, lse) instead of saving them — only (o, lse)
+    are residuals. This is the dry-run/HLO twin of kernels/flash_attention
+    (EXPERIMENTS.md §Perf iter 4); q, k, v: (b, s, h, d), kv pre-expanded.
+    """
+    o, _ = _flash_fwd_core(q, k, v, causal, q_offset)
+    return o
+
+
+def _flash_fwd_core(q, k, v, causal, q_offset):
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, _NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    lse = m + jnp.log(l)
+    o = jnp.einsum("bhqk,bkhd->bqhd", (p / l[..., None]).astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, causal, q_offset):
+    o, lse = _flash_fwd_core(q, k, v, causal, q_offset)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, q_offset, res, do):
+    q, k, v, o, lse = res
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, _NEG)
+    p = jnp.exp(s - lse[..., None])                       # recomputed
+    pc = p.astype(v.dtype)
+    dv = jnp.einsum("bhqk,bqhd->bkhd", pc, do)
+    dp = jnp.einsum("bqhd,bkhd->bhqk", do, v,
+                    preferred_element_type=jnp.float32)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                               # (b, sq, h)
+    ds = p * (dp - jnp.moveaxis(delta, 1, 2)[..., None]) * scale
+    dsc = ds.astype(q.dtype)
+    # bf16-output einsums: cross-device partial sums (ARs) then move bf16,
+    # not f32 (§Perf iter 5) — matches Megatron-style bf16 grad reduction.
+    dq = jnp.einsum("bhqk,bkhd->bqhd", dsc, k)
+    dk = jnp.einsum("bhqk,bqhd->bkhd", dsc, q)
+    return dq, dk, dv
+
+
+flash_attention_jnp.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_decode(q, k_cache, v_cache, length: Optional[int] = None):
+    """q: (b, 1, h, d); caches: (b, S, h, d) (kv already expanded).
+
+    With the cache seq dim sharded over 'model', the max/sum reductions and
+    the value contraction lower to per-shard partials + psum (flash-decode).
+    """
+    b, _, h, d = q.shape
+    S = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if length is not None:
+        mask = jnp.arange(S)[None, None, None, :] < length
+        s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + residual) — shared across families
+# ---------------------------------------------------------------------------
+
+def attn_project_qkv(x, lp, cfg, positions):
+    b, s, _ = x.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ lp["wq"].astype(cd)).reshape(b, s, h, hd)
+    k = (x @ lp["wk"].astype(cd)).reshape(b, s, kv, hd)
+    v = (x @ lp["wv"].astype(cd)).reshape(b, s, kv, hd)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def mlp(x, lp, cfg, rules: ShardingRules):
+    return (mlp_swiglu if cfg.mlp == "swiglu" else mlp_gelu2)(x, lp, cfg, rules)
+
+
+def mlp_gelu2(x, lp, cfg, rules: ShardingRules):
+    """GPT-BigCode-style 2-matrix MLP (granite-34b)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = x @ lp["w_up"].astype(cd)
+    h = rules.shard(h, "batch", "seq", "act_ff")
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cd)
+    return h @ lp["w_down"].astype(cd)
+
+
+def mlp_swiglu(x, lp, cfg, rules: ShardingRules):
+    cd = jnp.dtype(cfg.compute_dtype)
+    g = x @ lp["w_gate"].astype(cd)
+    u = x @ lp["w_up"].astype(cd)
+    g = rules.shard(g, "batch", "seq", "act_ff")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    return h @ lp["w_down"].astype(cd)
+
+
+def mlp_gelu(x, lp, cfg, rules: ShardingRules):
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = x @ lp["w_up"].astype(cd) + lp["b_up"].astype(cd)
+    h = rules.shard(h, "batch", "seq", "act_ff")
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cd)
+    return h @ lp["w_down"].astype(cd) + lp["b_down"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / loss (vocab-sharded)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(embed, tokens, rules: ShardingRules, compute_dtype):
+    x = embed[tokens].astype(jnp.dtype(compute_dtype))
+    return rules.shard(x, "batch", "seq", "emb")
+
+
+def lm_logits(x, unembed, rules: ShardingRules):
+    logits = x @ unembed.astype(x.dtype)
+    return rules.shard(logits, "batch", "seq", "act_vocab")
+
+
+def xent_loss(logits, labels, mask=None):
+    """Mean next-token cross entropy; logits may be vocab-sharded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts family (dbrx: 16e top-4; arctic: 128e top-2 + dense
+residual).
+
+Dispatch is sort-free scatter-based ("grouped GEMM" layout): tokens are
+scattered into per-expert capacity buffers (E, C, D) via position-in-expert
+indices, expert FFNs run as batched einsums with the expert dim sharded over
+'model' (EP), and results gather back with top-k combine weights. Overflow
+beyond capacity C drops via out-of-bounds scatter semantics (mode='drop'),
+matching GShard-style capacity routing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingRules
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.common import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v, e, fm = cfg.d_model, cfg.vocab_size, cfg.num_experts, cfg.moe_d_ff
+    nl = cfg.num_layers
+    specs = {
+        "embed": ParamSpec((v, d), ("vocab", "wemb"), init="normal"),
+        "final_norm": ParamSpec((d,), ("unsharded",), init="ones"),
+        "unembed": ParamSpec((d, v), ("wemb", "vocab")),
+    }
+    dense = T.layer_param_specs(cfg, nl)
+    if not cfg.dense_residual:
+        for k in ("w_gate", "w_up", "w_down"):    # experts replace dense FFN
+            dense.pop(k)
+    specs.update(dense)
+    specs.update({
+        "router": ParamSpec((nl, d, e), ("layers", "wemb", "unsharded")),
+        "we_gate": ParamSpec((nl, e, d, fm), ("layers", "expert", "wemb", None)),
+        "we_up": ParamSpec((nl, e, d, fm), ("layers", "expert", "wemb", None)),
+        "we_down": ParamSpec((nl, e, fm, d), ("layers", "expert", None, "wemb")),
+    })
+    return specs
+
+
+MOE_EXTRA_KEYS = ("router", "we_gate", "we_up", "we_down")
+
+
+# ---------------------------------------------------------------------------
+# Expert dispatch
+# ---------------------------------------------------------------------------
+
+def moe_ffn(x, lp, cfg: ModelConfig, rules: ShardingRules):
+    """x: (b, s, d) -> (y, aux_loss). Capacity-routed top-k experts.
+
+    Dispatch layout (§Perf iters 6-7): tokens are grouped by DATA shard
+    (G = dp extent) with per-group capacity, so the position-in-expert
+    cumsum and the scatter/gather are device-LOCAL; the only communication
+    is the all-to-all that re-aligns the (G, E, C, d) capacity buffer from
+    token (G@data) to expert (E@model) sharding inside the expert einsums —
+    the canonical MoE dispatch. Without the grouping, either every data
+    replica computes all experts (16x flops) or GSPMD emits a cross-axis
+    scatter (catastrophic collectives); both measured in EXPERIMENTS.md.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    Tn = b * s
+    G = rules.axis_size("batch")
+    if b % G:
+        G = 1
+    TG = Tn // G
+    C = max(int(cfg.capacity_factor * TG * K / E), 4)
+
+    xt = rules.shard(x.reshape(G, TG, d), "batch", None, "emb")
+    logits = (xt @ lp["router"].astype(cd)).astype(jnp.float32)   # (G,TG,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                           # (G,TG,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss (global means).
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,)).at[idx.reshape(-1)].add(1.0) / (Tn * K)
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = idx.reshape(G, TG * K)                               # (G, TK)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)               # (G, TK, E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=1) - oh,
+                              flat_e[..., None], axis=2)[..., 0]  # (G, TK)
+
+    x_rep = jnp.repeat(xt, K, axis=1)                             # (G, TK, d)
+    # vmap over G -> the scatter's G dim is a BATCHING dim, so GSPMD keeps
+    # it sharded over data and the writes stay device-local (§Perf iter 8).
+    buf = jax.vmap(
+        lambda xr, e, p: jnp.zeros((E, C, d), cd)
+        .at[e, p].set(xr, mode="drop"))(x_rep, flat_e, pos)
+    buf = rules.shard(buf, "batch", None, None, "emb")
+
+    h = jnp.einsum("gecd,edf->gecf", buf, lp["we_gate"].astype(cd))
+    u = jnp.einsum("gecd,edf->gecf", buf, lp["we_up"].astype(cd))
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(cd) * u
+    h = rules.shard(h, "batch", "act_expert", None, None)
+    y_e = jnp.einsum("gecf,efd->gecd", h, lp["we_down"].astype(cd))
+    y_e = rules.shard(y_e, "batch", None, None, "emb")            # a2a back
+
+    y_tok = jax.vmap(
+        lambda ye, e, p: ye.at[e, p].get(mode="fill", fill_value=0)
+    )(y_e, flat_e, pos)                                           # (G, TK, d)
+    y = (y_tok.reshape(G, TG, K, d) * gate[..., None].astype(cd)).sum(axis=2)
+    return y.reshape(b, s, d), aux
+
+
+def moe_block(x, lp, cfg: ModelConfig, rules: ShardingRules, positions,
+              *, causal=True, prefill=False):
+    x, kvs = T.attn_block(x, lp, cfg, rules, positions,
+                          causal=causal, prefill=prefill)
+    xn = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    y, aux = moe_ffn(xn, lp, cfg, rules)
+    if cfg.dense_residual:
+        y = y + L.mlp_swiglu(xn, lp, cfg, rules)
+    x = rules.shard(x + y, "batch", "seq", "emb")
+    return x, (kvs, aux)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _stacked(params, cfg):
+    keys = [k for k in T.LAYER_KEYS if k in params] + list(MOE_EXTRA_KEYS)
+    return {k: params[k] for k in keys}
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens):
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def one_layer(carry, lp):
+        x, aux_sum = carry
+        y, (_, aux) = moe_block(x, lp, cfg, rules, positions)
+        return (y.astype(x.dtype), aux_sum + aux), None
+
+    body = jax.checkpoint(one_layer) if cfg.remat else one_layer
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), _stacked(params, cfg))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.lm_logits(x, params["unembed"], rules), aux / cfg.num_layers
+
+
+def loss_fn(params, cfg, rules, batch, aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, rules, batch["tokens"])
+    return L.xent_loss(logits, batch["labels"], batch.get("mask")) \
+        + aux_weight * aux
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return T.cache_specs(cfg, batch, max_seq)
+
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, tokens, max_seq):
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def one_layer(x, lp):
+        y, (kv, _) = moe_block(x, lp, cfg, rules, positions, prefill=True)
+        return y, kv
+
+    x, (ks, vs) = jax.lax.scan(one_layer, x, _stacked(params, cfg))
+    pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+    ks = rules.shard(jnp.pad(ks, pad), "layers", "batch", "kv_seq", None, None)
+    vs = rules.shard(jnp.pad(vs, pad), "layers", "batch", "kv_seq", None, None)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x[:, -1:], params["unembed"], rules)
+    return {"k": ks, "v": vs, "length": jnp.int32(s)}, logits
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, cache, token):
+    pos = cache["length"]
+    x = L.embed_tokens(params["embed"], token, rules, cfg.compute_dtype)
+    positions = None  # computed inside decode block
+
+    def one_layer(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        pp = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q, k, v = L.attn_project_qkv(xn, lp, cfg, pp)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        o = L.attention_decode(q, L.expand_kv(kc, cfg.num_heads),
+                               L.expand_kv(vc, cfg.num_heads), length=pos + 1)
+        x = x + o.reshape(x.shape[0], 1, -1) @ lp["wo"].astype(o.dtype)
+        xn = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = moe_ffn(xn, lp, cfg, rules)
+        if cfg.dense_residual:
+            y = y + L.mlp_swiglu(xn, lp, cfg, rules)
+        return (x + y).astype(x.dtype), (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(one_layer, x,
+                               (_stacked(params, cfg), cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["unembed"], rules)
+    return logits, {"k": ks, "v": vs, "length": pos + 1}

@@ -1,0 +1,143 @@
+"""Family registry + step builders + ``input_specs`` for every
+(architecture x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import ShardingRules
+from repro.models import common
+
+_FAMILIES = {
+    "dense": "repro.models.transformer",
+    "moe": "repro.models.moe",
+    "ssm": "repro.models.ssm",
+    "hybrid": "repro.models.hybrid",
+    "audio": "repro.models.encdec",
+    "vlm": "repro.models.vlm",
+    "vit": "repro.models.vit",
+}
+
+
+def family_module(cfg: ModelConfig):
+    return importlib.import_module(_FAMILIES[cfg.family])
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return family_module(cfg).param_specs(cfg)
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    return common.spec_param_count(
+        param_specs(cfg), active_only=active_only,
+        top_k=cfg.top_k, num_experts=cfg.num_experts)
+
+
+def init_params(rng, cfg: ModelConfig, rules: ShardingRules) -> dict:
+    return common.init_params(rng, param_specs(cfg), rules)
+
+
+def abstract_params(cfg: ModelConfig, rules: ShardingRules) -> dict:
+    return common.abstract_params(param_specs(cfg), rules)
+
+
+def loss_fn(params, cfg: ModelConfig, rules: ShardingRules, batch):
+    return family_module(cfg).loss_fn(params, cfg, rules, batch)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return family_module(cfg).cache_specs(cfg, batch, max_seq)
+
+
+def abstract_cache(cfg, rules, batch, max_seq) -> dict:
+    cache = common.abstract_params(cache_specs(cfg, batch, max_seq), rules)
+    cache["length"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache
+
+
+def init_cache(cfg, rules, batch, max_seq) -> dict:
+    cache = common.init_params(jax.random.PRNGKey(0),
+                               cache_specs(cfg, batch, max_seq), rules)
+    cache["length"] = jnp.int32(0)
+    return cache
+
+
+def prefill(params, cfg, rules, tokens, max_seq, **extra):
+    return family_module(cfg).prefill(params, cfg, rules, tokens, max_seq,
+                                      **extra)
+
+
+def decode_step(params, cfg, rules, cache, token):
+    return family_module(cfg).decode_step(params, cfg, rules, cache, token)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per shape cell
+# ---------------------------------------------------------------------------
+
+def _tok_spec(rules: ShardingRules, shape):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.int32, sharding=rules.sharding("batch", *([None] * (len(shape) - 1)),
+                                                  dims=shape))
+
+
+def _embed_spec(rules: ShardingRules, shape, dtype):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.dtype(dtype),
+        sharding=rules.sharding("batch", None, None, dims=shape))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rules: ShardingRules) -> dict[str, Any]:
+    """Model inputs for one cell, as ShapeDtypeStructs.
+
+    train  -> the per-step batch {tokens, labels, ...}
+    prefill-> {tokens, ...}
+    decode -> {token} (cache specs come from ``abstract_cache``)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    cd = cfg.compute_dtype
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {
+                "frames": _embed_spec(rules, (b, cfg.encoder_seq, cfg.d_model), cd),
+                "tokens": _tok_spec(rules, (b, s)),
+                "labels": _tok_spec(rules, (b, s)),
+            }
+        if cfg.family == "vlm":
+            s_text = s - cfg.num_patches
+            return {
+                "patch_embeds": _embed_spec(rules, (b, cfg.num_patches, cfg.d_model), cd),
+                "tokens": _tok_spec(rules, (b, s_text)),
+                "labels": _tok_spec(rules, (b, s_text)),
+            }
+        if cfg.family == "vit":
+            return {
+                "patch_embeds": _embed_spec(rules, (b, cfg.num_patches, cfg.d_model), cd),
+                "labels": _tok_spec(rules, (b, 1)),
+            }
+        return {"tokens": _tok_spec(rules, (b, s)),
+                "labels": _tok_spec(rules, (b, s))}
+
+    if shape.kind == "prefill":
+        out = {"tokens": _tok_spec(rules, (b, s))}
+        if cfg.family == "audio":
+            out["frames"] = _embed_spec(rules, (b, cfg.encoder_seq, cfg.d_model), cd)
+        if cfg.family == "vlm":
+            out["tokens"] = _tok_spec(rules, (b, s - cfg.num_patches))
+            out["patch_embeds"] = _embed_spec(
+                rules, (b, cfg.num_patches, cfg.d_model), cd)
+        return out
+
+    # decode: one new token against a seq_len cache
+    return {"token": _tok_spec(rules, (b, 1))}

@@ -1,0 +1,324 @@
+"""Mamba2 / SSD (state-space duality) blocks — attention-free LM family.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060): intra-chunk
+quadratic path + inter-chunk linear recurrence over chunk states, plus a
+constant-memory single-token decode step. The short causal conv is applied
+to x, B and C (depthwise, unrolled taps — TPU/VPU friendly, no conv
+primitive needed).
+
+TP: heads (= d_inner / head_dim) shard over 'model'; B/C are per-group
+(groups=1) and replicated; all SSD einsums carry heads as a batch dim, so
+the block is communication-free except the final out-projection reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingRules
+from repro.models import layers as L
+from repro.models.common import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def layer_param_specs(cfg: ModelConfig, n_layers: int, stacked=True) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    n, g, h = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    w = cfg.ssm_conv
+    lead = (n_layers,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    def S(shape, logical, **kw):
+        return ParamSpec(lead + shape, lax_ + logical, **kw)
+    return {
+        "ssm_norm": S((d,), ("unsharded",), init="ones"),
+        "wz": S((d, din), ("wemb", "ssm_inner")),
+        "wx": S((d, din), ("wemb", "ssm_inner")),
+        "wB": S((d, g * n), ("wemb", "unsharded")),
+        "wC": S((d, g * n), ("wemb", "unsharded")),
+        "wdt": S((d, h), ("wemb", "ssm_inner")),
+        "conv_x": S((w, din), ("unsharded", "ssm_inner"), init="normal"),
+        "conv_B": S((w, g * n), ("unsharded", "unsharded"), init="normal"),
+        "conv_C": S((w, g * n), ("unsharded", "unsharded"), init="normal"),
+        "A_log": S((h,), ("ssm_inner",), init="ssm_a"),
+        "D": S((h,), ("ssm_inner",), init="ones"),
+        "dt_bias": S((h,), ("ssm_inner",), init="ssm_dt"),
+        "gate_norm": S((din,), ("ssm_inner",), init="ones"),
+        "w_out": S((din, d), ("ssm_inner", "wemb")),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs = {
+        "embed": ParamSpec((v, d), ("vocab", "wemb"), init="normal"),
+        "final_norm": ParamSpec((d,), ("unsharded",), init="ones"),
+        "unembed": ParamSpec((d, v), ("wemb", "vocab")),
+    }
+    specs.update(layer_param_specs(cfg, cfg.num_layers))
+    return specs
+
+
+SSM_LAYER_KEYS = tuple(layer_param_specs(
+    ModelConfig("x", "ssm", 1, 64, 0, 0, 0, 16, ssm_state=8), 1).keys())
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (unrolled taps)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, kernel):
+    """x: (b, s, c); kernel: (w, c). Left-padded causal depthwise conv."""
+    w = kernel.shape[0]
+    out = x * kernel[-1]
+    for t in range(1, w):
+        shifted = jnp.pad(x, ((0, 0), (t, 0), (0, 0)))[:, :-t]
+        out = out + shifted * kernel[-1 - t]
+    return out
+
+
+def conv_step(x_t, conv_cache, kernel):
+    """x_t: (b, c); conv_cache: (b, w-1, c) holding the last w-1 inputs."""
+    hist = jnp.concatenate([conv_cache, x_t[:, None]], axis=1)   # (b, w, c)
+    y = jnp.einsum("bwc,wc->bc", hist, kernel)
+    return y, hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative;
+    B, C: (b, s, n) (groups=1, shared across heads). Returns (y, final_state)
+    with y: (b, s, h, p), final_state: (b, h, n, p).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    if s % q:
+        q = s
+    nc = s // q
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    Br = B.reshape(b, nc, q, n)
+    Cr = C.reshape(b, nc, q, n)
+
+    dA = dtr * A                                      # (b,nc,q,h), negative
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumulative
+
+    # --- intra-chunk (quadratic within chunk) ---
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cr, Br,
+                    preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (b,nc,q,k,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = CB[..., None] * decay * mask[None, None, :, :, None]
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", att, dtr, xr,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states ---
+    last = cum[:, :, -1:, :]                          # (b,nc,1,h)
+    decay_out = jnp.exp(last - cum)                   # (b,nc,q,h)
+    S_c = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Br, decay_out * dtr, xr,
+                     preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(last[:, :, 0])              # (b,nc,h)
+
+    # --- inter-chunk recurrence ---
+    def step(S, inp):
+        S_chunk, cd = inp                             # (b,h,n,p), (b,h)
+        S_prev = S
+        S = S * cd[..., None, None] + S_chunk
+        return S, S_prev
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    S_final, S_prevs = jax.lax.scan(
+        step, S0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)             # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cr, jnp.exp(cum), S_prevs,
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode_step(x_t, dt_t, A, B_t, C_t, S):
+    """One recurrence step. x_t: (b,h,p); dt_t: (b,h); B_t,C_t: (b,n);
+    S: (b,h,n,p) -> (y_t, S')."""
+    dA = jnp.exp(dt_t * A)                            # (b,h)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", B_t, dt_t, x_t,
+                     preferred_element_type=jnp.float32)
+    S = S * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C_t, S, preferred_element_type=jnp.float32)
+    return y.astype(x_t.dtype), S
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_block(x, lp, cfg: ModelConfig, rules: ShardingRules):
+    """Full-sequence block. x: (b, s, d) -> (b, s, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xn = L.rmsnorm(x, lp["ssm_norm"], cfg.norm_eps)
+    z = xn @ lp["wz"].astype(cd)
+    xi = xn @ lp["wx"].astype(cd)
+    Bp = xn @ lp["wB"].astype(cd)
+    Cp = xn @ lp["wC"].astype(cd)
+    dt = xn @ lp["wdt"].astype(cd)
+    xi = rules.shard(xi, "batch", "seq", "act_heads")
+    xi = causal_conv(xi, lp["conv_x"].astype(cd))
+    Bp = causal_conv(Bp, lp["conv_B"].astype(cd))
+    Cp = causal_conv(Cp, lp["conv_C"].astype(cd))
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(cd)
+    Bp = jax.nn.silu(Bp.astype(jnp.float32)).astype(cd)
+    Cp = jax.nn.silu(Cp.astype(jnp.float32)).astype(cd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xi.reshape(b, s, h, p), dt, A, Bp, Cp, cfg.ssm_chunk)
+    y = y + xi.reshape(b, s, h, p) * lp["D"].astype(cd)[:, None]
+    y = y.reshape(b, s, -1)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cd),
+                  lp["gate_norm"], cfg.norm_eps)
+    return x + y @ lp["w_out"].astype(cd)
+
+
+def mamba_decode_block(x, lp, state, conv_cache, cfg, rules):
+    """x: (b, 1, d); state: (b,h,n,p); conv_cache: {"x","B","C"} each (b,w-1,c)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    b = x.shape[0]
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    xn = L.rmsnorm(x, lp["ssm_norm"], cfg.norm_eps)[:, 0]      # (b, d)
+    z = xn @ lp["wz"].astype(cd)
+    xi = xn @ lp["wx"].astype(cd)
+    Bp = xn @ lp["wB"].astype(cd)
+    Cp = xn @ lp["wC"].astype(cd)
+    dt = xn @ lp["wdt"].astype(cd)
+    xi, cx = conv_step(xi, conv_cache["x"], lp["conv_x"].astype(cd))
+    Bp, cB = conv_step(Bp, conv_cache["B"], lp["conv_B"].astype(cd))
+    Cp, cC = conv_step(Cp, conv_cache["C"], lp["conv_C"].astype(cd))
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(cd)
+    Bp = jax.nn.silu(Bp.astype(jnp.float32)).astype(cd)
+    Cp = jax.nn.silu(Cp.astype(jnp.float32)).astype(cd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, state = ssd_decode_step(xi.reshape(b, h, p), dt, A, Bp, Cp, state)
+    y = y + xi.reshape(b, h, p) * lp["D"].astype(cd)[:, None]
+    y = y.reshape(b, -1)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cd),
+                  lp["gate_norm"], cfg.norm_eps)
+    out = x + (y @ lp["w_out"].astype(cd))[:, None]
+    return out, state, {"x": cx, "B": cB, "C": cC}
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _stacked(params):
+    return {k: params[k] for k in SSM_LAYER_KEYS if k in params}
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens):
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+
+    def one_layer(x, lp):
+        y = mamba_block(x, lp, cfg, rules)
+        return rules.shard(y, "batch", "seq", "emb"), None
+
+    body = jax.checkpoint(one_layer) if cfg.remat else one_layer
+    x, _ = jax.lax.scan(body, x, _stacked(params))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.lm_logits(x, params["unembed"], rules)
+
+
+def loss_fn(params, cfg, rules, batch):
+    logits = forward(params, cfg, rules, batch["tokens"])
+    return L.xent_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din, gn, w = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state, cfg.ssm_conv
+    lgl = ("layers", "batch", None, "ssm_inner")
+    return {
+        "state": ParamSpec((cfg.num_layers, batch, h, n, p),
+                           ("layers", "batch", "ssm_inner", None, None),
+                           init="zeros"),
+        "conv_x": ParamSpec((cfg.num_layers, batch, w - 1, din), lgl,
+                            init="zeros", dtype=cfg.compute_dtype),
+        "conv_B": ParamSpec((cfg.num_layers, batch, w - 1, gn),
+                            ("layers", "batch", None, None),
+                            init="zeros", dtype=cfg.compute_dtype),
+        "conv_C": ParamSpec((cfg.num_layers, batch, w - 1, gn),
+                            ("layers", "batch", None, None),
+                            init="zeros", dtype=cfg.compute_dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, tokens, max_seq):
+    """Run the prompt through SSD, collecting final states per layer."""
+    del max_seq  # state is O(1) in sequence length
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    h, p, w = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+
+    def one_layer(x, lp):
+        # inline mamba_block but keep the final state + conv tail
+        xn = L.rmsnorm(x, lp["ssm_norm"], cfg.norm_eps)
+        z = xn @ lp["wz"].astype(cd)
+        xi0 = xn @ lp["wx"].astype(cd)
+        Bp0 = xn @ lp["wB"].astype(cd)
+        Cp0 = xn @ lp["wC"].astype(cd)
+        dt = xn @ lp["wdt"].astype(cd)
+        xi = jax.nn.silu(causal_conv(xi0, lp["conv_x"].astype(cd))
+                         .astype(jnp.float32)).astype(cd)
+        Bp = jax.nn.silu(causal_conv(Bp0, lp["conv_B"].astype(cd))
+                         .astype(jnp.float32)).astype(cd)
+        Cp = jax.nn.silu(causal_conv(Cp0, lp["conv_C"].astype(cd))
+                         .astype(jnp.float32)).astype(cd)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+        y, S = ssd_chunked(xi.reshape(b, s, h, p), dt, A, Bp, Cp, cfg.ssm_chunk)
+        y = y + xi.reshape(b, s, h, p) * lp["D"].astype(cd)[:, None]
+        y = y.reshape(b, s, -1)
+        y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cd),
+                      lp["gate_norm"], cfg.norm_eps)
+        out = x + y @ lp["w_out"].astype(cd)
+        tails = (xi0[:, -(w - 1):], Bp0[:, -(w - 1):], Cp0[:, -(w - 1):])
+        return out, (S, tails)
+
+    x, (S, (tx, tB, tC)) = jax.lax.scan(one_layer, x, _stacked(params))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x[:, -1:], params["unembed"], rules)
+    cache = {"state": S, "conv_x": tx, "conv_B": tB, "conv_C": tC,
+             "length": jnp.int32(s)}
+    return cache, logits
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, cache, token):
+    x = L.embed_tokens(params["embed"], token, rules, cfg.compute_dtype)
+
+    def one_layer(x, layer_in):
+        lp, S, cx, cB, cC = layer_in
+        y, S, cc = mamba_decode_block(x, lp, S, {"x": cx, "B": cB, "C": cC},
+                                      cfg, rules)
+        return y.astype(x.dtype), (S, cc["x"], cc["B"], cc["C"])
+
+    x, (S, cx, cB, cC) = jax.lax.scan(
+        one_layer, x,
+        (_stacked(params), cache["state"], cache["conv_x"],
+         cache["conv_B"], cache["conv_C"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["unembed"], rules)
+    new_cache = {"state": S, "conv_x": cx, "conv_B": cB, "conv_C": cC,
+                 "length": cache["length"] + 1}
+    return logits, new_cache

@@ -1,0 +1,233 @@
+"""Dense decoder-only LM (llama/glm/granite/tinyllama family).
+
+Scan-over-layers with per-layer remat; ZeRO/FSDP-compatible param specs;
+three lowered entry points (train loss, prefill, single-token decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingRules
+from repro.models import layers as L
+from repro.models.common import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def layer_param_specs(cfg: ModelConfig, n_layers: int, prefix: str = "",
+                      stacked: bool = True) -> dict:
+    """Per-layer attention+MLP weights, optionally stacked for scan."""
+    h, kv, hd, d, f = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                       cfg.d_model, cfg.d_ff)
+    lead = (n_layers,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    def S(shape, logical, **kw):
+        return ParamSpec(lead + shape, lax_ + logical, **kw)
+    specs = {
+        prefix + "attn_norm": S((d,), ("unsharded",), init="ones"),
+        prefix + "wq": S((d, h * hd), ("wemb", "heads")),
+        prefix + "wk": S((d, kv * hd), ("wemb", "kv_heads")),
+        prefix + "wv": S((d, kv * hd), ("wemb", "kv_heads")),
+        prefix + "wo": S((h * hd, d), ("heads", "wemb")),
+        prefix + "mlp_norm": S((d,), ("unsharded",), init="ones"),
+        prefix + "w_up": S((d, f), ("wemb", "ff")),
+        prefix + "w_down": S((f, d), ("ff", "wemb")),
+    }
+    if cfg.mlp == "swiglu":
+        specs[prefix + "w_gate"] = S((d, f), ("wemb", "ff"))
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs = {
+        "embed": ParamSpec((v, d), ("vocab", "wemb"), init="normal"),
+        "final_norm": ParamSpec((d,), ("unsharded",), init="ones"),
+    }
+    specs.update(layer_param_specs(cfg, cfg.num_layers))
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, v), ("wemb", "vocab"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def attn_block(x, lp, cfg: ModelConfig, rules: ShardingRules, positions,
+               *, causal=True, prefill=False):
+    """Full-sequence attention block. Returns (x_out, (k, v)) when prefill.
+
+    Head sharding (TP) when num_heads divides the model axis; otherwise
+    SEQUENCE-sharded attention (context parallelism): q rows are sharded,
+    k/v replicated — scores stay device-local instead of psum'd (the
+    non-divisible-GQA fix measured in EXPERIMENTS.md §Perf iter 3).
+    """
+    xn = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = L.attn_project_qkv(xn, lp, cfg, positions)
+    tp = rules.axis_size("act_heads")
+    seq_shard = cfg.num_heads % tp != 0 and x.shape[1] % tp == 0
+    ke = L.expand_kv(k, cfg.num_heads)
+    ve = L.expand_kv(v, cfg.num_heads)
+    if seq_shard:
+        q = rules.shard(q, "batch", "kv_seq", None, None)
+        ke = rules.shard(ke, "batch", None, None, None)
+        ve = rules.shard(ve, "batch", None, None, None)
+    else:
+        q = rules.shard(q, "batch", "seq", "act_heads", None)
+    if causal and x.shape[1] > 8192 and not seq_shard:
+        o = L.attention_tri(q, ke, ve, q_chunk=cfg.attn_q_chunk,
+                            kv_chunk=cfg.attn_q_chunk)
+    elif prefill:
+        q_chunk = x.shape[1] if seq_shard else cfg.attn_q_chunk
+        o = L.attention_qchunk(q, ke, ve, causal=causal, q_chunk=q_chunk)
+    else:
+        # train: flash-semantics attention (bwd recomputes probabilities)
+        o = L.flash_attention_jnp(q, ke, ve, causal, 0)
+    if seq_shard:
+        o = rules.shard(o, "batch", "kv_seq", None, None)
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    x = x + o @ lp["wo"].astype(o.dtype)
+    kvs = (k, v) if prefill else None
+    return x, kvs
+
+
+def dense_block(x, lp, cfg, rules, positions, *, causal=True, prefill=False):
+    x, kvs = attn_block(x, lp, cfg, rules, positions,
+                        causal=causal, prefill=prefill)
+    xn = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + L.mlp(xn, lp, cfg, rules)
+    x = rules.shard(x, "batch", "seq", "emb")
+    return x, kvs
+
+
+def decode_block(x, lp, kc, vc, pos, cfg: ModelConfig, rules: ShardingRules):
+    """Single-token block against one layer's KV cache.
+
+    x: (b, 1, d); kc/vc: (b, S, kv, hd). Returns (x_out, kc', vc').
+    """
+    xn = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = L.attn_project_qkv(xn, lp, cfg, positions)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+    ke = L.expand_kv(kc, cfg.num_heads)
+    ve = L.expand_kv(vc, cfg.num_heads)
+    o = L.attention_decode(q, ke, ve, length=pos + 1)
+    o = o.reshape(x.shape[0], 1, -1)
+    x = x + o @ lp["wo"].astype(o.dtype)
+    xn = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + L.mlp(xn, lp, cfg, rules)
+    return x, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def split_stacked(params: dict, stacked_keys) -> tuple[dict, dict]:
+    stacked = {k: params[k] for k in stacked_keys}
+    rest = {k: v for k, v in params.items() if k not in stacked_keys}
+    return stacked, rest
+
+
+LAYER_KEYS = ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm",
+              "w_gate", "w_up", "w_down")
+
+
+def decoder_stack(x, params, cfg: ModelConfig, rules: ShardingRules,
+                  positions, *, causal=True, block_fn=dense_block):
+    """scan-over-layers with optional remat; returns final hidden states."""
+    stacked, _ = split_stacked(params, [k for k in LAYER_KEYS if k in params])
+
+    def one_layer(x, lp):
+        cd = jnp.dtype(cfg.compute_dtype)
+        y, _ = block_fn(x, lp, cfg, rules, positions, causal=causal)
+        return y.astype(cd), None
+
+    body = jax.checkpoint(one_layer) if cfg.remat else one_layer
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, stacked)
+    else:
+        for i in range(cfg.num_layers):
+            lp = {k: v[i] for k, v in stacked.items()}
+            x, _ = body(x, lp)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens):
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = decoder_stack(x, params, cfg, rules, positions)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return L.lm_logits(x, unembed, rules)
+
+
+def loss_fn(params, cfg, rules, batch):
+    logits = forward(params, cfg, rules, batch["tokens"])
+    return L.xent_loss(logits, batch["labels"], batch.get("mask"))
+
+
+# -- KV cache ----------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (cfg.num_layers, batch, max_seq, kv, hd)
+    logical = ("layers", "batch", "kv_seq", None, None)
+    return {
+        "k": ParamSpec(shape, logical, init="zeros", dtype=cfg.compute_dtype),
+        "v": ParamSpec(shape, logical, init="zeros", dtype=cfg.compute_dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, tokens, max_seq):
+    """Run the full prompt; returns (cache dict incl. per-layer k/v, logits)."""
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    stacked, _ = split_stacked(params, [k for k in LAYER_KEYS if k in params])
+
+    def one_layer(x, lp):
+        y, (k, v) = dense_block(x, lp, cfg, rules, positions, prefill=True)
+        return y, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(one_layer, x, stacked)
+    pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+    ks = rules.shard(jnp.pad(ks, pad), "layers", "batch", "kv_seq", None, None)
+    vs = rules.shard(jnp.pad(vs, pad), "layers", "batch", "kv_seq", None, None)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = L.lm_logits(x[:, -1:], unembed, rules)
+    return {"k": ks, "v": vs, "length": jnp.int32(s)}, logits
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, cache, token):
+    """token: (b, 1) int32; cache: {"k","v","length"}. One new token."""
+    pos = cache["length"]
+    x = L.embed_tokens(params["embed"], token, rules, cfg.compute_dtype)
+    stacked, _ = split_stacked(params, [k for k in LAYER_KEYS if k in params])
+
+    def one_layer(x, layer_in):
+        lp, kc, vc = layer_in
+        y, kc, vc = decode_block(x, lp, kc, vc, pos, cfg, rules)
+        return y.astype(x.dtype), (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(one_layer, x, (stacked, cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = L.lm_logits(x, unembed, rules)
+    new_cache = {"k": ks, "v": vs, "length": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,40 @@
+"""ViT classifier backbone (paper Table 1: ViT-H-14) for the benchmark
+harness. Patch embeddings are precomputed (stub frontend); bidirectional
+encoder + mean-pool + linear classifier head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingRules
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.common import ParamSpec
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs = {
+        "final_norm": ParamSpec((d,), ("unsharded",), init="ones"),
+        "head": ParamSpec((d, cfg.vocab_size), ("wemb", "vocab")),
+    }
+    specs.update(T.layer_param_specs(cfg, cfg.num_layers))
+    return specs
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, patch_embeds):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = rules.shard(patch_embeds.astype(cd), "batch", "seq", "emb")
+    x = T.decoder_stack(x, params, cfg, rules, positions=None, causal=False)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    pooled = x.mean(axis=1)
+    return pooled @ params["head"].astype(cd)
+
+
+def loss_fn(params, cfg, rules, batch):
+    logits = forward(params, cfg, rules, batch["patch_embeds"]).astype(jnp.float32)
+    labels = batch["labels"][:, 0] if batch["labels"].ndim > 1 else batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,78 @@
+"""llava-next-style VLM: stubbed anyres vision frontend + LM backbone.
+
+``input_specs`` provides precomputed, projected patch embeddings
+(batch, num_patches, d_model); they are prepended to the token embeddings
+and the standard causal LM runs over the combined sequence. The loss is
+computed on text positions only. ``seq_len`` of a shape cell counts the
+combined sequence (patches + text).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingRules
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return T.param_specs(cfg)
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens,
+            patch_embeds):
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s_text = tokens.shape
+    p = patch_embeds.shape[1]
+    tok = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    x = jnp.concatenate([patch_embeds.astype(cd), tok], axis=1)
+    x = rules.shard(x, "batch", "seq", "emb")
+    s = p + s_text
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = T.decoder_stack(x, params, cfg, rules, positions)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return L.lm_logits(x[:, p:], unembed, rules)   # text positions only
+
+
+def loss_fn(params, cfg, rules, batch):
+    logits = forward(params, cfg, rules, batch["tokens"],
+                     batch["patch_embeds"])
+    return L.xent_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return T.cache_specs(cfg, batch, max_seq)
+
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, tokens, max_seq,
+            patch_embeds=None):
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, s_text = tokens.shape
+    p = patch_embeds.shape[1]
+    tok = L.embed_tokens(params["embed"], tokens, rules, cfg.compute_dtype)
+    x = jnp.concatenate([patch_embeds.astype(cd), tok], axis=1)
+    x = rules.shard(x, "batch", "seq", "emb")
+    s = p + s_text
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    stacked, _ = T.split_stacked(params, [k for k in T.LAYER_KEYS if k in params])
+
+    def one_layer(x, lp):
+        y, kv = T.dense_block(x, lp, cfg, rules, positions, prefill=True)
+        return y, kv
+
+    x, (ks, vs) = jax.lax.scan(one_layer, x, stacked)
+    pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+    ks = rules.shard(jnp.pad(ks, pad), "layers", "batch", "kv_seq", None, None)
+    vs = rules.shard(jnp.pad(vs, pad), "layers", "batch", "kv_seq", None, None)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = L.lm_logits(x[:, -1:], unembed, rules)
+    return {"k": ks, "v": vs, "length": jnp.int32(s)}, logits
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, cache, token):
+    return T.decode_step(params, cfg, rules, cache, token)

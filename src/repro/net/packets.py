@@ -1,0 +1,47 @@
+"""Packet/frame model for the gradient-replication data plane.
+
+Frames carry: a 1-bit DSCP tag (§4.1), the per-channel shadow-stream
+sequence number in a custom TCP option (§4.1.2), and the shadow node id the
+switch uses to pick the mirror destination (§4.2.4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+MTU = 4096                      # payload bytes per frame (jumbo-ish)
+
+
+@dataclass
+class Frame:
+    src: int                    # training rank (or switch port)
+    dst: int                    # destination rank / shadow node
+    payload_off: int            # byte offset within the chunk
+    payload_len: int
+    chunk: int                  # gradient chunk id
+    channel: int
+    tcp_seq: int                # original stream sequence
+    tagged: bool = False        # DSCP bit
+    shadow_seq: int = -1        # custom TCP option (per-channel counter)
+    shadow_node: int = -1       # encoded shadow node id
+    mirrored: bool = False      # set on switch-replicated copies
+
+
+def frames_for_chunk(src: int, dst: int, *, chunk: int, channel: int,
+                     chunk_bytes: int, start_seq: int, tagged: bool,
+                     shadow_seq0: int, shadow_node: int) -> list[Frame]:
+    """Segment one chunk transmission into MTU frames."""
+    frames = []
+    off = 0
+    seq = start_seq
+    sseq = shadow_seq0
+    while off < chunk_bytes:
+        ln = min(MTU, chunk_bytes - off)
+        frames.append(Frame(src=src, dst=dst, payload_off=off, payload_len=ln,
+                            chunk=chunk, channel=channel, tcp_seq=seq,
+                            tagged=tagged,
+                            shadow_seq=sseq if tagged else -1,
+                            shadow_node=shadow_node if tagged else -1))
+        off += ln
+        seq += ln
+        sseq += ln
+    return frames

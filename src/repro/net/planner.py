@@ -1,0 +1,64 @@
+"""Network resource planning (paper §4.4) + the TPU host-DMA budget from
+DESIGN.md §2.
+
+Paper accounting: 2 multicast streams per DP group -> 2 extra ToR ports,
+NICs and transceivers per DP group; for LLaMA3-405B (128 DP groups on 16K
+GPUs) that is 256 ports < 0.8% of cluster network resources.
+
+TPU adaptation: the replication point is the host PCIe boundary. Each v5e
+host (4 chips) DMAs its reduce-scattered gradient shard; the budget check
+verifies grad-shard bytes/host/iteration fit PCIe and the shadow-plane
+ingest bandwidth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PlanInput:
+    n_accelerators: int
+    dp_groups: int
+    ranks_per_group: int
+    ports_per_tor: int = 32
+    accel_per_host: int = 4          # v5e host
+    pcie_gbps: float = 128.0         # PCIe gen4 x16 ~ 16 GB/s = 128 Gbps
+    link_gbps: float = 100.0
+
+
+@dataclass(frozen=True)
+class Plan:
+    multicast_streams: int
+    extra_ports: int
+    extra_port_fraction: float
+    shadow_min_nics: int
+    hosts: int
+    grad_bytes_per_host: float
+    pcie_util: float
+    feasible: bool
+    notes: str
+
+
+def plan(inp: PlanInput, grad_bytes_total: float, iter_time_s: float) -> Plan:
+    streams = 2 * inp.dp_groups
+    total_ports = (inp.n_accelerators // max(inp.ports_per_tor // 2, 1)
+                   ) * inp.ports_per_tor
+    frac = streams / max(total_ports, 1)
+    hosts = inp.n_accelerators // inp.accel_per_host
+    per_host = grad_bytes_total / max(hosts, 1)
+    pcie_util = (per_host * 8 / 1e9) / (inp.pcie_gbps * iter_time_s) \
+        if iter_time_s else 0.0
+    feasible = pcie_util < 0.5 and frac < 0.05
+    notes = []
+    if pcie_util >= 0.5:
+        notes.append(f"host DMA uses {pcie_util:.0%} of PCIe — shard the "
+                     "capture across more hosts or lengthen the interval")
+    if frac >= 0.05:
+        notes.append("extra ToR ports exceed 5% of fabric — repurpose "
+                     "uplinks (spine-free) per §4.4")
+    return Plan(multicast_streams=streams, extra_ports=streams,
+                extra_port_fraction=frac,
+                shadow_min_nics=2,           # round-0 double rate (§4.1.1)
+                hosts=hosts, grad_bytes_per_host=per_host,
+                pcie_util=pcie_util, feasible=feasible,
+                notes="; ".join(notes) or "ok")

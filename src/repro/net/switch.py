@@ -1,0 +1,61 @@
+"""Switch data plane (paper §4.3.2): stateless match-action processing.
+
+Ingress: untagged packets get normal L2 forwarding; tagged packets are
+assigned a multicast group and replicated by the PRE. Egress (for mirrored
+copies): rewrite the TCP sequence number to the shadow-stream counter from
+the custom option, and rewrite src/dst for the shadow node's TCP stream.
+ACKs from shadow nodes are dropped (the switch emulates the TCP server).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.multicast import SwitchControlPlane
+from repro.net.packets import Frame
+
+
+@dataclass
+class SwitchCounters:
+    rx_frames: int = 0
+    tx_frames: int = 0
+    mirrored_frames: int = 0
+    dropped_acks: int = 0
+
+    @property
+    def tx_over_rx(self) -> float:
+        return self.tx_frames / self.rx_frames if self.rx_frames else 0.0
+
+
+class SwitchDataPlane:
+    def __init__(self, control: SwitchControlPlane,
+                 rank_to_dp=None):
+        self.control = control
+        self.counters = SwitchCounters()
+        self.rank_to_dp = rank_to_dp or (
+            lambda r: r // control.ranks_per_group)
+
+    def process(self, frame: Frame) -> list[Frame]:
+        """One ingress frame -> egress frames (forward + mirrors)."""
+        self.counters.rx_frames += 1
+        out = [frame]                            # normal L2 forward
+        if frame.tagged:
+            dp = self.rank_to_dp(frame.src)
+            group = self.control.lookup(dp, frame.src)
+            if group is not None:
+                mirror = Frame(
+                    src=frame.src, dst=frame.shadow_node,
+                    payload_off=frame.payload_off,
+                    payload_len=frame.payload_len,
+                    chunk=frame.chunk, channel=frame.channel,
+                    # egress rewrite: shadow-stream sequence (§4.3.2)
+                    tcp_seq=frame.shadow_seq,
+                    tagged=True, shadow_seq=frame.shadow_seq,
+                    shadow_node=frame.shadow_node, mirrored=True)
+                out.append(mirror)
+                self.counters.mirrored_frames += 1
+        self.counters.tx_frames += len(out)
+        return out
+
+    def process_ack(self):
+        self.counters.dropped_acks += 1
+        return []

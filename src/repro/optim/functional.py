@@ -1,0 +1,112 @@
+"""Functional optimizers — the paper's §4.2.4 requirement.
+
+Each parameter's update is a deterministic, per-element pure function of
+(param, grad, moments, step). This is exactly what lets Checkmate partition
+the optimizer step across shadow nodes "without affecting algorithmic
+correctness or introducing synchronization overhead": any contiguous slice
+of any leaf can be updated independently, so training nodes (TPU) and shadow
+nodes (CPU) running the same function produce bit-identical states.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adam | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9          # sgd
+    grad_clip: float = 0.0         # 0 = off (global-norm clip)
+
+
+# -- per-leaf updates (pure; used identically by train + shadow) -------------
+
+def adamw_leaf(p, g, m, v, step, cfg: OptimizerConfig, lr):
+    g = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    m = cfg.b1 * m + (1.0 - cfg.b1) * g
+    v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+    bc1 = 1.0 - cfg.b1 ** step
+    bc2 = 1.0 - cfg.b2 ** step
+    update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p32
+    return (p32 - lr * update).astype(p.dtype), m, v
+
+
+def adam_leaf(p, g, m, v, step, cfg: OptimizerConfig, lr):
+    g = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    m = cfg.b1 * m + (1.0 - cfg.b1) * g
+    v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+    bc1 = 1.0 - cfg.b1 ** step
+    bc2 = 1.0 - cfg.b2 ** step
+    update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+    return (p32 - lr * update).astype(p.dtype), m, v
+
+
+def sgd_leaf(p, g, m, v, step, cfg: OptimizerConfig, lr):
+    del step
+    g = g.astype(jnp.float32)
+    m = cfg.momentum * m + g
+    return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m, v
+
+
+UPDATE_FNS = {"adamw": adamw_leaf, "adam": adam_leaf, "sgd": sgd_leaf}
+
+
+# -- train state --------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class TrainState:
+    params: dict
+    mu: dict
+    nu: dict
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.mu, self.nu, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(params) -> TrainState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params,
+                      mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(state: TrainState, grads, cfg: OptimizerConfig,
+                  lr) -> TrainState:
+    """One optimizer step over the whole tree (train + shadow both call this)."""
+    if cfg.grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    fn = UPDATE_FNS[cfg.name]
+    out = jax.tree.map(
+        lambda p, g, m, v: fn(p, g, m, v, step.astype(jnp.float32), cfg, lr),
+        state.params, grads, state.mu, state.nu)
+    params = jax.tree.map(lambda _, o: o[0], state.params, out)
+    mu = jax.tree.map(lambda _, o: o[1], state.params, out)
+    nu = jax.tree.map(lambda _, o: o[2], state.params, out)
+    return TrainState(params=params, mu=mu, nu=nu, step=step)

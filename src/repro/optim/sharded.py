@@ -1,0 +1,64 @@
+"""ZeRO-1 optimizer-state sharding over the data axes.
+
+The gradient all-reduce decomposes into reduce-scatter -> sharded update ->
+param all-gather. The reduce-scatter *output* is Checkmate's capture point:
+each device owns a disjoint slice of the final reduced gradients — the
+exactly-once property the paper builds heartbeat tagging for (§4.1) falls
+out of the output sharding (DESIGN.md §2).
+
+For each leaf we shard the largest dim divisible by the DP extent (leaves
+with no such dim stay replicated — they are tiny).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import ShardingRules, dp_axes, dp_size
+
+
+def zero1_spec(shape, param_spec: P, mesh) -> P:
+    """Extend a param PartitionSpec with DP sharding on the best free dim."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return param_spec
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+    parts = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = {a for p in parts if p is not None
+            for a in ((p,) if isinstance(p, str) else p)}
+    if used & set(dp):
+        return P(*parts)        # FSDP already shards over the dp axes
+    best, best_size = -1, 0
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is not None:
+            continue
+        if dim % n == 0 and dim > best_size:
+            best, best_size = i, dim
+    if best >= 0:
+        parts[best] = dp if len(dp) > 1 else dp[0]
+    return P(*parts)
+
+
+def zero1_shardings(abstract_tree, mesh):
+    """NamedSharding tree for optimizer state / reduce-scattered grads."""
+    def one(leaf):
+        spec = leaf.sharding.spec if hasattr(leaf.sharding, "spec") else P()
+        return NamedSharding(mesh, zero1_spec(leaf.shape, spec, mesh))
+    return jax.tree.map(one, abstract_tree)
+
+
+def constrain_zero1(tree, mesh):
+    """with_sharding_constraint to the ZeRO-1 layout (the RS point)."""
+    def one(x):
+        spec = zero1_spec(x.shape, _current_spec(x, mesh), mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.tree.map(one, tree)
+
+
+def _current_spec(x, mesh) -> P:
+    sh = getattr(x, "sharding", None)
+    if isinstance(sh, NamedSharding):
+        return sh.spec
+    return P()

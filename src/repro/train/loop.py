@@ -1,0 +1,137 @@
+"""Training loop with Checkmate integration, failure injection, recovery,
+and straggler observability.
+
+The loop is the paper's Listing 1 with the Checkmate hook: the train step
+already returns the reduce-scattered gradients (the multicast payload), and
+the checkpointer's ``on_step`` consumes them. Baseline checkpointers ignore
+grads and do copy-persist on the *state* instead, which is what stalls them.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.checkpoint import BaseCheckpointer, NoCheckpointer
+from repro.core.recovery import FailurePlan, checkpoint_from_state, recover
+from repro.data.synthetic import SyntheticStream, device_batch
+from repro.dist.sharding import ShardingRules
+from repro.optim import OptimizerConfig, TrainState
+from repro.train.step import build_train_step, make_train_state
+
+
+class TrainingFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class LoopStats:
+    steps: int = 0
+    losses: list = field(default_factory=list)
+    iter_times: list = field(default_factory=list)
+    stall_times: list = field(default_factory=list)
+    failures: int = 0
+    recoveries: int = 0
+    recovered_at: list = field(default_factory=list)
+    straggler_flags: list = field(default_factory=list)
+
+    @property
+    def throughput(self) -> float:
+        total = sum(self.iter_times) + sum(self.stall_times)
+        return self.steps / total if total else 0.0
+
+    @property
+    def mean_iter(self) -> float:
+        return float(np.mean(self.iter_times)) if self.iter_times else 0.0
+
+    @property
+    def steady_iter(self) -> float:
+        """Median iteration time excluding the first (compile-heavy) step."""
+        xs = self.iter_times[1:] if len(self.iter_times) > 1 else self.iter_times
+        return float(np.median(xs)) if xs else 0.0
+
+
+def train(cfg: ModelConfig, rules: ShardingRules, *,
+          steps: int,
+          batch: int,
+          seq: int,
+          opt: OptimizerConfig = OptimizerConfig(),
+          lr_fn: Callable = lambda s: 1e-3,
+          checkpointer: Optional[BaseCheckpointer] = None,
+          failure_plan: Optional[FailurePlan] = None,
+          seed: int = 0,
+          straggler_ema: float = 0.9,
+          straggler_factor: float = 2.0,
+          state: Optional[TrainState] = None) -> tuple[TrainState, LoopStats]:
+    """Run ``steps`` iterations; on injected failure, restore from the
+    checkpointer (Checkmate: shadow consolidation) and continue."""
+    mesh = rules.mesh
+    checkpointer = checkpointer or NoCheckpointer()
+    failure_plan = failure_plan or FailurePlan()
+    stream = SyntheticStream(cfg, batch, seq, seed=seed)
+    if state is None:
+        state = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
+
+    step_fn = jax.jit(build_train_step(cfg, mesh, rules, opt, lr_fn),
+                      donate_argnums=(0,))
+    stats = LoopStats()
+    ema_iter = None
+    step = int(state.step)
+
+    while step < steps:
+        batch_np = stream.batch_at(step)
+        dbatch = device_batch(batch_np, rules)
+        t0 = time.perf_counter()
+        try:
+            if failure_plan.should_fail(step + 1):
+                # fail mid-iteration: device state for this step is lost
+                stats.failures += 1
+                raise TrainingFailure(f"injected failure at step {step + 1}")
+            state, metrics, grads = step_fn(state, dbatch)
+            jax.block_until_ready(metrics["loss"])
+        except TrainingFailure:
+            restored = checkpointer.restore()
+            if restored is None:
+                raise
+            from repro.core.recovery import state_from_checkpoint
+            state = state_from_checkpoint(restored, cfg, rules)
+            step = int(restored["step"])
+            stats.recoveries += 1
+            stats.recovered_at.append(step)
+            continue
+        iter_time = time.perf_counter() - t0
+        step += 1
+        stats.steps += 1
+        stats.iter_times.append(iter_time)
+        stats.losses.append(float(metrics["loss"]))
+
+        # straggler observability: EMA-based slow-iteration flag
+        if ema_iter is None:
+            ema_iter = iter_time
+        else:
+            if iter_time > straggler_factor * ema_iter:
+                stats.straggler_flags.append(step)
+            ema_iter = straggler_ema * ema_iter + (1 - straggler_ema) * iter_time
+
+        lr = float(metrics["lr"])
+        scale = 1.0
+        if opt.grad_clip:
+            gn = float(metrics["grad_norm"])
+            scale = min(1.0, opt.grad_clip / (gn + 1e-9))
+        host_grads = None
+        if isinstance(grads, dict):
+            host_grads = {k: np.asarray(v) for k, v in grads.items()}
+        stall = checkpointer.on_step(
+            step,
+            state_fn=lambda: checkpoint_from_state(state),
+            grads=host_grads, lr=lr, grad_scale=scale, iter_time=iter_time)
+        stats.stall_times.append(stall)
+
+    checkpointer.finalize()
+    return state, stats

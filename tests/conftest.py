@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests must see the
+# real single CPU device. Multi-device paths are tested via subprocesses
+# (tests/test_multidevice.py) so they never pollute this process's backend.

@@ -1,0 +1,59 @@
+"""Property tests for DDP-style bucketing (paper §4.2.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buckets import (build_buckets, layout_for_tree, pack_all,
+                                pack_bucket, unpack_all, unpack_bucket)
+
+leaf_shapes = st.lists(
+    st.tuples(st.integers(1, 8), st.integers(1, 64)), min_size=1, max_size=20)
+
+
+@given(leaf_shapes, st.integers(64, 4096))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip(shapes, cap):
+    """pack -> unpack is the identity for any tree and any cap."""
+    rng = np.random.default_rng(0)
+    tree = {f"leaf{i}": rng.standard_normal(s).astype(np.float32)
+            for i, s in enumerate(shapes)}
+    layout = build_buckets([(k, v.shape, "float32") for k, v in tree.items()],
+                           cap_bytes=cap)
+    flats = pack_all(layout, tree)
+    back = unpack_all(layout, flats)
+    assert set(back) == set(tree)
+    for k in tree:
+        np.testing.assert_array_equal(back[k], tree[k])
+
+
+@given(leaf_shapes, st.integers(128, 2048))
+@settings(max_examples=50, deadline=None)
+def test_cap_and_coverage(shapes, cap):
+    """No multi-leaf bucket exceeds the cap; oversize leaves get dedicated
+    buckets; every leaf appears exactly once."""
+    leaves = [(f"l{i}", s, "float32") for i, s in enumerate(shapes)]
+    layout = build_buckets(leaves, cap_bytes=cap)
+    seen = []
+    for b in layout.buckets:
+        if len(b.slots) > 1:
+            assert b.nbytes <= cap
+        seen.extend(s.name for s in b.slots)
+    assert sorted(seen) == sorted(n for n, _, _ in leaves)
+
+
+def test_reverse_order():
+    """Buckets fill from the LAST layer backwards (gradients become ready in
+    backward order)."""
+    leaves = [(f"layer{i}", (4,), "float32") for i in range(6)]
+    layout = build_buckets(leaves, cap_bytes=10**9)
+    names = [s.name for s in layout.buckets[0].slots]
+    assert names == [f"layer{i}" for i in reversed(range(6))]
+
+
+def test_offsets_contiguous():
+    layout = build_buckets([("a", (3, 4), "float32"), ("b", (5,), "float32")],
+                           cap_bytes=10**9)
+    (b,) = layout.buckets
+    assert b.slots[0].offset == 0
+    assert b.slots[1].offset == b.slots[0].size
+    assert b.size == 12 + 5

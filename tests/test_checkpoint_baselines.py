@@ -1,0 +1,73 @@
+"""Copy-persist baselines (§2.2/§6.2): ordering of stalls, restores,
+CheckFreq tuning."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.checkpoint import (AsyncCheckpointer, CheckFreqCheckpointer,
+                                   GeminiLikeCheckpointer, NoCheckpointer,
+                                   ShardedAsyncCheckpointer, SyncCheckpointer)
+
+
+def _state(nbytes=8 << 20):
+    n = nbytes // 4
+    return {"params": {"w": np.random.default_rng(0)
+                       .standard_normal(n).astype(np.float32)},
+            "mu": {"w": np.zeros(n, np.float32)},
+            "nu": {"w": np.zeros(n, np.float32)},
+            "step": 1}
+
+
+def _drive(ck, steps=6, state=None):
+    state = state or _state()
+    for step in range(1, steps + 1):
+        st = dict(state, step=step)
+        ck.on_step(step, state_fn=lambda: st, grads=None, lr=1e-3,
+                   iter_time=0.01)
+    ck.finalize()
+    return ck
+
+
+def test_no_checkpointer_zero_stall():
+    ck = _drive(NoCheckpointer())
+    assert ck.stall_total == 0.0
+    assert ck.n_checkpoints == 0
+    assert ck.restore() is None
+
+
+def test_sync_stalls_most():
+    state = _state()
+    sync = _drive(SyncCheckpointer(freq=1), state=state)
+    async_ = _drive(AsyncCheckpointer(freq=1), state=state)
+    sharded = _drive(ShardedAsyncCheckpointer(freq=1, n_shards=8), state=state)
+    assert sync.n_checkpoints == 6
+    # per-checkpoint stall ordering (paper Fig 2): sync >= async >= sharded
+    assert sync.stall_total >= async_.stall_total * 0.8
+    assert async_.stall_total >= sharded.stall_total * 0.5
+    assert sync.restore()["step"] == 6
+
+
+def test_frequency_trades_stall(state=None):
+    every = _drive(SyncCheckpointer(freq=1))
+    sparse = _drive(SyncCheckpointer(freq=5))
+    assert sparse.n_checkpoints < every.n_checkpoints
+    assert sparse.stall_total < every.stall_total
+
+
+def test_gemini_overlap_model():
+    # long iterations -> transfer hides; short iterations -> residual stall
+    # (slow network + small state so the modelled residual >> copy noise)
+    ck = GeminiLikeCheckpointer(freq=1, network_gbps=0.5)
+    st = _state(8 << 20)
+    s_long = ck.on_step(1, state_fn=lambda: st, iter_time=2.0)
+    s_short = ck.on_step(2, state_fn=lambda: st, iter_time=0.0001)
+    assert s_short >= s_long + 0.05
+
+
+def test_checkfreq_tunes_frequency():
+    ck = CheckFreqCheckpointer(target_overhead=0.05, profile_steps=2)
+    st = _state()
+    for step in range(1, 10):
+        ck.on_step(step, state_fn=lambda: st, iter_time=0.005)
+    assert ck.tuned_freq is not None and ck.tuned_freq >= 1

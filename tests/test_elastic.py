@@ -1,0 +1,128 @@
+"""Elastic scaling: a shadow-consolidated checkpoint restores onto a
+DIFFERENT mesh (changed DP width) and training continues identically —
+the restart path a 1000+-node deployment needs after losing a slice.
+Subprocess: multi-device meshes."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code, devices, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_elastic_restore_across_meshes():
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        import repro.configs as C
+        from repro.core.buckets import layout_for_tree
+        from repro.core.recovery import state_from_checkpoint
+        from repro.core.shadow import ShadowCluster
+        from repro.data.synthetic import SyntheticStream, device_batch
+        from repro.dist.sharding import ShardingRules
+        from repro.optim import OptimizerConfig
+        from repro.train.step import build_train_step, make_train_state
+
+        cfg = C.get("tinyllama-1.1b").reduced()
+        opt = OptimizerConfig(lr=1e-3)
+
+        def mesh_of(dp, tp):
+            return jax.make_mesh((dp, tp), ("data", "model"),
+                devices=jax.devices()[:dp*tp],
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+        # phase 1: train 3 steps on a (4 data, 2 model) mesh w/ shadow
+        mesh_a = mesh_of(4, 2)
+        rules_a = ShardingRules(mesh_a)
+        state = make_train_state(jax.random.PRNGKey(0), cfg, rules_a)
+        shadow = ShadowCluster(layout_for_tree(state.params), opt, n_nodes=2)
+        shadow.bootstrap(state.params, state.mu, state.nu, 0)
+        step_a = jax.jit(build_train_step(cfg, mesh_a, rules_a, opt,
+                                          lambda s: 1e-3))
+        stream = SyntheticStream(cfg, 8, 32, seed=0)
+        with mesh_a:
+            for t in range(3):
+                batch = device_batch(stream.batch_at(t), rules_a)
+                state, m, g = step_a(state, batch)
+                shadow.on_gradients(t + 1, 1e-3,
+                                    {k: np.asarray(v) for k, v in g.items()})
+
+        # phase 2: "pod lost" -> restore onto (2 data, 4 model), keep going
+        ckpt = shadow.consolidate()
+        assert ckpt["step"] == 3
+        mesh_b = mesh_of(2, 4)
+        rules_b = ShardingRules(mesh_b)
+        state_b = state_from_checkpoint(ckpt, cfg, rules_b)
+        # SPMD-vs-CPU-replay agreement: <= 1 ULP f32 (the paper's own
+        # "8th decimal place" criterion, §6.5); bitwise equality holds for
+        # identical compile contexts (test_shadow/test_recovery).
+        for k in state_b.params:
+            np.testing.assert_allclose(np.asarray(state_b.params[k]),
+                                       np.asarray(state.params[k]),
+                                       rtol=1e-6, atol=1e-7)
+        step_b = jax.jit(build_train_step(cfg, mesh_b, rules_b, opt,
+                                          lambda s: 1e-3))
+        with mesh_b:
+            batch = device_batch(stream.batch_at(3), rules_b)
+            state_b, m_b, _ = step_b(state_b, batch)
+
+        # reference: continue on the original mesh with the same batch
+        with mesh_a:
+            batch = device_batch(stream.batch_at(3), rules_a)
+            state_a, m_a, _ = step_a(state, batch)
+        # continuing on a DIFFERENT mesh changes bf16 reduction orders, so
+        # the comparison is loss-level, not elementwise (resharding changes
+        # numerics slightly in any framework).
+        assert abs(float(m_a["loss"]) - float(m_b["loss"])) < 5e-3
+        assert int(state_b.step) == 4
+        print("ELASTIC_OK", float(m_a["loss"]), float(m_b["loss"]))
+    """, devices=8)
+    assert "ELASTIC_OK" in out
+
+
+def test_fsdp_zero1_capture_compiles():
+    """FSDP + ZeRO-1 (the paper's §8 'future work' combo) lowers with the
+    gradient capture on a multi-device mesh."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp
+        from dataclasses import replace
+        import repro.configs as C
+        from repro.dist.sharding import ShardingRules
+        from repro.launch.hlo_analysis import analyze_compiled
+        from repro.optim import OptimizerConfig
+        from repro.train.step import abstract_train_state, build_train_step
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = replace(C.get("granite-34b").reduced(), microbatches=2,
+                      d_model=128, d_ff=256, num_heads=4, num_kv_heads=1,
+                      head_dim=32, fsdp=True)
+        rules = ShardingRules(mesh, fsdp=True)
+        step = build_train_step(cfg, mesh, rules, OptimizerConfig(),
+                                lambda s: 1e-3)
+        state = abstract_train_state(cfg, rules)
+        inputs = {
+            "tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32,
+                sharding=rules.sharding("batch", None, dims=(8, 32))),
+            "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32,
+                sharding=rules.sharding("batch", None, dims=(8, 32))),
+        }
+        with mesh:
+            c = jax.jit(step, donate_argnums=(0,)).lower(state,
+                                                         inputs).compile()
+        s = analyze_compiled(c)
+        assert s["flops_per_device"] > 0
+        assert s["per_collective"].get("all-gather", 0) > 0   # FSDP gathers
+        print("FSDP_OK")
+    """, devices=8)
+    assert "FSDP_OK" in out

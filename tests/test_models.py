@@ -1,0 +1,180 @@
+"""Model substrate: attention paths agree, SSD matches the naive recurrence,
+decode is consistent with teacher-forced forward."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.dist.sharding import ShardingRules, make_smoke_mesh
+from repro.models import layers as L
+from repro.models import registry
+from repro.models import ssm as M
+
+RNG = np.random.default_rng(1)
+
+
+@pytest.fixture(scope="module")
+def rules():
+    return ShardingRules(make_smoke_mesh())
+
+
+# -- attention ----------------------------------------------------------------
+
+def _naive_attention(q, k, v, causal):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(q.shape[-1])
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("q_chunk", [16, 64, 128])
+def test_attention_qchunk(causal, q_chunk, rules):
+    b, s, h, d = 2, 128, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32) * 0.4
+    k = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32) * 0.4
+    v = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    out = L.attention_qchunk(q, k, v, causal=causal, q_chunk=q_chunk)
+    np.testing.assert_allclose(out, _naive_attention(q, k, v, causal),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_attention_tri(chunk, rules):
+    b, s, h, d = 1, 128, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32) * 0.4
+    k = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32) * 0.4
+    v = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    out = L.attention_tri(q, k, v, q_chunk=chunk, kv_chunk=chunk)
+    np.testing.assert_allclose(out, _naive_attention(q, k, v, True),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_decode_matches_full(rules):
+    b, s, h, d = 2, 33, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, 1, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    out = L.attention_decode(q, k, v, length=s)
+    ref = _naive_attention(q, k, v, causal=False)   # full visibility @ len s
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_expand_kv():
+    k = jnp.arange(2 * 4 * 2 * 3, dtype=jnp.float32).reshape(2, 4, 2, 3)
+    e = L.expand_kv(k, 6)
+    assert e.shape == (2, 4, 6, 3)
+    np.testing.assert_array_equal(e[:, :, 0], e[:, :, 1])
+    np.testing.assert_array_equal(e[:, :, 0], k[:, :, 0])
+
+
+# -- SSD ----------------------------------------------------------------------
+
+def _ssd_naive(x, dt, A, B, Cm):
+    """Token-by-token reference recurrence."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    S = np.zeros((b, h, n, p), np.float32)
+    ys = []
+    for t in range(s):
+        dA = np.exp(dt[:, t] * A)                       # (b,h)
+        S = S * dA[..., None, None] + np.einsum(
+            "bn,bh,bhp->bhnp", B[:, t], dt[:, t], x[:, t])
+        ys.append(np.einsum("bn,bhnp->bhp", Cm[:, t], S))
+    return np.stack(ys, axis=1), S
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_recurrence(chunk):
+    b, s, h, p, n = 2, 32, 3, 4, 5
+    x = RNG.standard_normal((b, s, h, p)).astype(np.float32)
+    dt = np.abs(RNG.standard_normal((b, s, h))).astype(np.float32) * 0.5
+    A = -np.abs(RNG.standard_normal(h)).astype(np.float32)
+    B = RNG.standard_normal((b, s, n)).astype(np.float32)
+    Cm = RNG.standard_normal((b, s, n)).astype(np.float32)
+    y, S = M.ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                         jnp.asarray(B), jnp.asarray(Cm), chunk)
+    y_ref, S_ref = _ssd_naive(x, dt, A, B, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), S_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_continues_prefill():
+    """state from ssd_chunked + decode step == running the recurrence one
+    token further."""
+    b, s, h, p, n = 1, 16, 2, 4, 3
+    x = RNG.standard_normal((b, s + 1, h, p)).astype(np.float32)
+    dt = np.abs(RNG.standard_normal((b, s + 1, h))).astype(np.float32) * 0.5
+    A = -np.abs(RNG.standard_normal(h)).astype(np.float32)
+    B = RNG.standard_normal((b, s + 1, n)).astype(np.float32)
+    Cm = RNG.standard_normal((b, s + 1, n)).astype(np.float32)
+    _, S = M.ssd_chunked(jnp.asarray(x[:, :s]), jnp.asarray(dt[:, :s]),
+                         jnp.asarray(A), jnp.asarray(B[:, :s]),
+                         jnp.asarray(Cm[:, :s]), 8)
+    y1, S1 = M.ssd_decode_step(jnp.asarray(x[:, s]), jnp.asarray(dt[:, s]),
+                               jnp.asarray(A), jnp.asarray(B[:, s]),
+                               jnp.asarray(Cm[:, s]), S)
+    y_ref, S_ref = _ssd_naive(x, dt, A, B, Cm)
+    np.testing.assert_allclose(np.asarray(y1), y_ref[:, s], rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S1), S_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_causal_conv_matches_manual():
+    b, s, c, w = 2, 10, 3, 4
+    x = RNG.standard_normal((b, s, c)).astype(np.float32)
+    kern = RNG.standard_normal((w, c)).astype(np.float32)
+    out = np.asarray(M.causal_conv(jnp.asarray(x), jnp.asarray(kern)))
+    for t in range(s):
+        ref = np.zeros((b, c), np.float32)
+        for tap in range(w):
+            src = t - (w - 1 - tap)
+            if src >= 0:
+                ref += x[:, src] * kern[tap]
+        np.testing.assert_allclose(out[:, t], ref, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_step_matches_causal_conv():
+    b, s, c, w = 1, 8, 2, 4
+    x = RNG.standard_normal((b, s, c)).astype(np.float32)
+    kern = RNG.standard_normal((w, c)).astype(np.float32)
+    full = np.asarray(M.causal_conv(jnp.asarray(x), jnp.asarray(kern)))
+    cache = jnp.zeros((b, w - 1, c))
+    for t in range(s):
+        y, cache = M.conv_step(jnp.asarray(x[:, t]), cache, jnp.asarray(kern))
+        np.testing.assert_allclose(np.asarray(y), full[:, t], rtol=1e-5,
+                                   atol=1e-5)
+
+
+# -- decode/teacher-forcing consistency ---------------------------------------
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-2.7b",
+                                  "zamba2-1.2b"])
+def test_decode_matches_forward(arch, rules):
+    """prefill(t) + decode(token t) logits == full forward at position t.
+
+    Run in f32 so the check is algorithmic, not bf16-rounding-order noise.
+    """
+    from dataclasses import replace
+    cfg = replace(C.get(arch).reduced(), compute_dtype="float32")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg, rules)
+    b, s = 2, 16
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s + 1)), jnp.int32)
+
+    mod = registry.family_module(cfg)
+    full_logits = mod.forward(params, cfg, rules, toks)
+
+    cache, logits_p = registry.prefill(params, cfg, rules, toks[:, :s],
+                                       max_seq=s + 4)
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1], np.float32),
+                               np.asarray(full_logits[:, s - 1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+    logits_d, cache = registry.decode_step(params, cfg, rules, cache,
+                                           toks[:, s:s + 1])
+    np.testing.assert_allclose(np.asarray(logits_d[:, -1], np.float32),
+                               np.asarray(full_logits[:, s], np.float32),
+                               rtol=2e-2, atol=2e-2)

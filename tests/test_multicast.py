@@ -1,0 +1,42 @@
+"""Switch control plane + shadow routing (paper §4.3.1, §4.2.4)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buckets import build_buckets
+from repro.core.multicast import SwitchControlPlane, assign_buckets
+
+
+def test_two_streams_per_dp_group():
+    cp = SwitchControlPlane(n_dp_groups=128, ranks_per_group=128,
+                            n_shadow_nodes=4).setup()
+    assert cp.multicast_streams == 256          # paper §4.4: LLaMA3 number
+    assert cp.extra_switch_ports() == 256
+
+
+def test_lookup_boundary_ranks_only():
+    cp = SwitchControlPlane(n_dp_groups=2, ranks_per_group=4,
+                            n_shadow_nodes=1).setup()
+    assert cp.lookup(0, 0) is not None
+    assert cp.lookup(0, 3) is not None
+    assert cp.lookup(0, 1) is None
+    assert cp.lookup(1, 4) is not None          # first rank of group 1
+    g = cp.lookup(0, 3)
+    assert g.next_rank == 0                     # ring wraps
+
+
+@given(st.integers(1, 16), st.lists(st.integers(1, 10**6), min_size=1,
+                                    max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_assignment_balanced_and_deterministic(n_nodes, sizes):
+    leaves = [(f"l{i}", (s,), "float32") for i, s in enumerate(sizes)]
+    layout = build_buckets(leaves, cap_bytes=1 << 20)
+    a1 = assign_buckets(layout, n_nodes)
+    a2 = assign_buckets(layout, n_nodes)
+    assert a1 == a2                              # deterministic (recovery!)
+    assert set(a1) == {b.bucket_id for b in layout.buckets}
+    loads = [0] * n_nodes
+    for b in layout.buckets:
+        loads[a1[b.bucket_id]] += b.nbytes
+    # greedy bound: max load <= mean + max bucket
+    biggest = max(b.nbytes for b in layout.buckets)
+    assert max(loads) <= sum(loads) / n_nodes + biggest

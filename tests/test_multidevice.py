@@ -1,0 +1,118 @@
+"""Multi-device paths (shard_map PP, RS/AG capture, mini dry-run) —
+run in SUBPROCESSES with forced host device counts so this process's
+single-device backend stays untouched."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, devices: int, timeout=600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pipeline_parallel_4stage():
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.dist.pipeline import make_pp_mesh, pipeline_apply, \\
+            gpipe_utilization
+        mesh = make_pp_mesh(n_stages=4, n_data=1)
+        S, M, mb, d = 4, 6, 2, 8
+        rng = np.random.default_rng(0)
+        ws = jnp.asarray(rng.standard_normal((S, d, d)), jnp.float32) * 0.3
+        xs = jnp.asarray(rng.standard_normal((M, mb, d)), jnp.float32)
+        out = pipeline_apply(lambda w, x: jnp.tanh(x @ w), ws, xs, mesh)
+        ref = xs
+        for i in range(S):
+            ref = jnp.tanh(ref @ ws[i])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+        assert abs(gpipe_utilization(6, 4) - 6/9) < 1e-9
+        print("PP_OK")
+    """, devices=4)
+    assert "PP_OK" in out
+
+
+def test_rs_ag_capture_semantics():
+    """ReduceScatter shard concatenation == AllReduce result (exactly-once
+    coverage of the reduced gradients, DESIGN.md §2)."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.dist.collectives import ring_all_reduce_rs_ag
+        mesh = jax.make_mesh((4,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.arange(32, dtype=jnp.float32)
+        with mesh:
+            full, shard = jax.jit(
+                lambda t: ring_all_reduce_rs_ag(t, mesh, "data"))(x)
+        # each device contributed the same x (replicated input) -> sum = 4x
+        np.testing.assert_allclose(np.asarray(full), np.asarray(x) * 4)
+        # the gathered shards ARE the full result: exactly-once coverage
+        assert full.shape == x.shape
+        print("RSAG_OK")
+    """, devices=4)
+    assert "RSAG_OK" in out
+
+
+def test_mini_dryrun_8dev():
+    """A miniature production mesh (4 data x 2 model) lower+compiles the
+    real train step for a reduced arch, and the HLO analyzer finds
+    collectives."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, json
+        import repro.configs as C
+        from repro.dist.sharding import ShardingRules
+        from repro.launch.hlo_analysis import analyze_compiled
+        from repro.models import registry
+        from repro.optim import OptimizerConfig
+        from repro.train.step import (abstract_train_state, build_train_step)
+        from dataclasses import replace
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = replace(C.get("tinyllama-1.1b").reduced(), microbatches=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, head_dim=16)
+        rules = ShardingRules(mesh)
+        step = build_train_step(cfg, mesh, rules, OptimizerConfig(),
+                                lambda s: 1e-3)
+        state = abstract_train_state(cfg, rules)
+        inputs = {
+            "tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32,
+                sharding=rules.sharding("batch", None, dims=(8, 32))),
+            "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32,
+                sharding=rules.sharding("batch", None, dims=(8, 32))),
+        }
+        with mesh:
+            compiled = jax.jit(step, donate_argnums=(0,)).lower(
+                state, inputs).compile()
+        s = analyze_compiled(compiled)
+        assert s["flops_per_device"] > 0
+        assert s["collective_bytes_per_device"] > 0
+        assert s["memory"]["temp_bytes"] > 0
+        print("DRYRUN_OK", json.dumps(s["per_collective"]))
+    """, devices=8)
+    assert "DRYRUN_OK" in out
+
+
+def test_production_mesh_shapes():
+    out = run_sub("""
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert dict(m1.shape) == {"data": 16, "model": 16}
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        assert m2.devices.size == 512
+        print("MESH_OK")
+    """, devices=512)
+    assert "MESH_OK" in out

@@ -1,0 +1,73 @@
+"""Network simulator: exactly-once delivery, PFC losslessness, Fig 10
+replication behaviour, §4.4 planning."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net.pfc import PfcQueue
+from repro.net.planner import PlanInput, plan
+from repro.net.simulator import simulate_allgather_replication
+
+
+@given(st.integers(2, 12), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_exactly_once_delivery(n_ranks, n_nodes):
+    r = simulate_allgather_replication(n_ranks, n_ranks * 64 * 1024,
+                                       n_shadow_nodes=n_nodes)
+    assert r.reassembled_ok
+    assert r.drops == 0
+
+
+def test_replication_counters_fig10():
+    """Fig 10: only tagged packets replicate, so TX grows far slower than
+    the replication factor."""
+    base = simulate_allgather_replication(4, 1 << 26, replication_factor=1)
+    r16 = simulate_allgather_replication(4, 1 << 26, replication_factor=16)
+    assert base.rx_frames == r16.rx_frames          # ring traffic unchanged
+    assert r16.tx_frames < 16 * base.rx_frames       # sub-linear in rf
+    assert r16.reassembled_ok
+
+
+def test_shadow_byte_balance():
+    r = simulate_allgather_replication(8, 8 * (1 << 20), n_shadow_nodes=4)
+    per = list(r.shadow_bytes.values())
+    assert sum(per) == 8 * (1 << 20)
+    assert max(per) <= 2 * min(p for p in per if p) + (1 << 20)
+
+
+class TestPfc:
+    def test_lossless_under_pressure(self):
+        q = PfcQueue(capacity_bytes=1 << 20)
+        sent = 0
+        backlog = 10 << 20
+        while sent < backlog:
+            if q.offer(4096):
+                sent += 4096
+            else:
+                q.drain(64 * 1024)              # receiver catches up
+        assert q.dropped == 0
+        assert q.pause_events > 0
+        assert q.resume_events > 0
+
+    def test_headroom(self):
+        q = PfcQueue(capacity_bytes=2 << 20, xoff_frac=0.8)
+        assert q.headroom_ok(max_inflight=256 * 1024)
+        assert not q.headroom_ok(max_inflight=1 << 20)
+
+
+def test_planner_llama3():
+    """§4.4: 256 streams / ports, <0.8% of the 16K-GPU fabric."""
+    p = plan(PlanInput(n_accelerators=16384, dp_groups=128,
+                       ranks_per_group=128),
+             grad_bytes_total=405e9 * 2, iter_time_s=4.58)
+    assert p.multicast_streams == 256
+    assert p.extra_port_fraction < 0.008
+    assert p.shadow_min_nics == 2
+    assert p.feasible
+
+
+def test_planner_infeasible_flags():
+    p = plan(PlanInput(n_accelerators=64, dp_groups=8, ranks_per_group=8,
+                       accel_per_host=4, pcie_gbps=1.0),
+             grad_bytes_total=1e12, iter_time_s=0.1)
+    assert not p.feasible
+    assert "PCIe" in p.notes

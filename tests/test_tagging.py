@@ -1,0 +1,64 @@
+"""Property tests for heartbeat tagging (paper §4.1, Fig 4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tagging import (chunk_at, incast_per_round, is_tagged,
+                                tag_schedule, tagged_chunks_per_rank,
+                                verify_exactly_once)
+
+
+@given(st.integers(min_value=1, max_value=128))
+@settings(max_examples=60, deadline=None)
+def test_exactly_once(n):
+    """Every chunk tagged exactly once per iteration — the §4.1 invariant."""
+    assert verify_exactly_once(n)
+
+
+@given(st.integers(min_value=2, max_value=128))
+@settings(max_examples=60, deadline=None)
+def test_incast_bound(n):
+    """At most TWO simultaneous taggers per round (why shadow nodes get two
+    NICs, §4.1.1); round 0 has exactly two, later rounds one."""
+    inc = incast_per_round(n)
+    assert inc[0] == 2 or n == 2
+    assert all(v <= 2 for v in inc.values())
+    for rnd in range(1, n - 1):
+        assert inc[rnd] == 1
+
+
+@given(st.integers(min_value=2, max_value=64))
+@settings(max_examples=40, deadline=None)
+def test_boundary_ranks_only(n):
+    """Only rank 0 (round 0) and rank n-1 tag."""
+    per_rank = tagged_chunks_per_rank(n)
+    assert set(per_rank) <= {0, n - 1}
+    assert per_rank[0] == [chunk_at(0, 0, n)]
+    assert len(per_rank[n - 1]) == n - 1
+
+
+def test_figure4_example():
+    """Paper Fig 4b: 4 GPUs — rank 0 tags C1 in round 0; rank 3 tags
+    C0, C3, C2 across rounds."""
+    per_rank = tagged_chunks_per_rank(4)
+    assert per_rank[0] == [1]
+    assert per_rank[3] == [0, 3, 2]
+
+
+@given(st.integers(min_value=2, max_value=32),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=40, deadline=None)
+def test_schedule_sequence_numbers(n, channels, nodes):
+    """Per-channel shadow-stream sequence numbers are dense + monotone
+    (§4.1.2) and every (channel, chunk) appears exactly once."""
+    evs = tag_schedule(n, n_channels=channels, n_shadow_nodes=nodes)
+    per_ch = {}
+    for ev in evs:
+        per_ch.setdefault(ev.channel, []).append(ev)
+    assert set(per_ch) == set(range(channels))
+    for ch, lst in per_ch.items():
+        seqs = [e.seq for e in lst]
+        assert seqs == list(range(len(lst)))
+        chunks = [e.chunk for e in lst]
+        assert sorted(chunks) == list(range(n))
+        assert all(0 <= e.shadow_node < nodes for e in lst)

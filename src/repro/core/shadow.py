@@ -43,8 +43,11 @@ class ShadowNode:
         self.opt = opt
         self.layout = layout
         self.bucket_ids = sorted(bucket_ids)
+        # hot path: resolved once here, not per apply (§6.3 timeliness)
+        self._by_id = {b.bucket_id: b for b in layout.buckets}
+        ids = set(bucket_ids)
         self._leaves = [s.name for b in layout.buckets
-                        if b.bucket_id in set(bucket_ids) for s in b.slots]
+                        if b.bucket_id in ids for s in b.slots]
         self.params: dict[str, jnp.ndarray] = {}
         self.mu: dict[str, jnp.ndarray] = {}
         self.nu: dict[str, jnp.ndarray] = {}
@@ -75,9 +78,8 @@ class ShadowNode:
         """Apply one iteration's bucket gradients for this node's partition."""
         t0 = time.perf_counter()
         grads = {}
-        by_id = {b.bucket_id: b for b in self.layout.buckets}
         for bid in self.bucket_ids:
-            bucket = by_id[bid]
+            bucket = self._by_id[bid]
             grads.update(unpack_bucket(bucket, jnp.asarray(flats[bid]), xp=jnp))
         grads = {k: v for k, v in grads.items() if k in self.params}
         p, m, v = self._update(self.params, self.mu, self.nu, grads,
@@ -133,7 +135,7 @@ class ShadowCluster:
             self._workers.append(t)
 
     def _worker(self, node: ShadowNode, q: queue.Queue):
-        by_id = {b.bucket_id: b for b in self.layout.buckets}
+        by_id = node._by_id
         while True:
             item = q.get()
             if item is None:

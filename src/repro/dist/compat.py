@@ -1,0 +1,51 @@
+"""jax version shims.
+
+The repo targets the jax>=0.5 mesh API (``jax.make_mesh(..., axis_types=...)``
+with ``jax.sharding.AxisType``); some deployment containers pin jax 0.4.x,
+where meshes have no axis types (every axis behaves like ``Auto`` under
+GSPMD, which is exactly how this codebase uses them). Importing this module
+installs forward-compatible aliases so the same call sites run on both:
+
+* ``jax.sharding.AxisType`` — a placeholder enum when missing,
+* ``jax.make_mesh`` — wrapped to accept and drop ``axis_types`` when the
+  installed signature lacks it.
+
+On jax>=0.5 both shims are no-ops. ``repro.dist`` imports this at package
+import, so any code that imports the distributed substrate gets the
+compatible API.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+if not hasattr(jax.sharding, "AxisType"):
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _orig_make_mesh = jax.make_mesh
+
+    @functools.wraps(_orig_make_mesh)
+    def _make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types                  # jax 0.4.x: all axes are GSPMD-auto
+        return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = _make_mesh
+
+
+try:                                    # moved out of experimental in jax 0.6
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+
+make_mesh = jax.make_mesh
+AxisType = jax.sharding.AxisType

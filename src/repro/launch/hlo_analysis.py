@@ -87,6 +87,33 @@ _CALL_RE = re.compile(r"(?:calls|to_apply|condition|body|true_computation|"
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 
 
+def _split_operands(s: str) -> list[str]:
+    """Split an operand list on top-level commas only (shape dims and layout
+    braces contain commas: ``f32[1,32,64]{2,1,0} %name``)."""
+    parts, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _operand_name(tok: str) -> str:
+    """Operand name from either ``%name`` or ``type %name`` spellings."""
+    for t in reversed(tok.split()):
+        if t.startswith("%"):
+            return t.lstrip("%")
+    return tok.strip().lstrip("%").split(" ")[0]
+
+
 @dataclass
 class _Op:
     name: str
@@ -126,8 +153,8 @@ class HloModule:
             if not m:
                 continue
             name, type_str, opcode, operands, rest = m.groups()
-            ops = [o.strip().lstrip("%").split(" ")[0]
-                   for o in operands.split(",") if o.strip()]
+            ops = [_operand_name(o)
+                   for o in _split_operands(operands) if o.strip()]
             self.computations[cur].append(
                 _Op(name, type_str, opcode, ops, rest))
 
@@ -362,6 +389,8 @@ def analyze_compiled(compiled) -> dict:
     """Cost summary dict for a jax.stages.Compiled (per-device numbers)."""
     cost = analyze_hlo_text(compiled.as_text())
     xla = compiled.cost_analysis() or {}
+    if isinstance(xla, (list, tuple)):        # jax 0.4.x: list of one dict
+        xla = xla[0] if xla else {}
     mem = compiled.memory_analysis()
     return {
         "flops_per_device": cost.flops,

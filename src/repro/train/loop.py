@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.checkpoint import BaseCheckpointer, NoCheckpointer
-from repro.core.recovery import FailurePlan, checkpoint_from_state, recover
+from repro.core.recovery import (FailurePlan, checkpoint_from_state,
+                                 state_from_checkpoint)
 from repro.data.synthetic import SyntheticStream, device_batch
 from repro.dist.sharding import ShardingRules
 from repro.optim import OptimizerConfig, TrainState
@@ -99,7 +100,6 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
             restored = checkpointer.restore()
             if restored is None:
                 raise
-            from repro.core.recovery import state_from_checkpoint
             state = state_from_checkpoint(restored, cfg, rules)
             step = int(restored["step"])
             stats.recoveries += 1

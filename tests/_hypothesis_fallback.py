@@ -1,0 +1,116 @@
+"""Minimal deterministic stand-in for `hypothesis` (used only when the real
+package is not installed — see conftest.py).
+
+The container that runs tier-1 cannot always install dev dependencies, so
+property tests fall back to a fixed-seed random sweep over the same strategy
+shapes: each `@given` case runs `max_examples` times with boundary values
+first, then seeded-random draws. This keeps the *property* assertions
+exercised everywhere, while real hypothesis (when present, e.g. in CI after
+`pip install -e .[dev]`) still owns shrinking and edge-case search.
+
+Supported surface (what this repo's tests use): `given`, `settings`,
+`strategies.integers/floats/lists/tuples/sampled_from` and `Strategy.map`.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random, i: int):
+        return self._draw(rng, i)
+
+    def map(self, fn):
+        return Strategy(lambda rng, i: fn(self._draw(rng, i)))
+
+
+def _bounded(lo, hi, pick):
+    # boundary values first, then random draws
+    def draw(rng, i):
+        if i == 0:
+            return lo
+        if i == 1:
+            return hi
+        return pick(rng)
+    return draw
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2 ** 31) if min_value is None else min_value
+    hi = 2 ** 31 if max_value is None else max_value
+    return Strategy(_bounded(lo, hi, lambda rng: rng.randint(lo, hi)))
+
+
+def floats(min_value=None, max_value=None, **_):
+    lo = -1e9 if min_value is None else min_value
+    hi = 1e9 if max_value is None else max_value
+    return Strategy(_bounded(lo, hi, lambda rng: rng.uniform(lo, hi)))
+
+
+def lists(elements: Strategy, min_size=0, max_size=10):
+    def draw(rng, i):
+        size = min_size if i == 0 else rng.randint(min_size, max_size)
+        # first element follows the outer example index so element boundary
+        # values (i == 0/1) are exercised deliberately, not just by luck
+        return [elements.example(rng, i if k == 0 else 2 + rng.randint(0, 7))
+                for k in range(size)]
+    return Strategy(draw)
+
+
+def tuples(*strats: Strategy):
+    return Strategy(lambda rng, i: tuple(s.example(rng, i) for s in strats))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng, i: seq[i % len(seq)] if i < len(seq)
+                    else rng.choice(seq))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, lists=lists, tuples=tuples,
+    sampled_from=sampled_from)
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._fallback_settings = kwargs
+        return fn
+    return deco
+
+
+def given(*strats: Strategy):
+    def deco(fn):
+        conf = getattr(fn, "_fallback_settings", {})
+        n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        # no functools.wraps: pytest must see a zero-arg signature, not the
+        # original one (strategy params would look like missing fixtures)
+        def wrapper():
+            rng = random.Random(0)
+            for i in range(n):
+                fn(*(s.example(rng, i) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def install(sys_modules: dict):
+    """Register this module as `hypothesis` in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__doc__ = __doc__
+    sys_modules["hypothesis"] = mod
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "sampled_from"):
+        setattr(st_mod, name, getattr(strategies, name))
+    sys_modules["hypothesis.strategies"] = st_mod

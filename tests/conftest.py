@@ -3,6 +3,19 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Property tests degrade to a deterministic fixed-seed sweep when the
+    # real hypothesis isn't installed (tier-1 containers can't pip install).
+    import warnings
+    warnings.warn("hypothesis not installed: property tests run the "
+                  "deterministic fallback sweep (tests/_hypothesis_fallback.py)"
+                  " — no shrinking or edge-case search", stacklevel=1)
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import install as _install_hypothesis
+    _install_hypothesis(sys.modules)
+
 # NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests must see the
 # real single CPU device. Multi-device paths are tested via subprocesses
 # (tests/test_multidevice.py) so they never pollute this process's backend.

@@ -40,3 +40,28 @@ def test_assignment_balanced_and_deterministic(n_nodes, sizes):
     # greedy bound: max load <= mean + max bucket
     biggest = max(b.nbytes for b in layout.buckets)
     assert max(loads) <= sum(loads) / n_nodes + biggest
+
+
+@given(st.integers(1, 16), st.lists(st.integers(1, 10**6), min_size=1,
+                                    max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_assignment_spread_bounded_and_shared_across_call_sites(n_nodes, sizes):
+    """Byte balance: max/min node load differ by at most the largest bucket
+    (greedy invariant: the heaviest node was lightest when it last received
+    a bucket, and the min only grows). Every call site — training nodes,
+    switch control plane, ShadowCluster — must derive the SAME mapping, or
+    recovery consolidates the wrong partitions."""
+    from repro.core.shadow import ShadowCluster
+    from repro.optim.functional import OptimizerConfig
+
+    leaves = [(f"l{i}", (s,), "float32") for i, s in enumerate(sizes)]
+    layout = build_buckets(leaves, cap_bytes=1 << 20)
+    a = assign_buckets(layout, n_nodes)
+    loads = [0] * n_nodes
+    for b in layout.buckets:
+        loads[a[b.bucket_id]] += b.nbytes
+    biggest = max(b.nbytes for b in layout.buckets)
+    assert max(loads) - min(loads) <= biggest
+    # independent call site (the shadow plane) derives the identical mapping
+    cluster = ShadowCluster(layout, OptimizerConfig(), n_nodes=n_nodes)
+    assert cluster.assignment == a

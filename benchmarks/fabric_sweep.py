@@ -1,0 +1,54 @@
+"""Fabric-level sweeps on the event-driven simulator (docs/netsim.md):
+
+* Fig 10 at scale — replication factor vs TX/RX ratio and bus bandwidth at
+  512 ranks across 2 DP groups on the rail fabric,
+* topology comparison — rail-optimized vs strided leaf/spine vs the
+  single-switch idealization for the same workload,
+* failure drills — spine kill (reroute) and shadow-NIC kill (capture loss)
+  mid-iteration.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.net.simulator import (FailureSpec, simulate_fabric,
+                                 sweep_replication, sweep_topology)
+
+SCALE = dict(n_dp_groups=2, ranks_per_group=256,
+             grad_bytes_per_group=256 * 2048, topology="rail",
+             n_shadow_nodes=2, ranks_per_leaf=32)
+
+
+def run():
+    for r in sweep_replication((1, 2, 4, 8), **SCALE):
+        csv_row(f"fabric.fig10.rf{r.replication_factor}",
+                r.duration_s * 1e6,
+                f"tx_over_rx={r.tx_over_rx:.4f} "
+                f"busbw={r.bus_bandwidth_gbps:.1f}Gbps "
+                f"ok={r.reassembled_ok} drops={r.drops} "
+                f"events={r.events}")
+
+    work = dict(n_dp_groups=2, ranks_per_group=64,
+                grad_bytes_per_group=64 * 16384, n_shadow_nodes=2,
+                ranks_per_leaf=16)
+    for name, r in sweep_topology(("single", "rail", "leaf-spine"),
+                                  **work).items():
+        csv_row(f"fabric.topology.{name}", r.duration_s * 1e6,
+                f"busbw={r.bus_bandwidth_gbps:.1f}Gbps "
+                f"pauses={r.pfc_pauses} ok={r.reassembled_ok}")
+
+    base = simulate_fabric(**work)
+    mid = base.duration_s / 2
+    spine = simulate_fabric(**work,
+                            failures=[FailureSpec(mid, "switch", "spine0")])
+    csv_row("fabric.fail.spine_kill", spine.duration_s * 1e6,
+            f"rerouted={spine.rerouted} retx={spine.retransmits} "
+            f"ok={spine.reassembled_ok}")
+    snic = simulate_fabric(**work,
+                           failures=[FailureSpec(mid, "shadow_nic", "s0")])
+    csv_row("fabric.fail.shadow_nic", snic.duration_s * 1e6,
+            f"missing={snic.missing_captures} "
+            f"ring_ok={snic.ring_completed} ok={snic.reassembled_ok}")
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,8 @@ Mapping to the paper:
   optimizer_scaling  -> Fig 8 (opt-step scaling across shadow partitions)
   correctness        -> Fig 9 (recovered == uninterrupted)
   multicast_overhead -> Fig 10 (replication factor sweep)
+  fabric_sweep       -> Fig 10 at 512 ranks + topology/failure sweeps on
+                        the event-driven fabric simulator (docs/netsim.md)
   kernels            -> Pallas kernels vs jnp refs
 """
 from __future__ import annotations
@@ -23,6 +25,7 @@ import traceback
 MODULES = [
     ("savings", "benchmarks.savings"),
     ("multicast_overhead", "benchmarks.multicast_overhead"),
+    ("fabric_sweep", "benchmarks.fabric_sweep"),
     ("optimizer_scaling", "benchmarks.optimizer_scaling"),
     ("kernels", "benchmarks.kernels"),
     ("stalls", "benchmarks.stalls"),

@@ -160,7 +160,7 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("pure full-attention family: 500k-token decode KV cache is "
                        "outside the architecture family's operating envelope "
-                       "(see DESIGN.md §4); run only for ssm/hybrid")
+                       "(see docs/ARCHITECTURE.md, models); run only for ssm/hybrid")
     return True, ""
 
 

@@ -9,6 +9,7 @@ from repro.core.multicast import (  # noqa: F401
 )
 from repro.core.shadow import ShadowCluster, ShadowNode  # noqa: F401
 from repro.core.checkpoint import (  # noqa: F401
+    CaptureGatedCheckmateCheckpointer,
     CheckmateCheckpointer, SyncCheckpointer, AsyncCheckpointer,
     ShardedAsyncCheckpointer, GeminiLikeCheckpointer, CheckFreqCheckpointer,
     NoCheckpointer,

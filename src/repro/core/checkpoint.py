@@ -210,7 +210,8 @@ class CheckmateCheckpointer(BaseCheckpointer):
     """Per-iteration checkpointing with zero training stall.
 
     The reduced gradients are an *output of the train step* (the RS capture
-    point, DESIGN.md §2) — handing them to the shadow cluster is a pointer
+    point, docs/ARCHITECTURE.md) — handing them to the shadow cluster is a
+    pointer
     enqueue; the optimizer replay happens on shadow CPU threads off the
     training critical path.
     """
@@ -229,3 +230,29 @@ class CheckmateCheckpointer(BaseCheckpointer):
 
     def finalize(self):
         self.shadow.consolidate()
+
+
+class CaptureGatedCheckmateCheckpointer(CheckmateCheckpointer):
+    """Checkmate checkpointer that skips iterations whose network capture
+    was incomplete.
+
+    The fabric simulator (`repro.net.simulator`) reports incomplete
+    captures (e.g. a shadow-NIC failure mid-iteration: mirrored copies are
+    not retransmitted, §4.3.2) via ``FabricResult.reassembled_ok``. Feeding
+    the affected step numbers here models the shadow cluster refusing a
+    partial apply; recovery then consolidates at the last fully-captured
+    step. Each lost step fires once — the failed hardware is replaced
+    before the post-recovery rerun, exactly like `recovery.FailurePlan`.
+    """
+    name = "checkmate_gated"
+
+    def __init__(self, shadow: ShadowCluster, lost_steps=()):
+        super().__init__(shadow)
+        self.lost = set(lost_steps)
+
+    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
+        if step in self.lost:
+            self.lost.discard(step)
+            return
+        super()._checkpoint(step, state_fn, grads, lr, grad_scale,
+                            iter_time)

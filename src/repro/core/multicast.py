@@ -3,9 +3,14 @@
 The switch control plane is configured per DP group with the boundary ranks'
 addresses; it creates protocol-independent multicast groups (next training
 rank + the shadow nodes) and a shadow-node-id -> address map used to rewrite
-mirrored packets. On TPU (DESIGN.md §2), "multicast group" degenerates to a
-shard->shadow-node routing table at the host DMA boundary — this module
-provides both views.
+mirrored packets. On TPU (docs/ARCHITECTURE.md, "TPU adaptation"),
+"multicast group" degenerates to a shard->shadow-node routing table at the
+host DMA boundary — this module provides both views.
+
+The data plane that consumes this configuration lives in
+`repro.net.switch`; the event-driven fabric simulator
+(`repro.net.simulator`) instantiates one control plane per fabric and one
+data plane per switch.
 """
 from __future__ import annotations
 
@@ -26,7 +31,18 @@ class MulticastGroup:
 
 @dataclass
 class SwitchControlPlane:
-    """Match-action configuration for tagged-gradient replication."""
+    """Match-action configuration for tagged-gradient replication.
+
+    Args:
+        n_dp_groups: concurrent data-parallel groups sharing the fabric.
+        ranks_per_group: ring size of each group's AllGather; global rank
+            ``r`` belongs to DP group ``r // ranks_per_group``.
+        n_shadow_nodes: CPU shadow nodes mirrored packets may target.
+
+    Call ``setup()`` before use: it installs two multicast streams per DP
+    group (the first and last rank of each ring, §4.4) into
+    ``match_table`` and assigns shadow node addresses.
+    """
     n_dp_groups: int
     ranks_per_group: int
     n_shadow_nodes: int
@@ -56,6 +72,8 @@ class SwitchControlPlane:
         return self
 
     def lookup(self, dp_group: int, src_rank: int) -> Optional[MulticastGroup]:
+        """Match a (DP group, global source rank) against the multicast
+        table; None for non-boundary ranks (no replication rule)."""
         gid = self.match_table.get((dp_group, src_rank))
         return self.groups[gid] if gid is not None else None
 

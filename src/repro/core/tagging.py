@@ -85,6 +85,32 @@ def tag_schedule(n_ranks: int, n_channels: int = 1,
     return events
 
 
+def fabric_tag_schedule(n_dp_groups: int, ranks_per_group: int,
+                        n_channels: int = 1,
+                        n_shadow_nodes: int = 1) -> dict[int, list[TagEvent]]:
+    """Per-DP-group tag schedules for a shared fabric (§4.4).
+
+    Every DP group runs its own ring AllGather concurrently; each group has
+    its own pair of tagging (boundary) ranks and its own per-channel
+    shadow-stream sequence space.  ``TagEvent.src_rank`` stays *group-local*
+    (0..ranks_per_group-1): callers translate to global ranks via
+    ``dp * ranks_per_group + src_rank``.
+
+    Chunks are spread over shadow nodes with a per-group offset so that
+    multiple groups do not all hammer shadow node 0 first.
+
+    Returns ``{dp_group: [TagEvent, ...]}``.
+    """
+    out: dict[int, list[TagEvent]] = {}
+    for dp in range(n_dp_groups):
+        def chunk_to_node(ch, c, _dp=dp):
+            return (_dp + ch * ranks_per_group + c) % n_shadow_nodes
+        out[dp] = tag_schedule(ranks_per_group, n_channels=n_channels,
+                               n_shadow_nodes=n_shadow_nodes,
+                               chunk_to_node=chunk_to_node)
+    return out
+
+
 def verify_exactly_once(n_ranks: int) -> bool:
     """Every chunk tagged exactly once across the schedule."""
     seen: dict[int, int] = {}

@@ -1,4 +1,4 @@
-"""Explicit ring collectives (paper §2.2, DESIGN.md §2).
+"""Explicit ring collectives (paper §2.2; docs/ARCHITECTURE.md "capture point").
 
 Checkmate's capture point exists because a ring AllReduce *is* a
 ReduceScatter followed by an AllGather: after the RS phase each device owns

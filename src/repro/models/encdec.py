@@ -4,7 +4,7 @@ The log-mel + conv1d frontend is a STUB per the assignment: ``input_specs``
 provides precomputed frame embeddings (batch, encoder_seq, d_model). The
 backbone is faithful in structure (bidirectional encoder; decoder with causal
 self-attention + cross-attention); positional encoding uses RoPE for
-shape-independence (adaptation noted in DESIGN.md).
+shape-independence (adaptation noted in docs/ARCHITECTURE.md, models).
 """
 from __future__ import annotations
 

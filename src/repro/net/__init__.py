@@ -1,0 +1,29 @@
+"""`repro.net` — the network plane of the Checkmate reproduction.
+
+Packet/frame model (`packets`), switch match-action data plane (`switch`),
+priority flow control (`pfc`), fabric topology construction + §4.4 resource
+planning (`planner`), and the event-driven multi-switch simulator
+(`simulator`).  See docs/ARCHITECTURE.md for the package map and
+docs/netsim.md for the simulator's model and usage.
+"""
+from repro.net.packets import MTU, Frame, frames_for_chunk  # noqa: F401
+from repro.net.pfc import PfcConfig, PfcQueue  # noqa: F401
+from repro.net.planner import (  # noqa: F401
+    LinkSpec, Plan, PlanInput, Topology, build_topology, plan,
+)
+from repro.net.switch import SwitchCounters, SwitchDataPlane  # noqa: F401
+
+_SIMULATOR_API = (
+    "FabricResult", "FabricSimulator", "FailureSpec", "SimResult",
+    "simulate_allgather_replication", "simulate_fabric",
+    "sweep_replication", "sweep_topology",
+)
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.net.simulator` does not double-import the
+    # module it is about to execute (runpy RuntimeWarning)
+    if name in _SIMULATOR_API:
+        from repro.net import simulator
+        return getattr(simulator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

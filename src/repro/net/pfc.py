@@ -1,13 +1,49 @@
 """Priority Flow Control model (paper §4.3.3): lossless delivery to shadow
 nodes under transient receiver-side pressure.
 
-A bounded egress queue per shadow port; when occupancy crosses the XOFF
-threshold the upstream source pauses (no drops); it resumes below XON.
-The invariant tests assert zero drops for any drain-rate pattern.
+Two views live here:
+
+* ``PfcQueue`` — the original self-contained bounded queue with XOFF/XON
+  thresholds, used by the unit tests and the legacy per-round simulator.
+* ``PfcConfig`` — threshold/propagation parameters consumed by the
+  event-driven fabric simulator (`repro.net.simulator`), where occupancy is
+  tracked per switch-egress queue and PAUSE/RESUME signals propagate to
+  upstream transmitters with a configurable delay (hop-by-hop PFC, the way
+  real 802.1Qbb behaves).
+
+The invariant in both: when thresholds leave headroom for in-flight bytes,
+a paused upstream never overflows the queue, so the lossless class drops
+nothing.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class PfcConfig:
+    """PFC parameters for one switch egress queue in the fabric simulator.
+
+    Args:
+        capacity_bytes: physical buffer bound; enqueue beyond it drops.
+        xoff_frac: occupancy fraction at which PAUSE is sent upstream.
+        xon_frac: occupancy fraction at which RESUME is sent upstream.
+        pause_prop_s: one-way PAUSE/RESUME signal propagation delay.
+        enabled: disable to model a lossy (drop + retransmit) class.
+    """
+    capacity_bytes: int = 2 * 1024 * 1024
+    xoff_frac: float = 0.8
+    xon_frac: float = 0.5
+    pause_prop_s: float = 2e-6
+    enabled: bool = True
+
+    @property
+    def xoff(self) -> int:
+        return int(self.capacity_bytes * self.xoff_frac)
+
+    @property
+    def xon(self) -> int:
+        return int(self.capacity_bytes * self.xon_frac)
 
 
 @dataclass

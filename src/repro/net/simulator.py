@@ -1,28 +1,600 @@
-"""Discrete-event replication simulator: replays the heartbeat tag schedule
-through the switch model over link/NIC bandwidth constraints.
+"""Event-driven fabric simulator for gradient multicast (paper §4, Fig 10).
 
-Reproduces:
-  * §4.1 exactly-once capture (asserted by reassembly),
-  * §6.6 / Fig 10: replication factor vs AllReduce bus bandwidth and
-    TX/RX frame ratio,
-  * dual-NIC shadow provisioning (§4.1.1): round-0 double-rate reception.
+A global event queue (`heapq`) advances simulated time over a multi-switch
+topology built by `repro.net.planner.build_topology`.  First-class resources:
 
-Time advances in per-round steps of the AllGather; within a round each
-link transmits a chunk's frames at line rate, and the round lasts
-max(link serialization, shadow drain) — which is how incast shows up.
+* **links** — every directed link is an egress queue plus a serializer:
+  frames wait FIFO, transmit at line rate (serialization delay), then
+  propagate (`prop_s`) to the far node,
+* **switch egress queues** — bounded buffers; crossing the PFC XOFF
+  threshold sends PAUSE to every upstream transmitter of that switch
+  (propagated with `PfcConfig.pause_prop_s`), RESUME below XON — so incast
+  at the shadow rail visibly backpressures the fabric hop by hop,
+* **NICs** — host/shadow access links (bonded shadow NIC pairs are one link
+  at aggregate rate, §4.1.1),
+* **shadow drain** — the shadow access link's serializer is the drain.
+
+Losses: a full lossy queue or a killed link drops frames.  Ring (training)
+frames are retransmitted by their source after `retx_timeout_s` (TCP);
+switch-mirrored copies are **not** — the switch PRE keeps no state and the
+shadow stream's ACKs are dropped (§4.3.2), so a mirror loss means that
+iteration's capture is incomplete, which is exactly the signal
+`repro.core.recovery` consumes (see tests/test_fabric.py).
+
+The workload is one AllGather iteration per DP group, all groups sharing
+the fabric concurrently: rank ``r`` sends round ``t+1``'s chunk only after
+fully receiving round ``t``'s (the real ring dependency), with heartbeat
+tagging and per-channel shadow streams from `repro.core.tagging`.
+
+`simulate_allgather_replication` is kept as a thin compatibility wrapper
+(single-switch topology, one DP group) over this engine; the original
+per-round arithmetic model survives as `_legacy_simulate_allgather` for
+regression comparison.  See docs/netsim.md for the full model and a worked
+Fig 10 example, and docs/ARCHITECTURE.md for where this sits in the system.
 """
 from __future__ import annotations
 
+import argparse
+import heapq
+from collections import deque
 from dataclasses import dataclass, field
 
-import numpy as np
-
 from repro.core.multicast import SwitchControlPlane
-from repro.core.tagging import chunk_at, is_tagged, tag_schedule
+from repro.core.tagging import chunk_at, fabric_tag_schedule, is_tagged, \
+    tag_schedule
 from repro.net.packets import MTU, Frame, frames_for_chunk
-from repro.net.pfc import PfcQueue
-from repro.net.switch import SwitchDataPlane
+from repro.net.pfc import PfcConfig, PfcQueue
+from repro.net.planner import Topology, build_topology
+from repro.net.switch import SwitchCounters, SwitchDataPlane
 
+_HOST, _SWITCH, _SHADOW = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class FailureSpec:
+    """Fabric-level failure injection: fires once at ``at_s``.
+
+    Args:
+        at_s: simulation time of the failure (seconds).
+        kind: "link" (cut a cable: both directions), "switch" (kill every
+            link touching the switch), or "shadow_nic" (cut a shadow host's
+            access link).
+        target: ("a", "b") node-name pair for "link"; a switch name for
+            "switch"; a shadow host name ("s0") or node id for "shadow_nic".
+    """
+    at_s: float
+    kind: str
+    target: tuple | str | int
+
+
+@dataclass
+class FabricResult:
+    """Outcome of one fabric iteration (see docs/netsim.md)."""
+    topology: str
+    n_ranks: int
+    n_dp_groups: int
+    ranks_per_group: int
+    n_shadow: int
+    replication_factor: int
+    grad_bytes_per_group: int
+    duration_s: float
+    group_done_s: dict
+    ring_completed: bool
+    algo_bandwidth_gbps: float
+    bus_bandwidth_gbps: float
+    rx_frames: int
+    tx_frames: int
+    mirrored_frames: int
+    tx_over_rx: float
+    switch_counters: dict
+    shadow_bytes: dict
+    reassembled_ok: bool
+    missing_captures: int
+    duplicate_mirror_bytes: int
+    mirror_lost_frames: int
+    drops: int
+    retransmits: int
+    rerouted: int
+    pfc_pauses: int
+    pfc_resumes: int
+    latency: dict
+    events: int
+
+
+class _Link:
+    """Runtime state of one directed link: FIFO egress queue + serializer."""
+    __slots__ = ("src", "dst", "rate_bps", "prop", "q", "qbytes", "busy",
+                 "up", "pause_count", "sent_xoff", "cap", "xoff", "xon",
+                 "epoch", "drops", "pause_events", "resume_events", "key")
+
+    def __init__(self, spec, bounded: bool, pfc: PfcConfig,
+                 min_cap: int = 0):
+        self.key = (spec.src, spec.dst)
+        self.src, self.dst = spec.src, spec.dst
+        self.rate_bps = spec.gbps * 1e9
+        self.prop = spec.prop_s
+        self.q: deque = deque()
+        self.qbytes = 0
+        self.busy = False
+        self.up = True
+        self.pause_count = 0            # XOFFs currently held against us
+        self.sent_xoff = False          # our queue has paused our feeders
+        # frame coalescing makes enqueues burstier than the wire (one event
+        # may carry quantum * rf MTU frames), so the lossless class scales
+        # its buffer up with min_cap to keep the same relative headroom the
+        # real frames have; the lossy class keeps the user's capacity (its
+        # drops are the experiment) and bounds the quantum instead
+        cap = max(pfc.capacity_bytes, min_cap) if pfc.enabled \
+            else pfc.capacity_bytes
+        self.cap = cap if bounded else None
+        self.xoff = int(cap * pfc.xoff_frac)
+        self.xon = int(cap * pfc.xon_frac)
+        self.epoch = 0                  # bumped on kill: stale events no-op
+        self.drops = 0
+        self.pause_events = 0
+        self.resume_events = 0
+
+
+class FabricSimulator:
+    """One AllGather iteration of every DP group over a shared fabric.
+
+    Args:
+        topo: static fabric from `repro.net.planner.build_topology`.
+        grad_bytes_per_group: reduced-gradient payload per DP group.
+        replication_factor: mirror copies per tagged frame (Fig 10).
+        n_channels: collective channels; each gets its own shadow stream.
+        pfc: thresholds + PAUSE propagation for switch egress queues; pass
+            ``PfcConfig(enabled=False)`` for a lossy class (drops + retx).
+        failures: `FailureSpec` events to inject mid-iteration.
+        frame_quantum: coalesce this many MTU frames per event (None =
+            auto-pick so a chunk is <= ~256 events; counters stay exact).
+        retx_timeout_s / max_retx: source retransmission for ring frames.
+        max_time_s: hard simulation-time stop (guards unreachable rings).
+    """
+
+    def __init__(self, topo: Topology, *, grad_bytes_per_group: int,
+                 replication_factor: int = 1, n_channels: int = 1,
+                 pfc: PfcConfig = PfcConfig(), failures=(),
+                 frame_quantum: int | None = None,
+                 retx_timeout_s: float = 100e-6, max_retx: int = 10,
+                 max_time_s: float = 30.0):
+        self.topo = topo
+        self.pfc = pfc
+        self.rf = max(1, replication_factor)
+        self.n_channels = max(1, n_channels)
+        self.retx_timeout = retx_timeout_s
+        self.max_retx = max_retx
+        self.max_time = max_time_s
+        n, rpg = topo.n_ranks, topo.ranks_per_group
+        self.rounds = max(rpg - 1, 1)
+        self.chunk_bytes = grad_bytes_per_group // rpg
+        if self.chunk_bytes <= 0:
+            raise ValueError("grad_bytes_per_group must cover >=1 byte/rank")
+        nc = self.n_channels
+        base, rem = divmod(self.chunk_bytes, nc)
+        self.split = [base + (1 if i < rem else 0) for i in range(nc)]
+        if frame_quantum is None:
+            raw = (max(self.split) + MTU - 1) // MTU
+            frame_quantum = max(1, (raw + 255) // 256)
+            if not pfc.enabled:
+                # lossy buffers stay at the configured size, so a coalesced
+                # frame must stay well under it or every enqueue drops
+                frame_quantum = min(frame_quantum,
+                                    max(1, pfc.capacity_bytes // (4 * MTU)))
+        self.quantum = frame_quantum
+
+        self.control = SwitchControlPlane(
+            topo.n_dp_groups, rpg, topo.n_shadow).setup()
+        switch_names = list(topo.leaves) + list(topo.spines)
+        self.dataplanes = {s: SwitchDataPlane(self.control, name=s)
+                           for s in switch_names}
+        self._kind = {h: _HOST for h in topo.hosts}
+        self._kind.update({s: _SWITCH for s in switch_names})
+        self._kind.update({s: _SHADOW for s in topo.shadow_hosts})
+        self._shadow_id = {h: i for i, h in topo.shadow_host_of.items()}
+        self._leaf_idx = {l: i for i, l in enumerate(topo.leaves)}
+        self._spine_set = set(topo.spines)
+        # worst case between XOFF firing and it taking effect: two taggers
+        # (round 0, §4.1.1) each land one quantum*rf mirror burst plus a
+        # pause-propagation window of line-rate arrivals — 16x covers it
+        # with the default xoff_frac of 0.8 (headroom = 3.2 * burst)
+        min_cap = 16 * self.quantum * MTU * self.rf
+        self.links = {k: _Link(spec, bounded=self._kind[spec.src] == _SWITCH,
+                               pfc=pfc, min_cap=min_cap)
+                      for k, spec in topo.links.items()}
+        self._feeders = {}              # node -> [links whose dst == node]
+        for lk in self.links.values():
+            self._feeders.setdefault(lk.dst, []).append(lk)
+        self._attach_of_rank = [topo.attach[topo.host_of_rank[r]]
+                                for r in range(n)]
+
+        # tag schedule: (group, round, local_rank, channel) -> TagEvent
+        self.schedule = {}
+        for g, evs in fabric_tag_schedule(
+                topo.n_dp_groups, rpg, n_channels=nc,
+                n_shadow_nodes=topo.n_shadow).items():
+            for ev in evs:
+                self.schedule[(g, ev.round, ev.src_rank, ev.channel)] = ev
+
+        # expected shadow capture: (g, ch, chunk, replica) -> bytes
+        self.expected = {}
+        for (g, _r, _lr, ch), ev in self.schedule.items():
+            for rep in range(self.rf):
+                self.expected[(g, ch, ev.chunk, rep)] = self.split[ch]
+        self._cov: dict = {}            # key -> {offset: bytes}
+        self.shadow_bytes = {i: 0 for i in range(topo.n_shadow)}
+        self.duplicate_mirror_bytes = 0
+
+        # ring receive bookkeeping
+        self._rx_round = [dict() for _ in range(n)]     # rank -> {round: B}
+        self._done_rounds = [set() for _ in range(n)]
+        self._send_next = [1] * n
+        self._group_rounds_left = {g: rpg * self.rounds
+                                   for g in range(topo.n_dp_groups)}
+        self.group_done_s: dict = {}
+
+        self._heap: list = []
+        self._seq = 0
+        self.now = 0.0
+        self.events = 0
+        self.retransmits = 0
+        self.rerouted = 0
+        self.mirror_lost = 0
+        self.undelivered = 0
+        self._lat = {"ring": [0, 0.0, 0.0], "mirror": [0, 0.0, 0.0]}
+        for spec in failures:
+            self._at(spec.at_s, self._fail, spec)
+
+    # -- event plumbing ----------------------------------------------------
+    def _at(self, t: float, fn, arg):
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, fn, arg))
+
+    def _after(self, dt: float, fn, arg):
+        self._at(self.now + dt, fn, arg)
+
+    # -- failures ----------------------------------------------------------
+    def _fail(self, spec: FailureSpec):
+        if spec.kind == "link":
+            a, b = spec.target
+            self._kill((a, b))
+            self._kill((b, a))
+        elif spec.kind == "switch":
+            for key in list(self.links):
+                if spec.target in key:
+                    self._kill(key)
+        elif spec.kind == "shadow_nic":
+            t = spec.target
+            host = t if isinstance(t, str) else self.topo.shadow_host_of[t]
+            leaf = self.topo.attach[host]
+            self._kill((leaf, host))
+            self._kill((host, leaf))
+        else:
+            raise ValueError(f"unknown failure kind {spec.kind!r}")
+
+    def _kill(self, key):
+        lk = self.links.get(key)
+        if lk is None or not lk.up:
+            return
+        lk.up = False
+        lk.epoch += 1
+        lk.busy = False
+        lost = list(lk.q)
+        lk.q.clear()
+        lk.qbytes = 0
+        if lk.sent_xoff:                # dead queue must release its PAUSEs
+            lk.sent_xoff = False
+            for f in self._feeders.get(lk.src, []):
+                self._after(self.pfc.pause_prop_s, self._resume, f)
+        for fr in lost:
+            self._lost(fr)
+
+    # -- loss / retransmission --------------------------------------------
+    def _lost(self, f: Frame):
+        if f.mirrored:
+            # the switch PRE keeps no state and shadow ACKs are dropped
+            # (§4.3.2): a lost mirror is an incomplete capture, not a retx
+            self.mirror_lost += f.n_frames
+            return
+        if f.retx >= self.max_retx:
+            self.undelivered += f.n_frames
+            return
+        f.retx += 1
+        self.retransmits += f.n_frames
+        self._after(self.retx_timeout, self._inject, f)
+
+    def _inject(self, f: Frame):
+        src_host = self.topo.host_of_rank[f.src]
+        self._enqueue(self.links[(src_host, self.topo.attach[src_host])], f)
+
+    # -- link machinery ----------------------------------------------------
+    def _enqueue(self, lk: _Link, f: Frame):
+        if not lk.up:
+            self._lost(f)
+            return
+        if lk.cap is not None and lk.qbytes + f.payload_len > lk.cap:
+            lk.drops += f.n_frames
+            self._lost(f)
+            return
+        lk.q.append(f)
+        lk.qbytes += f.payload_len
+        if (self.pfc.enabled and lk.cap is not None
+                and lk.qbytes >= lk.xoff and not lk.sent_xoff):
+            lk.sent_xoff = True
+            for feeder in self._feeders.get(lk.src, []):
+                self._after(self.pfc.pause_prop_s, self._pause, feeder)
+        self._try_tx(lk)
+
+    def _pause(self, lk: _Link):
+        lk.pause_count += 1
+        lk.pause_events += 1
+
+    def _resume(self, lk: _Link):
+        if lk.pause_count > 0:
+            lk.pause_count -= 1
+            lk.resume_events += 1
+            self._try_tx(lk)
+
+    def _try_tx(self, lk: _Link):
+        if lk.busy or lk.pause_count or not lk.q or not lk.up:
+            return
+        lk.busy = True
+        f = lk.q[0]
+        self._after(f.payload_len * 8 / lk.rate_bps, self._tx_done,
+                    (lk, lk.epoch))
+
+    def _tx_done(self, arg):
+        lk, epoch = arg
+        if epoch != lk.epoch:
+            return                      # link was killed mid-serialization
+        f = lk.q.popleft()
+        lk.qbytes -= f.payload_len
+        lk.busy = False
+        if lk.sent_xoff and lk.qbytes <= lk.xon:
+            lk.sent_xoff = False
+            for feeder in self._feeders.get(lk.src, []):
+                self._after(self.pfc.pause_prop_s, self._resume, feeder)
+        self._after(lk.prop, self._arrive, (f, lk.dst))
+        self._try_tx(lk)
+
+    # -- routing -----------------------------------------------------------
+    @staticmethod
+    def _ecmp_mix(a: int, b: int, c: int) -> int:
+        """Deterministic avalanche mix for ECMP flow hashing (a plain
+        linear combination keeps src/dst parity, which collapses all
+        adjacent-leaf ring flows onto one spine)."""
+        x = (a * 0x9E3779B1 + b * 0x85EBCA77 + c * 0xC2B2AE3D) & 0xFFFFFFFF
+        x ^= x >> 16
+        x = (x * 0x045D9F3B) & 0xFFFFFFFF
+        return x ^ (x >> 16)
+
+    def _route(self, sw: str, dst_host: str, f: Frame):
+        """Next hop from switch ``sw`` toward ``dst_host`` (None = no path).
+
+        Deterministic per-flow ECMP over spines with failover: the preferred
+        spine hashes (src leaf, dst leaf, source rank) so flows spread, and
+        a dead spine or uplink reroutes to the next live one.
+        """
+        topo = self.topo
+        leaf_dst = topo.attach[dst_host]
+        if sw == leaf_dst:
+            return dst_host if self.links[(sw, dst_host)].up else None
+        if sw in self._spine_set:
+            return leaf_dst if self.links[(sw, leaf_dst)].up else None
+        spines = topo.spines
+        i0 = self._ecmp_mix(self._leaf_idx[sw], self._leaf_idx[leaf_dst],
+                            f.src) % len(spines)
+        for k in range(len(spines)):
+            sp = spines[(i0 + k) % len(spines)]
+            if self.links[(sw, sp)].up and self.links[(sp, leaf_dst)].up:
+                if k:
+                    self.rerouted += f.n_frames
+                return sp
+        return None
+
+    # -- node arrival ------------------------------------------------------
+    def _arrive(self, arg):
+        f, node = arg
+        kind = self._kind[node]
+        if kind == _SWITCH:
+            replicate = (f.tagged and not f.mirrored
+                         and node == self._attach_of_rank[f.src])
+            out = self.dataplanes[node].process(f, self.rf,
+                                                replicate=replicate)
+            topo = self.topo
+            for g in out:
+                dst_host = (topo.shadow_host_of[g.dst] if g.mirrored
+                            else topo.host_of_rank[g.dst])
+                if g.mirrored and g is not f:
+                    g.t_send = self.now
+                nh = self._route(node, dst_host, g)
+                if nh is None:
+                    self._lost(g)
+                else:
+                    self._enqueue(self.links[(node, nh)], g)
+        elif kind == _HOST:
+            f.t_arrive = self.now
+            self._stat("ring", f)
+            self._host_recv(f)
+        else:
+            f.t_arrive = self.now
+            self._stat("mirror", f)
+            self._shadow_recv(node, f)
+            # the shadow's TCP stack ACKs; its leaf's data plane drops it
+            self.dataplanes[self.topo.attach[node]].process_ack()
+
+    def _stat(self, cls: str, f: Frame):
+        s = self._lat[cls]
+        d = self.now - f.t_send
+        s[0] += f.n_frames
+        s[1] += d * f.n_frames
+        s[2] = max(s[2], d)
+
+    def _host_recv(self, f: Frame):
+        rank = f.dst
+        rpg = self.topo.ranks_per_group
+        lr = rank - f.dp_group * rpg
+        rnd = (lr - f.chunk) % rpg if rpg > 1 else 0
+        acc = self._rx_round[rank]
+        got = acc.get(rnd, 0) + f.payload_len
+        acc[rnd] = got
+        if got < self.chunk_bytes or rnd in self._done_rounds[rank]:
+            return
+        self._done_rounds[rank].add(rnd)
+        g = f.dp_group
+        self._group_rounds_left[g] -= 1
+        if self._group_rounds_left[g] == 0:
+            self.group_done_s[g] = self.now
+        # ring dependency: receiving round t releases send of round t+1
+        while (self._send_next[rank] <= self.rounds - 1
+               and self._send_next[rank] - 1 in self._done_rounds[rank]):
+            t = self._send_next[rank]
+            self._send_next[rank] += 1
+            self._send_round(g, lr, t)
+
+    def _shadow_recv(self, node: str, f: Frame):
+        nid = self._shadow_id[node]
+        self.shadow_bytes[nid] += f.payload_len
+        key = (f.dp_group, f.channel, f.chunk, f.replica)
+        seen = self._cov.setdefault(key, {})
+        if f.payload_off in seen:
+            self.duplicate_mirror_bytes += min(seen[f.payload_off],
+                                               f.payload_len)
+        seen[f.payload_off] = max(seen.get(f.payload_off, 0), f.payload_len)
+
+    # -- workload ----------------------------------------------------------
+    def _send_round(self, g: int, lr: int, rnd: int):
+        topo = self.topo
+        rpg = topo.ranks_per_group
+        src = g * rpg + lr
+        dst = g * rpg + (lr + 1) % rpg
+        chunk = chunk_at(lr, rnd, rpg)
+        tagged = is_tagged(lr, rnd, rpg)
+        src_host = topo.host_of_rank[src]
+        lk = self.links[(src_host, topo.attach[src_host])]
+        off = 0
+        for ch in range(self.n_channels):
+            ev = self.schedule.get((g, rnd, lr, ch)) if tagged else None
+            for f in frames_for_chunk(
+                    src, dst, chunk=chunk, channel=ch,
+                    chunk_bytes=self.split[ch], start_seq=off,
+                    tagged=tagged,
+                    shadow_seq0=(ev.seq * self.split[ch]) if ev else -1,
+                    shadow_node=ev.shadow_node if ev else -1,
+                    dp_group=g, quantum=self.quantum):
+                f.t_send = self.now
+                self._enqueue(lk, f)
+            off += self.split[ch]
+
+    # -- run ---------------------------------------------------------------
+    def run(self) -> FabricResult:
+        topo = self.topo
+        for g in range(topo.n_dp_groups):
+            for lr in range(topo.ranks_per_group):
+                self._send_round(g, lr, 0)
+        heap = self._heap
+        while heap:
+            t, _s, fn, arg = heapq.heappop(heap)
+            if t > self.max_time:
+                break
+            self.now = t
+            self.events += 1
+            fn(arg)
+        return self._result()
+
+    def _result(self) -> FabricResult:
+        topo = self.topo
+        missing = 0
+        ok = True
+        for key, nbytes in self.expected.items():
+            got = sum(self._cov.get(key, {}).values())
+            if got != nbytes:
+                ok = False
+                missing += 1
+        total = SwitchCounters()
+        per_switch = {}
+        for name, dp in self.dataplanes.items():
+            per_switch[name] = dp.counters
+            total = total.merge(dp.counters)
+        ring_done = len(self.group_done_s) == topo.n_dp_groups
+        duration = (max(self.group_done_s.values())
+                    if self.group_done_s else self.now)
+        gbits = self.chunk_bytes * topo.ranks_per_group * 8
+        per_group_bw = [gbits / max(t, 1e-12) / 1e9
+                        for t in self.group_done_s.values()]
+        algbw = (sum(per_group_bw) / len(per_group_bw)) if per_group_bw \
+            else 0.0
+        n = topo.ranks_per_group
+        lat = {cls: (c, (s / c) if c else 0.0, mx)
+               for cls, (c, s, mx) in self._lat.items()}
+        return FabricResult(
+            topology=topo.name, n_ranks=topo.n_ranks,
+            n_dp_groups=topo.n_dp_groups, ranks_per_group=n,
+            n_shadow=topo.n_shadow, replication_factor=self.rf,
+            grad_bytes_per_group=self.chunk_bytes * n,
+            duration_s=duration, group_done_s=dict(self.group_done_s),
+            ring_completed=ring_done,
+            algo_bandwidth_gbps=algbw,
+            bus_bandwidth_gbps=algbw * (n - 1) / n if n > 1 else algbw,
+            rx_frames=total.rx_frames, tx_frames=total.tx_frames,
+            mirrored_frames=total.mirrored_frames,
+            tx_over_rx=total.tx_over_rx,
+            switch_counters=per_switch,
+            shadow_bytes=dict(self.shadow_bytes),
+            reassembled_ok=ok and ring_done,
+            missing_captures=missing,
+            duplicate_mirror_bytes=self.duplicate_mirror_bytes,
+            mirror_lost_frames=self.mirror_lost,
+            drops=sum(lk.drops for lk in self.links.values()),
+            retransmits=self.retransmits, rerouted=self.rerouted,
+            pfc_pauses=sum(lk.pause_events for lk in self.links.values()),
+            pfc_resumes=sum(lk.resume_events for lk in self.links.values()),
+            latency=lat, events=self.events)
+
+
+def simulate_fabric(n_dp_groups: int, ranks_per_group: int,
+                    grad_bytes_per_group: int, *,
+                    topology: str | Topology = "rail",
+                    n_shadow_nodes: int = 1, link_gbps: float = 100.0,
+                    replication_factor: int = 1, n_channels: int = 1,
+                    shadow_nics: int = 2, ranks_per_leaf: int = 32,
+                    n_spines: int = 2, spine_gbps: float | None = None,
+                    pfc: PfcConfig = PfcConfig(), failures=(),
+                    frame_quantum: int | None = None,
+                    retx_timeout_s: float = 100e-6, max_retx: int = 10,
+                    max_time_s: float = 30.0) -> FabricResult:
+    """Run one multi-DP-group AllGather iteration on a simulated fabric.
+
+    The main entry point for topology/replication sweeps; see the class
+    docstring of `FabricSimulator` for per-argument semantics and
+    docs/netsim.md for worked examples.
+    """
+    topo = topology if isinstance(topology, Topology) else build_topology(
+        n_dp_groups, ranks_per_group, n_shadow_nodes, topology=topology,
+        ranks_per_leaf=ranks_per_leaf, link_gbps=link_gbps,
+        spine_gbps=spine_gbps, shadow_nics=shadow_nics, n_spines=n_spines)
+    sim = FabricSimulator(
+        topo, grad_bytes_per_group=grad_bytes_per_group,
+        replication_factor=replication_factor, n_channels=n_channels,
+        pfc=pfc, failures=failures, frame_quantum=frame_quantum,
+        retx_timeout_s=retx_timeout_s, max_retx=max_retx,
+        max_time_s=max_time_s)
+    return sim.run()
+
+
+def sweep_replication(factors, **kw) -> list[FabricResult]:
+    """Fig 10 sweep: one fabric run per replication factor."""
+    return [simulate_fabric(replication_factor=f, **kw) for f in factors]
+
+
+def sweep_topology(names, **kw) -> dict:
+    """Same workload across topology flavors (rail vs strided vs single)."""
+    return {name: simulate_fabric(topology=name, **kw) for name in names}
+
+
+# ---------------------------------------------------------------------------
+# Compatibility wrapper + legacy reference model
+# ---------------------------------------------------------------------------
 
 @dataclass
 class SimResult:
@@ -50,11 +622,53 @@ def simulate_allgather_replication(
         shadow_drain_gbps: float | None = None,
         replication_factor: int = 1,
         n_channels: int = 1) -> SimResult:
-    """Simulate the AllGather phase of one iteration with tag replication.
+    """Single-switch, one-DP-group view of the fabric simulator.
+
+    Kept signature-compatible with the original per-round model (whose
+    arithmetic survives as `_legacy_simulate_allgather`): frame counters and
+    reassembly verdicts are identical; durations now come from the event
+    engine instead of the per-round max() approximation.
 
     grad_bytes: total reduced-gradient bytes (the AllGather payload).
     replication_factor: mirrors per tagged packet (Fig 10 sweeps this).
+    shadow_drain_gbps: aggregate shadow access rate (default: one NIC-bonded
+        link at ``link_gbps * shadow_nics``, §4.1.1).
     """
+    drain = shadow_drain_gbps or (link_gbps * shadow_nics)
+    topo = build_topology(1, n_ranks, n_shadow_nodes, topology="single",
+                          link_gbps=link_gbps,
+                          shadow_nics=max(1, round(drain / link_gbps)))
+    # exact drain override (bonded NICs may not divide evenly)
+    for (a, b), spec in list(topo.links.items()):
+        if a in topo.shadow_hosts or b in topo.shadow_hosts:
+            topo.links[(a, b)] = type(spec)(spec.src, spec.dst, drain,
+                                            spec.prop_s, spec.nics)
+    r = FabricSimulator(topo, grad_bytes_per_group=grad_bytes,
+                        replication_factor=replication_factor,
+                        n_channels=n_channels).run()
+    t = r.duration_s
+    algbw = (grad_bytes * 8 / t) / 1e9 if t else 0.0
+    return SimResult(
+        n_ranks=n_ranks, total_bytes=grad_bytes, duration_s=t,
+        bus_bandwidth_gbps=algbw * (n_ranks - 1) / n_ranks,
+        algo_bandwidth_gbps=algbw,
+        rx_frames=r.rx_frames, tx_frames=r.tx_frames,
+        tx_over_rx=r.tx_over_rx, mirrored_frames=r.mirrored_frames,
+        shadow_bytes=r.shadow_bytes, reassembled_ok=r.reassembled_ok,
+        pfc_pauses=r.pfc_pauses, drops=r.drops)
+
+
+def _legacy_simulate_allgather(
+        n_ranks: int,
+        grad_bytes: int,
+        link_gbps: float = 100.0,
+        n_shadow_nodes: int = 1,
+        shadow_nics: int = 2,
+        shadow_drain_gbps: float | None = None,
+        replication_factor: int = 1,
+        n_channels: int = 1) -> SimResult:
+    """The original per-round arithmetic model, kept as a regression oracle
+    for the event engine's counters (tests/test_fabric.py)."""
     chunk_bytes = grad_bytes // n_ranks
     control = SwitchControlPlane(1, n_ranks, n_shadow_nodes).setup()
     switch = SwitchDataPlane(control)
@@ -71,7 +685,8 @@ def simulate_allgather_replication(
     seqs = [0] * max(n_channels, 1)
     rounds = max(n_ranks - 1, 1)
     for rnd in range(rounds):
-        # every rank sends one chunk to its neighbour concurrently at line rate
+        # every rank sends one chunk to its neighbour concurrently at line
+        # rate
         link_time = chunk_bytes * 8 / (link_gbps * 1e9)
         shadow_round_bytes = {n: 0 for n in range(n_shadow_nodes)}
         for rank in range(n_ranks):
@@ -95,7 +710,8 @@ def simulate_allgather_replication(
                         shadow_rx[node][g.chunk] += g.payload_len
                         shadow_bytes[node] += g.payload_len
                         shadow_round_bytes[node] += g.payload_len
-                switch.counters.tx_frames += (replication_factor - 1) * (len(out) - 1)
+                switch.counters.tx_frames += \
+                    (replication_factor - 1) * (len(out) - 1)
         # round duration: slower of ring link vs shadow drain
         drain_times = [b * 8 / (shadow_drain_gbps * 1e9)
                        for b in shadow_round_bytes.values()] or [0.0]
@@ -114,7 +730,6 @@ def simulate_allgather_replication(
 
     # bus bandwidth convention (nccl-tests): busbw = algbw * 2(n-1)/n
     # AllGather moves (n-1)/n of the data per rank per phase.
-    total_moved = grad_bytes * (n_ranks - 1)
     algbw = (grad_bytes * 8 / t) / 1e9 if t else 0.0
     busbw = algbw * (n_ranks - 1) / n_ranks
 
@@ -129,3 +744,87 @@ def simulate_allgather_replication(
         reassembled_ok=ok,
         pfc_pauses=sum(q.pause_events for q in pfc.values()),
         drops=sum(q.dropped for q in pfc.values()))
+
+
+# ---------------------------------------------------------------------------
+# CLI: topology / replication sweeps
+# ---------------------------------------------------------------------------
+
+def _parse_kill(spec: str) -> FailureSpec:
+    """"link:leaf0:spine0@120" / "switch:spine1@80" / "shadow_nic:s0@50"
+    — the trailing number is the failure time in microseconds."""
+    body, _, at = spec.partition("@")
+    parts = body.split(":")
+    kind = parts[0]
+    try:
+        at_s = float(at) * 1e-6 if at else 0.0
+        if kind == "link":
+            return FailureSpec(at_s, "link", (parts[1], parts[2]))
+        if kind in ("switch", "shadow_nic"):
+            return FailureSpec(at_s, kind, parts[1])
+    except (IndexError, ValueError):
+        pass
+    raise ValueError(
+        f"bad --kill spec {spec!r}: expected link:A:B[@US], "
+        f"switch:NAME[@US], or shadow_nic:NAME[@US]")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(
+        description="Event-driven gradient-multicast fabric simulator "
+                    "(Checkmate §4 / Fig 10); see docs/netsim.md")
+    p.add_argument("--ranks", type=int, default=64,
+                   help="total training ranks across all DP groups")
+    p.add_argument("--dp-groups", type=int, default=2)
+    p.add_argument("--shadow-nodes", type=int, default=2)
+    p.add_argument("--topology", default="rail",
+                   choices=["single", "rail", "leaf-spine"])
+    p.add_argument("--ranks-per-leaf", type=int, default=16)
+    p.add_argument("--spines", type=int, default=2)
+    p.add_argument("--grad-kb", type=int, default=1024,
+                   help="reduced-gradient payload per DP group (KiB)")
+    p.add_argument("--link-gbps", type=float, default=100.0)
+    p.add_argument("--replication", default="1,2,4",
+                   help="comma-separated Fig 10 replication factors")
+    p.add_argument("--channels", type=int, default=1)
+    p.add_argument("--kill", action="append", default=[],
+                   metavar="KIND:TARGET[@US]",
+                   help="failure injection, e.g. link:leaf0:spine0@120, "
+                        "switch:spine1@80, shadow_nic:s0@50")
+    args = p.parse_args(argv)
+
+    if args.ranks % args.dp_groups:
+        p.error("--ranks must be divisible by --dp-groups")
+    rpg = args.ranks // args.dp_groups
+    try:
+        failures = tuple(_parse_kill(s) for s in args.kill)
+    except ValueError as e:
+        p.error(str(e))
+    factors = [int(x) for x in args.replication.split(",")]
+
+    hdr = (f"{'rf':>3} {'dur_us':>9} {'busbw':>8} {'tx/rx':>6} "
+           f"{'pauses':>6} {'drops':>5} {'retx':>5} {'rerte':>5} "
+           f"{'lost':>5} {'ok':>3}")
+    print(f"# {args.topology}: {args.ranks} ranks, {args.dp_groups} DP "
+          f"groups, {args.shadow_nodes} shadow nodes, "
+          f"{args.grad_kb} KiB/group"
+          + (f", failures={[str(k) for k in args.kill]}" if args.kill
+             else ""))
+    print(hdr)
+    for rf in factors:
+        r = simulate_fabric(
+            args.dp_groups, rpg, args.grad_kb * 1024,
+            topology=args.topology, n_shadow_nodes=args.shadow_nodes,
+            link_gbps=args.link_gbps, replication_factor=rf,
+            n_channels=args.channels, ranks_per_leaf=args.ranks_per_leaf,
+            n_spines=args.spines, failures=failures)
+        print(f"{rf:>3} {r.duration_s * 1e6:>9.1f} "
+              f"{r.bus_bandwidth_gbps:>8.1f} {r.tx_over_rx:>6.3f} "
+              f"{r.pfc_pauses:>6} {r.drops:>5} {r.retransmits:>5} "
+              f"{r.rerouted:>5} {r.mirror_lost_frames:>5} "
+              f"{'y' if r.reassembled_ok else 'N':>3}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

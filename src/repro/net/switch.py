@@ -5,9 +5,17 @@ assigned a multicast group and replicated by the PRE. Egress (for mirrored
 copies): rewrite the TCP sequence number to the shadow-stream counter from
 the custom option, and rewrite src/dst for the shadow node's TCP stream.
 ACKs from shadow nodes are dropped (the switch emulates the TCP server).
+
+In the multi-switch fabric simulator every leaf and spine instantiates its
+own ``SwitchDataPlane`` (own counters); the multicast/mirror rules are only
+installed — i.e. ``replicate=True`` — on the ingress leaf of each boundary
+rank, matching where the control plane (§4.3.1) programs the match-action
+table.  All counters are weighted by ``Frame.n_frames`` so coalesced frames
+report exact wire-frame counts.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 from repro.core.multicast import SwitchControlPlane
@@ -25,35 +33,59 @@ class SwitchCounters:
     def tx_over_rx(self) -> float:
         return self.tx_frames / self.rx_frames if self.rx_frames else 0.0
 
+    def merge(self, other: "SwitchCounters") -> "SwitchCounters":
+        """Aggregate counters across switches (fabric-wide totals)."""
+        return SwitchCounters(
+            rx_frames=self.rx_frames + other.rx_frames,
+            tx_frames=self.tx_frames + other.tx_frames,
+            mirrored_frames=self.mirrored_frames + other.mirrored_frames,
+            dropped_acks=self.dropped_acks + other.dropped_acks)
+
 
 class SwitchDataPlane:
+    """Match-action pipeline of one physical switch.
+
+    Args:
+        control: the fabric-wide control plane (match table + shadow map).
+        rank_to_dp: maps a global source rank to its DP group; defaults to
+            contiguous groups of ``control.ranks_per_group`` ranks.
+        name: switch id for per-switch counter reporting ("sw0", "leaf3",
+            "spine1", ...).
+    """
+
     def __init__(self, control: SwitchControlPlane,
-                 rank_to_dp=None):
+                 rank_to_dp=None, name: str = "sw0"):
         self.control = control
+        self.name = name
         self.counters = SwitchCounters()
         self.rank_to_dp = rank_to_dp or (
             lambda r: r // control.ranks_per_group)
 
-    def process(self, frame: Frame) -> list[Frame]:
-        """One ingress frame -> egress frames (forward + mirrors)."""
-        self.counters.rx_frames += 1
+    def process(self, frame: Frame, replication_factor: int = 1,
+                replicate: bool = True) -> list[Frame]:
+        """One ingress frame -> egress frames (forward + mirrors).
+
+        Args:
+            replication_factor: mirror copies per tagged frame (Fig 10
+                sweeps this); each copy gets a distinct ``replica`` index.
+            replicate: False on switches where the multicast rule is not
+                installed (spines / non-boundary leaves) — pure forwarding.
+        """
+        self.counters.rx_frames += frame.n_frames
         out = [frame]                            # normal L2 forward
-        if frame.tagged:
+        if replicate and frame.tagged and not frame.mirrored:
             dp = self.rank_to_dp(frame.src)
             group = self.control.lookup(dp, frame.src)
             if group is not None:
-                mirror = Frame(
-                    src=frame.src, dst=frame.shadow_node,
-                    payload_off=frame.payload_off,
-                    payload_len=frame.payload_len,
-                    chunk=frame.chunk, channel=frame.channel,
-                    # egress rewrite: shadow-stream sequence (§4.3.2)
-                    tcp_seq=frame.shadow_seq,
-                    tagged=True, shadow_seq=frame.shadow_seq,
-                    shadow_node=frame.shadow_node, mirrored=True)
-                out.append(mirror)
-                self.counters.mirrored_frames += 1
-        self.counters.tx_frames += len(out)
+                for rep in range(replication_factor):
+                    out.append(dataclasses.replace(
+                        frame,
+                        dst=frame.shadow_node,
+                        # egress rewrite: shadow-stream sequence (§4.3.2)
+                        tcp_seq=frame.shadow_seq,
+                        mirrored=True, replica=rep))
+                    self.counters.mirrored_frames += frame.n_frames
+        self.counters.tx_frames += sum(f.n_frames for f in out)
         return out
 
     def process_ack(self):

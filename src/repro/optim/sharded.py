@@ -4,7 +4,7 @@ The gradient all-reduce decomposes into reduce-scatter -> sharded update ->
 param all-gather. The reduce-scatter *output* is Checkmate's capture point:
 each device owns a disjoint slice of the final reduced gradients — the
 exactly-once property the paper builds heartbeat tagging for (§4.1) falls
-out of the output sharding (DESIGN.md §2).
+out of the output sharding (docs/ARCHITECTURE.md "capture point").
 
 For each leaf we shard the largest dim divisible by the DP extent (leaves
 with no such dim stay replicated — they are tiny).

@@ -1,6 +1,6 @@
 """Gradient compression x Checkmate consistency: when training applies
 int8+EF-compressed gradients, the shadow cluster receiving the SAME
-dequantized gradients stays bit-identical (DESIGN.md §6)."""
+dequantized gradients stays bit-identical (docs/ARCHITECTURE.md, shadow plane)."""
 import numpy as np
 
 import jax

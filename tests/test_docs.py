@@ -1,0 +1,22 @@
+"""Docs stay executable: every ``python`` fence in docs/*.md and README.md
+runs, and relative markdown links resolve (tools/check_docs.py — the same
+check the CI docs job runs)."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist_and_linked():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").exists()
+    assert (ROOT / "docs" / "netsim.md").exists()
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/netsim.md" in readme
+
+
+def test_doc_code_blocks_execute_and_links_resolve():
+    assert check_docs.main([]) == 0

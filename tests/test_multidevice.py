@@ -47,7 +47,7 @@ def test_pipeline_parallel_4stage():
 
 def test_rs_ag_capture_semantics():
     """ReduceScatter shard concatenation == AllReduce result (exactly-once
-    coverage of the reduced gradients, DESIGN.md §2)."""
+    coverage of the reduced gradients, docs/ARCHITECTURE.md)."""
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.dist.collectives import ring_all_reduce_rs_ag

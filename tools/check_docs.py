@@ -1,0 +1,94 @@
+"""Docs CI check: execute fenced ``python`` code blocks in docs/*.md and
+README.md, and verify that relative markdown links resolve.
+
+    PYTHONPATH=src python tools/check_docs.py [files...]
+
+Conventions:
+  * ```python blocks are executed top-to-bottom, each file in ONE shared
+    namespace (so a later block may use names a previous block defined);
+    a failing block reports its file and line.
+  * any other fence language (bash, text, ...) is skipped.
+  * links `[x](target)` with a non-http(s), non-anchor target must resolve
+    to an existing file/dir relative to the markdown file.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+FENCE = re.compile(r"^```(\w*)\s*$")
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def code_blocks(text: str):
+    """Yield (lang, start_line, source) for each fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m:
+            lang, start = m.group(1), i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield lang, start + 1, "\n".join(body)
+        i += 1
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    rel = path.relative_to(ROOT)
+
+    in_fence = False
+    for n, line in enumerate(text.splitlines(), 1):
+        if FENCE.match(line) or line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            target = target.split("#", 1)[0]
+            if target and not (path.parent / target).exists():
+                errors.append(f"{rel}:{n}: broken link -> {target}")
+
+    ns: dict = {"__name__": f"doccheck_{path.stem}"}
+    for lang, line, src in code_blocks(text):
+        if lang != "python":
+            continue
+        try:
+            exec(compile(src, f"{rel}:{line}", "exec"), ns)  # noqa: S102
+        except Exception as e:                    # report, keep checking
+            errors.append(f"{rel}:{line}: code block failed: "
+                          f"{type(e).__name__}: {e}")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    files = ([Path(a).resolve() for a in args] if args else
+             sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"])
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_files = len(files)
+    if errors:
+        print(f"check_docs: {len(errors)} error(s) across {n_files} files",
+              file=sys.stderr)
+        return 1
+    print(f"check_docs: {n_files} files ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

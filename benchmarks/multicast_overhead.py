@@ -1,8 +1,17 @@
 """Fig 10: replication-factor sweep on the packet simulator — AllReduce bus
-bandwidth and switch TX/RX frame counts (only tagged packets replicate)."""
+bandwidth and switch TX/RX frame counts (only tagged packets replicate) —
+plus per-channel send-side overhead (in-process vs packetized vs
+compressed) on the `GradientChannel` delivery API."""
 from __future__ import annotations
 
+import time
+
+import numpy as np
+
 from benchmarks.common import csv_row
+from repro.core.buckets import layout_for_tree
+from repro.core.channel import (CompressedChannel, InProcessChannel,
+                                PacketizedChannel, StepEvent)
 from repro.net.simulator import simulate_allgather_replication
 
 
@@ -20,6 +29,33 @@ def run():
                 f"drops={r.drops}")
     csv_row("fig10.busbw_constant", 0.0,
             f"{abs(base - r.bus_bandwidth_gbps) < 1e-6}")
+
+    # -- per-channel send-side overhead (capture critical path) --------------
+    rng = np.random.default_rng(0)
+    tree = {f"layer{i}.w": rng.standard_normal((256, 512)).astype(np.float32)
+            for i in range(8)}
+    layout = layout_for_tree(tree, cap_bytes=1 << 20)
+    channels = [
+        ("inprocess", InProcessChannel()),
+        ("packetized", PacketizedChannel(topology="rail-optimized",
+                                         n_dp_groups=2, ranks_per_group=4)),
+        ("compressed", CompressedChannel(InProcessChannel())),
+    ]
+    for name, chan in channels:
+        chan.open(layout)
+        chan.send(StepEvent(step=1, grads=tree, lr=1e-3))    # warmup
+        chan.poll()
+        reps = []
+        for r_i in range(3):
+            t0 = time.perf_counter()
+            chan.send(StepEvent(step=2 + r_i, grads=tree, lr=1e-3))
+            reps.append(time.perf_counter() - t0)
+        ds = chan.poll()
+        ok = all(d.complete for d in ds)
+        wire = ds[-1].wire_bytes
+        chan.close()
+        csv_row(f"channel_send.{name}", min(reps) * 1e6,
+                f"wire_bytes={wire} complete={ok}")
 
 
 if __name__ == "__main__":

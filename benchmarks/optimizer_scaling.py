@@ -11,6 +11,7 @@ import jax
 
 from benchmarks.common import bench_config, csv_row, smoke_env
 from repro.core.buckets import layout_for_tree
+from repro.core.channel import InProcessChannel, StepEvent
 from repro.core.shadow import ShadowCluster
 from repro.optim import OptimizerConfig
 from repro.train.step import make_train_state
@@ -30,7 +31,11 @@ def run():
     for nodes in (1, 2, 4, 8):
         shadow = ShadowCluster(layout, opt, n_nodes=nodes)
         shadow.bootstrap(params, zeros, zeros, 0)
-        shadow.on_gradients(1, 1e-3, grads)          # warmup (jit)
+        chan = InProcessChannel()
+        chan.open(layout)
+        chan.send(StepEvent(step=1, grads=grads, lr=1e-3))  # warmup (jit)
+        for d in chan.poll():
+            shadow.on_delivery(d)
         # measure each node's apply independently; the cluster-parallel time
         # is the max over nodes (they run on separate machines in the paper)
         flats = {b.bucket_id: np.ones(b.size, np.float32)

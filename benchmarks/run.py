@@ -1,6 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig6,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig6,...] [--smoke]
+
+``--smoke`` runs the fast, model-free subset (savings, multicast_overhead
++ channel send overhead) — CI runs it with the repo's own deprecation
+messages promoted to errors (scoped ``PYTHONWARNINGS`` filters) to prove
+the in-repo benchmark callers are migrated off deprecated APIs.
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
 Mapping to the paper:
@@ -35,11 +40,21 @@ MODULES = [
 ]
 
 
+SMOKE = {"savings", "multicast_overhead"}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"fast model-free subset: {sorted(SMOKE)}")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
+    if args.smoke:
+        only = SMOKE if not only else (only & SMOKE)
+        if not only:
+            ap.error(f"--only selects no smoke module; smoke set: "
+                     f"{sorted(SMOKE)}")
 
     print("name,us_per_call,derived")
     failures = []

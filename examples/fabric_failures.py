@@ -8,16 +8,18 @@ groups:
   1. spine kill     -> ECMP reroutes; ring and capture both complete.
   2. uplink cut     -> same, at smaller blast radius.
   3. shadow NIC cut -> training unaffected, but that iteration's capture is
-     incomplete; the shadow cluster skips the apply, and when the training
-     node later fails, `core.recovery` consolidates one step earlier and
-     the resumed run converges bit-identically.
+     incomplete; the PacketizedChannel surfaces it as a gated delivery, the
+     shadow cluster skips the apply, and when the training node later
+     fails, `core.recovery` consolidates one step earlier and the resumed
+     run converges bit-identically.
 """
 import numpy as np
 import jax
 
 import repro.configs as C
 from repro.core.buckets import layout_for_tree
-from repro.core.checkpoint import CaptureGatedCheckmateCheckpointer
+from repro.core.channel import PacketizedChannel
+from repro.core.checkpoint import CheckmateCheckpointer
 from repro.core.recovery import FailurePlan
 from repro.core.shadow import ShadowCluster
 from repro.dist.sharding import ShardingRules, make_smoke_mesh
@@ -52,8 +54,10 @@ def main():
           f"capture_ok={fab.reassembled_ok} "
           f"missing={fab.missing_captures}")
 
-    # couple the capture loss to training: iteration LOST's shadow apply is
-    # skipped; a training failure at LOST+1 then recovers from LOST-1
+    # couple the capture loss to training: the channel's own fabric loses
+    # iteration LOST mid-run (both shadow NICs cut), so its delivery is
+    # gated and the shadow apply skipped; a training failure at LOST+1
+    # then recovers from LOST-1
     LOST, steps, batch, seq, seed = 4, 8, 2, 16, 5
     cfg = C.get("tinyllama-1.1b").reduced()
     rules = ShardingRules(make_smoke_mesh())
@@ -64,19 +68,22 @@ def main():
     s0 = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
     shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=2)
     shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
-    lost = {LOST} if not fab.reassembled_ok else set()
+    channel = PacketizedChannel(topology="rail-optimized",
+                                n_dp_groups=2, ranks_per_group=4,
+                                failures_at={LOST: "capture"})
+    ck = CheckmateCheckpointer(shadow, channel=channel)
     state_b, stats = train(
         cfg, rules, steps=steps, batch=batch, seq=seq, opt=opt, seed=seed,
-        state=s0,
-        checkpointer=CaptureGatedCheckmateCheckpointer(shadow, lost),
+        state=s0, checkpointer=ck,
         failure_plan=FailurePlan((LOST + 1,)))
 
     same = all(np.array_equal(np.asarray(state_a.params[k]),
                               np.asarray(state_b.params[k]))
                for k in state_a.params)
     print(f"recovery     : recovered_at={stats.recovered_at} "
-          f"bit_identical={same}")
+          f"gated={ck.skipped_steps} bit_identical={same}")
     assert same and stats.recovered_at == [LOST - 1]
+    assert ck.skipped_steps == [LOST]
 
 
 if __name__ == "__main__":

@@ -2,6 +2,12 @@
 from the per-iteration shadow checkpoint, converges IDENTICALLY to an
 uninterrupted run — bit-for-bit.
 
+All gradients flow through a `PacketizedChannel` (buckets -> frames ->
+fabric -> reassembly). The second failure is compounded: the fabric loses
+step 11's capture mid-iteration (shadow-NIC cut), the channel reports a
+gated delivery, and when training fails at step 12 recovery lands on the
+last FULLY captured step (10) — no manual lost-step bookkeeping anywhere.
+
     PYTHONPATH=src python examples/failure_recovery.py
 """
 import numpy as np
@@ -9,6 +15,7 @@ import jax
 
 import repro.configs as C
 from repro.core.buckets import layout_for_tree
+from repro.core.channel import PacketizedChannel
 from repro.core.checkpoint import CheckmateCheckpointer
 from repro.core.recovery import FailurePlan
 from repro.core.shadow import ShadowCluster
@@ -29,13 +36,17 @@ def main():
     state_a, stats_a = train(cfg, rules, steps=steps, batch=batch, seq=seq,
                              opt=opt, seed=seed)
 
-    # Run B: failures at steps 6 and 12, recovery from shadow.
+    # Run B: training failures at steps 6 and 12; the fabric additionally
+    # loses step 11's capture, gating that delivery.
     s0 = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
     shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=2)
     shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
+    channel = PacketizedChannel(topology="rail-optimized",
+                                n_dp_groups=2, ranks_per_group=4,
+                                failures_at={11: "capture"})
+    ck = CheckmateCheckpointer(shadow, channel=channel)
     state_b, stats_b = train(cfg, rules, steps=steps, batch=batch, seq=seq,
-                             opt=opt, seed=seed, state=s0,
-                             checkpointer=CheckmateCheckpointer(shadow),
+                             opt=opt, seed=seed, state=s0, checkpointer=ck,
                              failure_plan=FailurePlan((6, 12)))
 
     same = all(np.array_equal(np.asarray(state_a.params[k]),
@@ -44,9 +55,13 @@ def main():
     print(f"run A losses: {[f'{l:.4f}' for l in stats_a.losses[-4:]]}")
     print(f"run B losses: {[f'{l:.4f}' for l in stats_b.losses[-4:]]}")
     print(f"failures={stats_b.failures} recoveries={stats_b.recoveries} "
-          f"recovered_at={stats_b.recovered_at}")
+          f"recovered_at={stats_b.recovered_at} "
+          f"gated_captures={ck.skipped_steps}")
     print(f"final states identical: {same}")
     assert same and stats_b.recoveries == 2
+    # fully-per-iteration recovery at 5; capture-gated recovery at 10
+    assert stats_b.recovered_at == [5, 10]
+    assert ck.skipped_steps == [11]
 
 
 if __name__ == "__main__":

@@ -2,7 +2,8 @@
 
 Runs on CPU in ~a minute. Shows the three-plane wiring:
   training plane  -> train_step returns reduce-scattered gradients,
-  network plane   -> bucketing + shadow routing (the multicast payload),
+  network plane   -> a PacketizedChannel packs buckets into MTU frames and
+                     routes them through the simulated multicast fabric,
   shadow plane    -> CPU nodes replay the functional optimizer per iteration.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -12,6 +13,7 @@ import jax
 
 import repro.configs as C
 from repro.core.buckets import layout_for_tree
+from repro.core.channel import PacketizedChannel
 from repro.core.checkpoint import CheckmateCheckpointer
 from repro.core.shadow import ShadowCluster
 from repro.dist.sharding import ShardingRules, make_smoke_mesh
@@ -32,9 +34,14 @@ def main():
     shadow = ShadowCluster(layout, opt, n_nodes=2, async_mode=True)
     shadow.bootstrap(state0.params, state0.mu, state0.nu, 0)
 
+    # Every gradient reaches the shadow plane through ONE channel: here the
+    # full paper dataflow (buckets -> frames -> fabric -> reassembly).
+    channel = PacketizedChannel(topology="rail-optimized",
+                                n_dp_groups=2, ranks_per_group=4)
     state, stats = train(
         cfg, rules, steps=20, batch=8, seq=64, opt=opt,
-        checkpointer=CheckmateCheckpointer(shadow), state=state0)
+        checkpointer=CheckmateCheckpointer(shadow, channel=channel),
+        state=state0)
 
     ckpt = shadow.consolidate()
     s = shadow.stats()

@@ -1,15 +1,21 @@
 from repro.core.tagging import (  # noqa: F401
-    chunk_at, is_tagged, tag_schedule, tagged_chunks_per_rank, TagEvent,
+    chunk_at, is_tagged, tag_schedule, tagged_chunks_per_rank,
+    TagEvent,
 )
 from repro.core.buckets import (  # noqa: F401
     Bucket, BucketLayout, build_buckets, pack_bucket, unpack_bucket,
 )
 from repro.core.multicast import (  # noqa: F401
-    MulticastGroup, SwitchControlPlane, assign_buckets,
+    MulticastGroup, SwitchControlPlane, assign_buckets, multicast_groups,
 )
-from repro.core.shadow import ShadowCluster, ShadowNode  # noqa: F401
+from repro.core.channel import (  # noqa: F401
+    CompressedChannel, Delivery, GradientChannel, InProcessChannel,
+    PacketizedChannel, StepEvent,
+)
+from repro.core.shadow import (  # noqa: F401
+    ConsolidationTimeout, ShadowCluster, ShadowNode,
+)
 from repro.core.checkpoint import (  # noqa: F401
-    CaptureGatedCheckmateCheckpointer,
     CheckmateCheckpointer, SyncCheckpointer, AsyncCheckpointer,
     ShardedAsyncCheckpointer, GeminiLikeCheckpointer, CheckFreqCheckpointer,
     NoCheckpointer,

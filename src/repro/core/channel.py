@@ -1,0 +1,369 @@
+"""GradientChannel: the single pluggable delivery API from the capture
+point to the shadow apply (paper §4).
+
+Every reduced gradient that reaches the shadow plane flows through one
+`GradientChannel`:
+
+    channel.open(layout, multicast_groups)   # once, before training
+    channel.send(StepEvent(...))             # per iteration, capture side
+    for d in channel.poll():                 # deliveries for the shadow side
+        shadow.on_delivery(d)                # (only complete captures apply)
+    channel.close()
+
+Three composable implementations ship here:
+
+* ``InProcessChannel``   — today's zero-copy reference hand-off (the
+                           delivery *is* the sender's gradient dict).
+* ``PacketizedChannel``  — the full paper dataflow: pack buckets
+                           (`core.buckets`), segment into MTU frames
+                           (`net.packets`), route through the event-driven
+                           fabric (`net.simulator.FabricSimulator`) with
+                           switch replication per the `core.multicast`
+                           group config, and reassemble the capture from
+                           the frames that actually arrived at the shadow
+                           hosts. An incomplete capture (e.g. a shadow-NIC
+                           failure mid-iteration, §4.3.2) surfaces as a
+                           gated ``Delivery`` (``complete=False``) — the
+                           shadow refuses the partial apply and recovery
+                           lands on the last fully-captured step.
+* ``CompressedChannel``  — wraps any channel with int8 + error-feedback
+                           gradient compression (`dist.compression`); the
+                           delivery carries the dequantized stream.
+
+Failure injection, compression, and topology choice are therefore
+orthogonal channel options, not bespoke checkpointer code paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.buckets import BucketLayout, pack_bucket, unpack_bucket
+from repro.core.multicast import MulticastGroup
+from repro.core.multicast import multicast_groups as _make_groups
+
+
+@dataclass(frozen=True)
+class StepEvent:
+    """Everything the capture point knows about one training iteration.
+
+    The checkpointer surface consumes this single frozen record
+    (``Checkpointer.on_step(event)``) instead of the legacy five-kwarg
+    signature.
+
+    Args:
+        step: 1-based training step the gradients belong to.
+        grads: reduced gradients (host tree) — the multicast payload; None
+            for checkpointers that copy state instead (baselines).
+        lr: learning rate the training step applied.
+        grad_scale: global-norm clipping scale the training step applied.
+        iter_time: wall-clock seconds of the iteration (overlap budgets).
+        state_fn: zero-arg callable producing a host snapshot of the full
+            TrainState — only copy-persist baselines call it.
+    """
+    step: int
+    grads: Optional[dict] = None
+    lr: float = 0.0
+    grad_scale: float = 1.0
+    iter_time: Optional[float] = None
+    state_fn: Optional[Callable[[], dict]] = None
+
+
+@dataclass
+class Delivery:
+    """One iteration's gradients as they arrived on the shadow side.
+
+    ``complete=False`` is a *gated* delivery: the transport could not
+    reassemble the full capture (lost mirror frames, dead shadow NIC);
+    ``grads`` is None and the shadow must not apply it.
+    """
+    step: int
+    lr: float
+    grad_scale: float
+    grads: Optional[dict]
+    complete: bool = True
+    missing_captures: int = 0
+    wire_bytes: int = 0
+    fabric: object = None          # FabricResult for packetized transports
+
+
+@runtime_checkable
+class GradientChannel(Protocol):
+    """Transport protocol between the capture point and the shadow plane.
+
+    ``send`` returns the *sender-visible stall seconds*: the critical-path
+    cost the training step pays to hand the capture off. Work the transport
+    performs off the sender's critical path — in-switch replication, wire
+    propagation, shadow-side reassembly — is not stall; the fabric's
+    virtual-time account lives in ``Delivery.fabric``.
+    """
+    name: str
+
+    def open(self, layout: BucketLayout,
+             multicast_groups: Optional[list[MulticastGroup]] = None
+             ) -> None: ...
+
+    def send(self, event: StepEvent) -> float: ...
+
+    def poll(self) -> list[Delivery]: ...
+
+    def close(self) -> None: ...
+
+
+class InProcessChannel:
+    """Zero-copy reference hand-off (the legacy in-process shortcut).
+
+    ``send`` enqueues the sender's gradient dict by reference;
+    ``Delivery.grads`` *is* ``event.grads``. ``wire_bytes`` is 0 — nothing
+    crossed a wire.
+    """
+    name = "inprocess"
+
+    def __init__(self):
+        self._layout: Optional[BucketLayout] = None
+        self._pending: list[Delivery] = []
+
+    def open(self, layout, multicast_groups=None):
+        self._layout = layout
+
+    def send(self, event: StepEvent) -> float:
+        assert event.grads is not None, "channels carry gradients"
+        t0 = time.perf_counter()
+        self._pending.append(Delivery(
+            step=event.step, lr=event.lr, grad_scale=event.grad_scale,
+            grads=event.grads, complete=True))
+        return time.perf_counter() - t0
+
+    def poll(self) -> list[Delivery]:
+        out, self._pending = self._pending, []
+        return out
+
+    def close(self):
+        self._pending.clear()
+
+
+def _canon_topology(name: str) -> str:
+    aliases = {"rail-optimized": "rail", "rail": "rail",
+               "strided": "leaf-spine", "leaf-spine": "leaf-spine",
+               "single": "single"}
+    if name not in aliases:
+        raise ValueError(f"unknown topology {name!r}; "
+                         f"expected one of {sorted(set(aliases))}")
+    return aliases[name]
+
+
+class PacketizedChannel:
+    """Deliver gradients through the event-driven fabric simulator.
+
+    Per ``send``: the gradient tree is packed into DDP buckets, laid out
+    as one contiguous wire buffer, split across DP groups, segmented into
+    MTU frames and pushed through one AllGather iteration of
+    `FabricSimulator` — boundary-rank frames are DSCP-tagged, the ingress
+    leaf's match-action table replicates them toward the shadow hosts, and
+    the channel reassembles the capture from the frames that actually
+    arrived (via the simulator's frame-level injection/extraction hooks).
+
+    Args:
+        topology: "rail-optimized" (alias "rail"), "leaf-spine" (alias
+            "strided"), or "single" — see `repro.net.planner`.
+        n_dp_groups / ranks_per_group: fabric workload shape; the wire
+            buffer is split evenly across groups.
+        n_shadow_nodes: shadow hosts on the fabric (transport view; the
+            `ShadowCluster` node count is independent).
+        replication_factor / n_channels / link_gbps / ranks_per_leaf /
+            n_spines / shadow_nics / pfc / frame_quantum: forwarded to the
+            simulator (see `FabricSimulator`).
+        failures_at: ``{step: failures}`` fabric failure injection; each
+            entry fires once (the failed hardware is replaced before the
+            post-recovery rerun). ``failures`` is a `FailureSpec` sequence,
+            or the string ``"capture"`` — cut every shadow NIC at t=0, so
+            the ring completes but that step's capture is lost.
+    """
+    name = "packetized"
+
+    def __init__(self, *, topology: str = "rail-optimized",
+                 n_dp_groups: int = 1, ranks_per_group: int = 4,
+                 n_shadow_nodes: int = 2, replication_factor: int = 1,
+                 n_channels: int = 1, link_gbps: float = 100.0,
+                 ranks_per_leaf: int = 32, n_spines: int = 2,
+                 shadow_nics: int = 2, pfc=None,
+                 frame_quantum: Optional[int] = None,
+                 failures_at: Optional[dict] = None):
+        self.topology = _canon_topology(topology)
+        self.n_dp_groups = n_dp_groups
+        self.ranks_per_group = ranks_per_group
+        self.n_shadow_nodes = n_shadow_nodes
+        self.replication_factor = replication_factor
+        self.n_channels = n_channels
+        self.link_gbps = link_gbps
+        self.ranks_per_leaf = ranks_per_leaf
+        self.n_spines = n_spines
+        self.shadow_nics = shadow_nics
+        self.pfc = pfc
+        self.frame_quantum = frame_quantum
+        self.failures_at = dict(failures_at or {})
+        self._layout: Optional[BucketLayout] = None
+        self._topo = None
+        self._groups: Optional[list[MulticastGroup]] = None
+        self._pending: list[Delivery] = []
+
+    def open(self, layout, multicast_groups=None):
+        from repro.net.planner import build_topology
+        self._layout = layout
+        self._topo = build_topology(
+            self.n_dp_groups, self.ranks_per_group, self.n_shadow_nodes,
+            topology=self.topology, ranks_per_leaf=self.ranks_per_leaf,
+            link_gbps=self.link_gbps, shadow_nics=self.shadow_nics,
+            n_spines=self.n_spines)
+        self._groups = (multicast_groups if multicast_groups is not None
+                        else _make_groups(self.n_dp_groups,
+                                          self.ranks_per_group,
+                                          self.n_shadow_nodes))
+
+    def _failures_for(self, step: int):
+        from repro.net.simulator import FailureSpec
+        spec = self.failures_at.pop(step, None)      # each failure fires once
+        if spec is None:
+            return ()
+        if spec == "capture":
+            return tuple(FailureSpec(0.0, "shadow_nic", h)
+                         for h in self._topo.shadow_hosts)
+        if isinstance(spec, FailureSpec):
+            return (spec,)
+        return tuple(spec)
+
+    def send(self, event: StepEvent) -> float:
+        from repro.net.pfc import PfcConfig
+        from repro.net.simulator import FabricSimulator
+        assert self._layout is not None, "open() before send()"
+        assert event.grads is not None, "channels carry gradients"
+
+        # pack buckets -> one contiguous wire buffer, padded so it splits
+        # evenly into n_dp_groups payloads of rpg whole chunks each
+        buckets = self._layout.buckets
+        flats = [np.ascontiguousarray(pack_bucket(b, event.grads, xp=np))
+                 for b in buckets]
+        metas = [(a.dtype, a.size, a.nbytes) for a in flats]
+        nraw = sum(a.nbytes for a in flats)
+        n_g, rpg = self.n_dp_groups, self.ranks_per_group
+        per = -(-max(nraw, n_g * rpg) // (n_g * rpg)) * rpg
+        total = per * n_g
+        src_buf = bytearray(total)
+        src = memoryview(src_buf)
+        ofs = 0
+        for a in flats:                  # single copy, straight into the wire
+            src[ofs:ofs + a.nbytes] = memoryview(a).cast("B")
+            ofs += a.nbytes
+        rx_buf = bytearray(total)
+        rx = memoryview(rx_buf)
+
+        sim = FabricSimulator(
+            self._topo, grad_bytes_per_group=per,
+            replication_factor=self.replication_factor,
+            n_channels=self.n_channels,
+            pfc=self.pfc if self.pfc is not None else PfcConfig(),
+            failures=self._failures_for(event.step),
+            frame_quantum=self.frame_quantum)
+
+        def frame_tx(f):                     # injection: slice real bytes in
+            off = f.dp_group * per + sim.wire_offset(f)
+            f.payload = src[off:off + f.payload_len]
+
+        def shadow_rx(node_id, f):           # extraction: reassemble capture
+            off = f.dp_group * per + sim.wire_offset(f)
+            rx[off:off + f.payload_len] = f.payload
+
+        sim.frame_tx_hook = frame_tx
+        sim.shadow_rx_hook = shadow_rx
+        result = sim.run()
+
+        grads = None
+        if result.reassembled_ok:
+            grads = {}
+            cum = 0
+            for b, (dtype, size, nbytes) in zip(buckets, metas):
+                # zero-copy view into the freshly-allocated rx buffer, which
+                # the delivery's arrays keep alive
+                flat = np.frombuffer(rx_buf, dtype=dtype, count=size,
+                                     offset=cum)
+                grads.update(unpack_bucket(b, flat, xp=np))
+                cum += nbytes
+        self._pending.append(Delivery(
+            step=event.step, lr=event.lr, grad_scale=event.grad_scale,
+            grads=grads, complete=result.reassembled_ok,
+            missing_captures=result.missing_captures,
+            wire_bytes=total * self.replication_factor, fabric=result))
+        # Zero sender-visible stall (§4 zero-overhead claim): the gradient
+        # frames ride the ring AllGather training performs anyway, and
+        # replication happens in-switch. The event loop above is simulation
+        # cost on this host — its virtual-time account is Delivery.fabric.
+        return 0.0
+
+    def poll(self) -> list[Delivery]:
+        out, self._pending = self._pending, []
+        return out
+
+    def close(self):
+        self._pending.clear()
+        self._topo = None
+
+
+class CompressedChannel:
+    """Wrap any channel with int8 + error-feedback gradient compression.
+
+    ``send`` quantizes the gradient tree (`dist.compression.Compressor`,
+    residuals carried across iterations) and forwards the *dequantized*
+    stream to the inner channel — exactly what a compressed multicast
+    payload delivers. The shadow replica therefore tracks the compressed
+    stream; divergence from raw-gradient training is bounded by the
+    error-feedback invariant (tests/test_compression_shadow.py).
+
+    Quantization runs on the sender's critical path, so ``send`` charges it
+    as stall (plus the inner channel's). ``Delivery.wire_bytes`` reports
+    the *compressed* payload (int8 + per-leaf scale) — what a compressed
+    multicast puts on the wire — even when the inner transport ships the
+    dequantized f32 stand-in.
+
+    The error-feedback residual assumes every sent payload is eventually
+    consumed; a lossy inner transport is safe because the checkpointer
+    enforces stream contiguity — a gated delivery freezes the shadow until
+    a full-state resync or recovery, so quantized mass is never silently
+    dropped from the stream the shadow applies.
+    """
+    name = "compressed"
+
+    def __init__(self, inner: Optional[GradientChannel] = None):
+        from repro.dist.compression import Compressor
+        self.inner: GradientChannel = (inner if inner is not None
+                                       else InProcessChannel())
+        self.compressor = Compressor()
+        self.name = f"compressed[{self.inner.name}]"
+        self._sent_bytes: dict[int, int] = {}
+
+    def open(self, layout, multicast_groups=None):
+        self.inner.open(layout, multicast_groups)
+
+    def send(self, event: StepEvent) -> float:
+        assert event.grads is not None, "channels carry gradients"
+        t0 = time.perf_counter()
+        before = self.compressor.wire_bytes_total
+        deq = self.compressor.compress(event.grads)
+        deq = {k: np.asarray(v) for k, v in deq.items()}
+        self._sent_bytes[event.step] = (self.compressor.wire_bytes_total
+                                        - before)
+        stall = time.perf_counter() - t0
+        return stall + self.inner.send(dataclasses.replace(event, grads=deq))
+
+    def poll(self) -> list[Delivery]:
+        out = self.inner.poll()
+        for d in out:
+            d.wire_bytes = self._sent_bytes.pop(d.step, d.wire_bytes)
+        return out
+
+    def close(self):
+        self._sent_bytes.clear()
+        self.inner.close()

@@ -14,22 +14,32 @@ CPU-wall-clock benchmark harness reproduces the paper's relative overheads:
                                  hidden by the per-iteration overlap budget
   * ``CheckFreqCheckpointer``  — async + profiling that tunes frequency so
                                  overhead stays under a target fraction
-  * ``CheckmateCheckpointer``  — hands the already-captured reduced gradients
-                                 to the shadow cluster; zero training stall
+  * ``CheckmateCheckpointer``  — sends the already-captured reduced gradients
+                                 through a `GradientChannel` to the shadow
+                                 cluster; zero training stall
 
-The training loop calls ``on_step`` every iteration and adds the returned
-stall seconds to its critical path.
+The training loop calls ``on_step(event)`` every iteration with a single
+frozen `repro.core.channel.StepEvent` and adds the returned stall seconds to
+its critical path. The legacy five-kwarg signature
+(``on_step(step, state_fn=..., grads=..., lr=..., ...)``) still works for
+one release but emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import io
 import threading
 import time
-from typing import Callable, Optional
+import warnings
+from typing import Optional
 
 import numpy as np
 
+from repro.core.channel import (GradientChannel, InProcessChannel, StepEvent)
 from repro.core.shadow import ShadowCluster
+
+_ON_STEP_DEPRECATION = (
+    "Checkpointer.on_step(step, state_fn=..., grads=..., ...) is "
+    "deprecated; pass a single repro.core.channel.StepEvent instead")
 
 
 def _flatten_state(state: dict) -> list[np.ndarray]:
@@ -54,22 +64,50 @@ class BaseCheckpointer:
     def __init__(self, freq: int = 1):
         self.freq = max(1, freq)
         self.n_checkpoints = 0
+        self.skipped_captures = 0
         self.stall_total = 0.0
         self._latest: Optional[dict] = None
 
-    def on_step(self, step: int, *, state_fn: Callable[[], dict],
-                grads=None, lr: float = 0.0, grad_scale: float = 1.0,
-                iter_time: Optional[float] = None) -> float:
-        if step % self.freq != 0:
+    @staticmethod
+    def _coerce_event(event, legacy: dict) -> StepEvent:
+        """Accept the new single-StepEvent call or the deprecated kwargs."""
+        if isinstance(event, StepEvent):
+            if legacy:
+                raise TypeError(
+                    f"on_step(StepEvent) takes no extra kwargs: "
+                    f"{sorted(legacy)}")
+            return event
+        warnings.warn(_ON_STEP_DEPRECATION, DeprecationWarning, stacklevel=3)
+        return StepEvent(step=int(event), grads=legacy.get("grads"),
+                         lr=legacy.get("lr", 0.0),
+                         grad_scale=legacy.get("grad_scale", 1.0),
+                         iter_time=legacy.get("iter_time"),
+                         state_fn=legacy.get("state_fn"))
+
+    def on_step(self, event, **legacy) -> float:
+        """Consume one iteration; returns stall seconds on the critical
+        path. A gated capture (``_checkpoint`` returning False) produces NO
+        checkpoint: it is counted in ``skipped_captures`` and contributes
+        neither to ``n_checkpoints`` nor to the stall accounting."""
+        event = self._coerce_event(event, legacy)
+        if event.step % self.freq != 0:
             return 0.0
         t0 = time.perf_counter()
-        self._checkpoint(step, state_fn, grads, lr, grad_scale, iter_time)
-        stall = time.perf_counter() - t0
+        captured = self._checkpoint(event)
+        if captured is False:
+            self.skipped_captures += 1
+            return 0.0
+        stall = (captured if isinstance(captured, float)
+                 else time.perf_counter() - t0)
         self.stall_total += stall
         self.n_checkpoints += 1
         return stall
 
-    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
+    def _checkpoint(self, event: StepEvent):
+        """Perform one capture; return False if it was gated/skipped, or a
+        float to charge that exact stall instead of the wall time of this
+        call (transports that do off-critical-path work, e.g. a simulated
+        fabric, report their sender-visible cost this way)."""
         raise NotImplementedError
 
     def restore(self) -> Optional[dict]:
@@ -82,7 +120,7 @@ class BaseCheckpointer:
 class NoCheckpointer(BaseCheckpointer):
     name = "no_checkpoint"
 
-    def on_step(self, step, **kw) -> float:
+    def on_step(self, event=None, **legacy) -> float:
         return 0.0
 
 
@@ -93,8 +131,8 @@ class SyncCheckpointer(BaseCheckpointer):
         super().__init__(freq)
         self._sink = io.BytesIO()
 
-    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
-        state = state_fn()                       # device -> host copy
+    def _checkpoint(self, event: StepEvent):
+        state = event.state_fn()                 # device -> host copy
         leaves = [np.copy(a) for a in _flatten_state(state)]   # clone
         _persist(leaves, self._sink)             # persist inline
         self._latest = state
@@ -108,10 +146,10 @@ class AsyncCheckpointer(BaseCheckpointer):
         self._sink = io.BytesIO()
         self._thread: Optional[threading.Thread] = None
 
-    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
+    def _checkpoint(self, event: StepEvent):
         if self._thread is not None:
             self._thread.join()                  # previous persist must finish
-        state = state_fn()
+        state = event.state_fn()
         leaves = [np.copy(a) for a in _flatten_state(state)]
         self._latest = state
         self._thread = threading.Thread(
@@ -132,10 +170,10 @@ class ShardedAsyncCheckpointer(AsyncCheckpointer):
         super().__init__(freq)
         self.n_shards = n_shards
 
-    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
+    def _checkpoint(self, event: StepEvent):
         if self._thread is not None:
             self._thread.join()
-        state = state_fn()
+        state = event.state_fn()
         # this node's shard: 1/N of every leaf (flattened prefix slice)
         leaves = []
         for a in _flatten_state(state):
@@ -165,14 +203,14 @@ class GeminiLikeCheckpointer(BaseCheckpointer):
         self.replication = replication
         self._remote: list[np.ndarray] = []
 
-    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
-        state = state_fn()
+    def _checkpoint(self, event: StepEvent):
+        state = event.state_fn()
         leaves = _flatten_state(state)
         nbytes = sum(a.nbytes for a in leaves) * self.replication
         self._remote = [np.copy(a) for a in leaves]      # the real copy
         self._latest = state
         transfer = nbytes * 8 / (self.network_gbps * 1e9)
-        budget = (iter_time or 0.0) * self.overlap_fraction
+        budget = (event.iter_time or 0.0) * self.overlap_fraction
         residual = max(0.0, transfer - budget)
         time.sleep(min(residual, 0.25))                  # bounded for benches
 
@@ -190,17 +228,16 @@ class CheckFreqCheckpointer(AsyncCheckpointer):
         self._iter_times: list[float] = []
         self.tuned_freq: Optional[int] = None
 
-    def on_step(self, step, *, state_fn, grads=None, lr=0.0, grad_scale=1.0,
-                iter_time=None) -> float:
-        if iter_time:
-            self._iter_times.append(iter_time)
+    def on_step(self, event, **legacy) -> float:
+        event = self._coerce_event(event, legacy)
+        if event.iter_time:
+            self._iter_times.append(event.iter_time)
         if self.tuned_freq is None and len(self._profiled) >= self.profile_steps:
             ovh = float(np.mean(self._profiled))
             it = float(np.mean(self._iter_times)) if self._iter_times else 1.0
             self.tuned_freq = max(1, int(np.ceil(ovh / (self.target * it))))
             self.freq = self.tuned_freq
-        stall = super().on_step(step, state_fn=state_fn, grads=grads, lr=lr,
-                                grad_scale=grad_scale, iter_time=iter_time)
+        stall = super().on_step(event)
         if self.tuned_freq is None and stall > 0:
             self._profiled.append(stall)
         return stall
@@ -210,49 +247,80 @@ class CheckmateCheckpointer(BaseCheckpointer):
     """Per-iteration checkpointing with zero training stall.
 
     The reduced gradients are an *output of the train step* (the RS capture
-    point, docs/ARCHITECTURE.md) — handing them to the shadow cluster is a
-    pointer
-    enqueue; the optimizer replay happens on shadow CPU threads off the
-    training critical path.
+    point, docs/ARCHITECTURE.md); ``on_step`` sends them into a
+    `GradientChannel` (default: `InProcessChannel`, the zero-copy reference
+    hand-off) and applies the channel's deliveries to the shadow cluster —
+    the optimizer replay happens on shadow CPU threads off the training
+    critical path. The stall charged per step is the channel's
+    sender-visible send cost (``GradientChannel.send``'s return value), so
+    a `PacketizedChannel`'s event-loop wall time — host CPU *simulating*
+    the network — is never booked as training stall.
+
+    A gated delivery (incomplete capture reported by the transport, e.g. a
+    `PacketizedChannel` whose fabric lost mirror frames, §4.3.2) is NOT
+    applied and NOT counted as a checkpoint — and it *desynchronizes* the
+    stream: the shadow replays a contiguous gradient sequence, so applying
+    step k+1 onto a replica missing step k would manufacture a state that
+    never existed in training. While desynced the shadow stays frozen at
+    the last fully-captured step (``skipped_steps`` records every refused
+    step) until one of two resync points:
+
+    * the next ``on_step`` whose event carries ``state_fn`` — the
+      checkpointer takes a full-state copy (charged as that step's stall,
+      like a sync checkpoint) and the stream resumes from it;
+    * ``restore()`` — recovery rewinds training to exactly the shadow's
+      state, so the resumed stream is contiguous again by construction.
     """
     name = "checkmate"
 
-    def __init__(self, shadow: ShadowCluster):
+    def __init__(self, shadow: ShadowCluster,
+                 channel: Optional[GradientChannel] = None):
         super().__init__(freq=1)
         self.shadow = shadow
+        self.channel: GradientChannel = (channel if channel is not None
+                                         else InProcessChannel())
+        self.channel.open(shadow.layout)
+        self.skipped_steps: list[int] = []
+        self._desynced = False
 
-    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
-        assert grads is not None, "Checkmate consumes captured gradients"
-        self.shadow.on_gradients(step, lr, grads, grad_scale)
+    def _apply_deliveries(self):
+        for d in self.channel.poll():
+            if not d.complete:
+                self._desynced = True
+                self.skipped_steps.append(d.step)
+            elif self._desynced:         # contiguity: refuse post-gap applies
+                self.skipped_steps.append(d.step)
+            else:
+                self.shadow.on_delivery(d)
+
+    def _checkpoint(self, event: StepEvent):
+        t0 = time.perf_counter()
+        if self._desynced:
+            if event.state_fn is None:
+                self.skipped_steps.append(event.step)
+                return False             # frozen until resync or recovery
+            self.channel.poll()          # superseded by the full-state copy
+            snap = event.state_fn()
+            self.shadow.bootstrap(snap["params"], snap["mu"], snap["nu"],
+                                  int(snap["step"]))
+            self._desynced = False
+            return time.perf_counter() - t0
+        assert event.grads is not None, "Checkmate consumes captured gradients"
+        stall = float(self.channel.send(event) or 0.0)
+        t1 = time.perf_counter()
+        self._apply_deliveries()
+        if self._desynced:
+            return False
+        # the sender-visible channel cost plus the inline hand-off/apply
+        # (sync-mode shadows run the optimizer on this thread)
+        return stall + (time.perf_counter() - t1)
 
     def restore(self) -> Optional[dict]:
-        return self.shadow.consolidate()
+        out = self.shadow.consolidate()
+        self._desynced = False           # training rewinds to this state
+        return out
 
     def finalize(self):
+        self._apply_deliveries()
+        self.channel.close()
         self.shadow.consolidate()
-
-
-class CaptureGatedCheckmateCheckpointer(CheckmateCheckpointer):
-    """Checkmate checkpointer that skips iterations whose network capture
-    was incomplete.
-
-    The fabric simulator (`repro.net.simulator`) reports incomplete
-    captures (e.g. a shadow-NIC failure mid-iteration: mirrored copies are
-    not retransmitted, §4.3.2) via ``FabricResult.reassembled_ok``. Feeding
-    the affected step numbers here models the shadow cluster refusing a
-    partial apply; recovery then consolidates at the last fully-captured
-    step. Each lost step fires once — the failed hardware is replaced
-    before the post-recovery rerun, exactly like `recovery.FailurePlan`.
-    """
-    name = "checkmate_gated"
-
-    def __init__(self, shadow: ShadowCluster, lost_steps=()):
-        super().__init__(shadow)
-        self.lost = set(lost_steps)
-
-    def _checkpoint(self, step, state_fn, grads, lr, grad_scale, iter_time):
-        if step in self.lost:
-            self.lost.discard(step)
-            return
-        super()._checkpoint(step, state_fn, grads, lr, grad_scale,
-                            iter_time)

@@ -86,6 +86,19 @@ class SwitchControlPlane:
         return 2 * self.n_dp_groups
 
 
+def multicast_groups(n_dp_groups: int, ranks_per_group: int,
+                     n_shadow_nodes: int) -> list[MulticastGroup]:
+    """The fabric's multicast group set, without holding a control plane.
+
+    Convenience for `GradientChannel.open(layout, multicast_groups)`: a
+    channel only needs the group list (who replicates, to which shadow
+    nodes); the stateful match-action table stays inside the simulator's
+    own `SwitchControlPlane`.
+    """
+    return SwitchControlPlane(
+        n_dp_groups, ranks_per_group, n_shadow_nodes).setup().groups
+
+
 def assign_buckets(layout: BucketLayout, n_nodes: int) -> dict[int, int]:
     """bucket_id -> shadow node, byte-balanced greedy partition (§4.2.4).
 

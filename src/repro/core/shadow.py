@@ -21,6 +21,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -30,8 +31,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.buckets import BucketLayout, pack_bucket, unpack_bucket
+from repro.core.channel import Delivery, InProcessChannel, StepEvent
 from repro.core.multicast import assign_buckets
 from repro.optim.functional import OptimizerConfig, UPDATE_FNS
+
+
+class ConsolidationTimeout(RuntimeError):
+    """Consolidation hit its deadline with shadow nodes still applying.
+
+    Carries the lagging node ids and a partial checkpoint. Each node's
+    partition is snapshotted apply-atomically (never torn between params
+    and moments), but lagging partitions are at older steps than the rest:
+    ``partial["step"]`` is the min across nodes, and the tree as a whole is
+    only globally consistent once every node has reached that step — use
+    the partial for diagnosis, retry consolidation for recovery."""
+
+    def __init__(self, lagging_nodes: list[int], partial: dict):
+        super().__init__(
+            f"shadow consolidation timed out; lagging nodes: "
+            f"{lagging_nodes} (partial checkpoint at step "
+            f"{partial.get('step')})")
+        self.lagging_nodes = lagging_nodes
+        self.partial = partial
 
 
 class ShadowNode:
@@ -53,6 +74,9 @@ class ShadowNode:
         self.nu: dict[str, jnp.ndarray] = {}
         self.step = 0
         self.apply_times: list[float] = []
+        # guards the params/mu/nu/step install so a consolidation snapshot
+        # never sees a torn partition (params at t+1, moments at t)
+        self.state_lock = threading.Lock()
         self._update = jax.jit(self._update_fn)
 
     # -- state ---------------------------------------------------------------
@@ -85,10 +109,11 @@ class ShadowNode:
         p, m, v = self._update(self.params, self.mu, self.nu, grads,
                                jnp.float32(step), jnp.float32(lr),
                                jnp.float32(grad_scale))
-        self.params.update(p)
-        self.mu.update(m)
-        self.nu.update(v)
-        self.step = step
+        with self.state_lock:
+            self.params.update(p)
+            self.mu.update(m)
+            self.nu.update(v)
+            self.step = step
         self.apply_times.append(time.perf_counter() - t0)
 
 
@@ -159,9 +184,33 @@ class ShadowCluster:
             node.bootstrap(params, mu, nu, step)
         self.train_step_seen = int(step)
 
+    def on_delivery(self, delivery: Delivery):
+        """Consume one channel delivery (the ONLY gradient ingress).
+
+        Gated deliveries (``complete=False``) must be filtered by the
+        caller — the shadow refuses a partial apply.
+        """
+        if not delivery.complete:
+            raise ValueError(
+                f"refusing gated delivery for step {delivery.step}: "
+                f"capture incomplete ({delivery.missing_captures} missing)")
+        self._ingest(delivery.step, delivery.lr, delivery.grads,
+                     delivery.grad_scale)
+
     def on_gradients(self, step: int, lr: float, grads: dict,
                      grad_scale: float = 1.0):
-        """Deliver one iteration's reduced gradients (the multicast payload).
+        """Deprecated direct hand-off; route gradients through a
+        `repro.core.channel.GradientChannel` and `on_delivery` instead."""
+        warnings.warn(
+            "ShadowCluster.on_gradients is deprecated; deliver gradients "
+            "through a repro.core.channel.GradientChannel and call "
+            "ShadowCluster.on_delivery",
+            DeprecationWarning, stacklevel=2)
+        self._ingest(step, lr, grads, grad_scale)
+
+    def _ingest(self, step: int, lr: float, grads: dict,
+                grad_scale: float = 1.0):
+        """Apply one iteration's reduced gradients to every node.
 
         Async mode enqueues a REFERENCE only — packing and the optimizer
         replay run on the shadow workers, off the training critical path.
@@ -178,27 +227,45 @@ class ShadowCluster:
                 sub = {bid: flats[bid] for bid in node.bucket_ids}
                 node.apply(step, lr, sub, grad_scale)
 
+    @staticmethod
+    def _pending(q: queue.Queue) -> int:
+        with q.mutex:
+            return q.unfinished_tasks
+
     def consolidate(self, timeout: Optional[float] = None) -> dict:
         """Assemble a complete checkpoint for recovery (§4.2.4).
 
-        Waits (up to ``timeout``) for in-flight updates, then merges node
-        partitions into full params/mu/nu trees.
+        Waits up to ``timeout`` seconds (default 60) for in-flight updates
+        — end to end, including the apply currently executing, so a wedged
+        worker cannot hang recovery — then merges node partitions into full
+        params/mu/nu trees. Raises `ConsolidationTimeout` (carrying the
+        lagging node ids and the partial checkpoint) if any node is still
+        behind at the deadline.
         """
         if self.async_mode:
-            deadline = time.time() + (timeout or 60.0)
-            for q in self._queues:
-                while not q.empty() and time.time() < deadline:
-                    time.sleep(0.001)
-                q.join()
+            deadline = time.time() + (60.0 if timeout is None else timeout)
+            while (any(self._pending(q) for q in self._queues)
+                   and time.time() < deadline):
+                time.sleep(0.001)
+            lagging = [i for i, q in enumerate(self._queues)
+                       if self._pending(q)]
+            if lagging:
+                raise ConsolidationTimeout(lagging, self._merge())
+        return self._merge()
+
+    def _merge(self) -> dict:
         params: dict = {}
         mu: dict = {}
         nu: dict = {}
-        step = min((n.step for n in self.nodes), default=0)
+        steps = []
         for node in self.nodes:
-            params.update(node.params)
-            mu.update(node.mu)
-            nu.update(node.nu)
-        return {"params": params, "mu": mu, "nu": nu, "step": step}
+            with node.state_lock:    # apply-atomic per-partition snapshot
+                params.update(node.params)
+                mu.update(node.mu)
+                nu.update(node.nu)
+                steps.append(node.step)
+        return {"params": params, "mu": mu, "nu": nu,
+                "step": min(steps, default=0)}
 
     def stats(self) -> ShadowStats:
         times = [t for n in self.nodes for t in n.apply_times]
@@ -235,9 +302,17 @@ def plan_shadow_nodes(layout: BucketLayout, opt: OptimizerConfig,
     zeros = {k: np.zeros(v.shape, np.float32) for k, v in trial_tree.items()}
     cluster.bootstrap(zeros, zeros, zeros, 0)
     grads = {k: np.ones(v.shape, np.float32) for k, v in trial_tree.items()}
-    cluster.on_gradients(1, 1e-3, grads)      # warmup/compile
+    chan = InProcessChannel()
+    chan.open(layout)
+
+    def deliver(step):
+        chan.send(StepEvent(step=step, grads=grads, lr=1e-3))
+        for d in chan.poll():
+            cluster.on_delivery(d)
+
+    deliver(1)                                # warmup/compile
     t0 = time.perf_counter()
-    cluster.on_gradients(2, 1e-3, grads)
+    deliver(2)
     t1 = time.perf_counter() - t0
     need = max(1, int(np.ceil(t1 / max(iter_time_s, 1e-9))))
     return min(need, max_nodes), t1

@@ -69,6 +69,44 @@ def compress_tree(tree, ef):
             jax.tree.unflatten(treedef, residuals), wire)
 
 
+class Compressor:
+    """Stateful int8+EF compressor for a gradient stream.
+
+    Owns the error-feedback residuals across calls, so a gradient channel
+    (`repro.core.channel.CompressedChannel`) can compress successive
+    iterations without threading ``ef`` through its callers. Residuals are
+    keyed lazily off the first tree's structure.
+    """
+
+    def __init__(self):
+        self._ef = None
+        self.wire_bytes_total = 0
+        self.raw_bytes_total = 0
+
+    def compress(self, tree):
+        """Quantize one iteration's gradients; returns the dequantized tree
+        (what the wire delivers) and accumulates wire/raw byte totals."""
+        if self._ef is None:
+            self._ef = init_error_feedback(tree)
+        deq, self._ef, wire = compress_tree(tree, self._ef)
+        self.wire_bytes_total += wire
+        self.raw_bytes_total += sum(
+            leaf.size * jnp.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree.leaves(tree))
+        return deq
+
+    @property
+    def ef(self):
+        """Current error-feedback residual tree (None before first call) —
+        exactly the gradient mass not yet delivered to the stream."""
+        return self._ef
+
+    @property
+    def ratio(self) -> float:
+        return (self.raw_bytes_total / self.wire_bytes_total
+                if self.wire_bytes_total else 0.0)
+
+
 def compression_ratio(tree) -> float:
     """Uncompressed bytes / wire bytes for a gradient tree (~4x for f32)."""
     leaves = jax.tree.leaves(tree)

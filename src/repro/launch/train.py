@@ -29,6 +29,13 @@ def main():
                     choices=["checkmate", "none", "sync", "async",
                              "torch_dcp", "gemini", "checkfreq"])
     ap.add_argument("--freq", type=int, default=1)
+    ap.add_argument("--channel", default="inprocess",
+                    choices=["inprocess", "packetized"],
+                    help="gradient delivery transport for checkmate "
+                         "(packetized = buckets -> frames -> fabric)")
+    ap.add_argument("--topology", default="rail-optimized",
+                    choices=["rail-optimized", "leaf-spine", "single"],
+                    help="fabric topology for --channel packetized")
     ap.add_argument("--shadow-nodes", type=int, default=2)
     ap.add_argument("--shadow-async", action="store_true")
     ap.add_argument("--fail-at", default="",
@@ -42,6 +49,8 @@ def main():
     import jax
     import repro.configs as C
     from repro.core.buckets import layout_for_tree
+    from repro.core.channel import (CompressedChannel, InProcessChannel,
+                                    PacketizedChannel)
     from repro.core.checkpoint import (AsyncCheckpointer, CheckFreqCheckpointer,
                                        CheckmateCheckpointer,
                                        GeminiLikeCheckpointer, NoCheckpointer,
@@ -75,7 +84,14 @@ def main():
         shadow = ShadowCluster(layout, opt, n_nodes=args.shadow_nodes,
                                async_mode=args.shadow_async)
         shadow.bootstrap(state0.params, state0.mu, state0.nu, 0)
-        ck = CheckmateCheckpointer(shadow)
+        if args.channel == "packetized":
+            channel = PacketizedChannel(topology=args.topology,
+                                        n_shadow_nodes=args.shadow_nodes)
+        else:
+            channel = InProcessChannel()
+        if args.compress:
+            channel = CompressedChannel(channel)
+        ck = CheckmateCheckpointer(shadow, channel=channel)
     else:
         ck = {
             "none": NoCheckpointer(),
@@ -105,6 +121,9 @@ def main():
         "wall_s": round(wall, 2),
     }
     if shadow is not None:
+        report["channel"] = ck.channel.name
+        if ck.skipped_steps:
+            report["gated_steps"] = ck.skipped_steps
         s = shadow.stats()
         report["shadow"] = {
             "nodes": args.shadow_nodes, "lag": s.lag,

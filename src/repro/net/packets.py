@@ -40,6 +40,10 @@ class Frame:
         t_send: simulation time the frame first entered the fabric.
         t_arrive: simulation time of final delivery (-1 until delivered).
         retx: how many times this frame was retransmitted after loss.
+        payload: optional real payload bytes (memoryview/bytes) attached by
+            a frame-injection hook (`FabricSimulator(frame_tx_hook=...)`) so
+            gradient channels can flow actual data through the fabric;
+            mirrored copies share the same buffer (zero-copy replication).
     """
     src: int                    # training rank (or switch port)
     dst: int                    # destination rank / shadow node
@@ -58,6 +62,7 @@ class Frame:
     t_send: float = -1.0
     t_arrive: float = -1.0
     retx: int = 0
+    payload: object = None
 
 
 def frames_for_chunk(src: int, dst: int, *, chunk: int, channel: int,

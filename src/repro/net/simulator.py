@@ -150,6 +150,15 @@ class FabricSimulator:
             auto-pick so a chunk is <= ~256 events; counters stay exact).
         retx_timeout_s / max_retx: source retransmission for ring frames.
         max_time_s: hard simulation-time stop (guards unreachable rings).
+        frame_tx_hook: injection point — called once per frame as it is
+            created at its source host (before first enqueue); gradient
+            channels use it to attach real payload bytes (`Frame.payload`)
+            via `wire_offset`. Retransmissions reuse the same frame object,
+            and switch mirrors share the buffer, so the hook fires exactly
+            once per logical frame.
+        shadow_rx_hook: extraction point — called as ``hook(node_id,
+            frame)`` when a (mirrored) frame is finally delivered to a
+            shadow host; channels use it to reassemble the capture.
     """
 
     def __init__(self, topo: Topology, *, grad_bytes_per_group: int,
@@ -157,7 +166,8 @@ class FabricSimulator:
                  pfc: PfcConfig = PfcConfig(), failures=(),
                  frame_quantum: int | None = None,
                  retx_timeout_s: float = 100e-6, max_retx: int = 10,
-                 max_time_s: float = 30.0):
+                 max_time_s: float = 30.0,
+                 frame_tx_hook=None, shadow_rx_hook=None):
         self.topo = topo
         self.pfc = pfc
         self.rf = max(1, replication_factor)
@@ -165,6 +175,8 @@ class FabricSimulator:
         self.retx_timeout = retx_timeout_s
         self.max_retx = max_retx
         self.max_time = max_time_s
+        self.frame_tx_hook = frame_tx_hook
+        self.shadow_rx_hook = shadow_rx_hook
         n, rpg = topo.n_ranks, topo.ranks_per_group
         self.rounds = max(rpg - 1, 1)
         self.chunk_bytes = grad_bytes_per_group // rpg
@@ -452,6 +464,14 @@ class FabricSimulator:
             self._send_next[rank] += 1
             self._send_round(g, lr, t)
 
+    def wire_offset(self, f: Frame) -> int:
+        """Byte offset of ``f``'s payload inside its DP group's contiguous
+        reduced-gradient buffer (chunk-major, channel-split within a chunk).
+        Gradient channels use this to slice payload at injection and to
+        place received spans at extraction."""
+        return (f.chunk * self.chunk_bytes
+                + sum(self.split[:f.channel]) + f.payload_off)
+
     def _shadow_recv(self, node: str, f: Frame):
         nid = self._shadow_id[node]
         self.shadow_bytes[nid] += f.payload_len
@@ -461,6 +481,8 @@ class FabricSimulator:
             self.duplicate_mirror_bytes += min(seen[f.payload_off],
                                                f.payload_len)
         seen[f.payload_off] = max(seen.get(f.payload_off, 0), f.payload_len)
+        if self.shadow_rx_hook is not None:
+            self.shadow_rx_hook(nid, f)
 
     # -- workload ----------------------------------------------------------
     def _send_round(self, g: int, lr: int, rnd: int):
@@ -483,6 +505,8 @@ class FabricSimulator:
                     shadow_node=ev.shadow_node if ev else -1,
                     dp_group=g, quantum=self.quantum):
                 f.t_send = self.now
+                if self.frame_tx_hook is not None:
+                    self.frame_tx_hook(f)
                 self._enqueue(lk, f)
             off += self.split[ch]
 

@@ -2,9 +2,11 @@
 and straggler observability.
 
 The loop is the paper's Listing 1 with the Checkmate hook: the train step
-already returns the reduce-scattered gradients (the multicast payload), and
-the checkpointer's ``on_step`` consumes them. Baseline checkpointers ignore
-grads and do copy-persist on the *state* instead, which is what stalls them.
+already returns the reduce-scattered gradients (the multicast payload), the
+loop wraps each iteration in a `repro.core.channel.StepEvent`, and the
+checkpointer's ``on_step(event)`` pushes it into a `GradientChannel` toward
+the shadow plane. Baseline checkpointers ignore grads and do copy-persist
+on the *state* instead, which is what stalls them.
 """
 from __future__ import annotations
 
@@ -18,9 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.checkpoint import BaseCheckpointer, NoCheckpointer
+from repro.core.buckets import layout_for_tree
+from repro.core.channel import GradientChannel, StepEvent
+from repro.core.checkpoint import (BaseCheckpointer, CheckmateCheckpointer,
+                                   NoCheckpointer)
 from repro.core.recovery import (FailurePlan, checkpoint_from_state,
                                  state_from_checkpoint)
+from repro.core.shadow import ShadowCluster
 from repro.data.synthetic import SyntheticStream, device_batch
 from repro.dist.sharding import ShardingRules
 from repro.optim import OptimizerConfig, TrainState
@@ -41,6 +47,7 @@ class LoopStats:
     recoveries: int = 0
     recovered_at: list = field(default_factory=list)
     straggler_flags: list = field(default_factory=list)
+    checkpointer: Optional[BaseCheckpointer] = None
 
     @property
     def throughput(self) -> float:
@@ -65,23 +72,40 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
           opt: OptimizerConfig = OptimizerConfig(),
           lr_fn: Callable = lambda s: 1e-3,
           checkpointer: Optional[BaseCheckpointer] = None,
+          channel: Optional[GradientChannel] = None,
+          shadow_nodes: int = 2,
           failure_plan: Optional[FailurePlan] = None,
           seed: int = 0,
           straggler_ema: float = 0.9,
           straggler_factor: float = 2.0,
           state: Optional[TrainState] = None) -> tuple[TrainState, LoopStats]:
     """Run ``steps`` iterations; on injected failure, restore from the
-    checkpointer (Checkmate: shadow consolidation) and continue."""
+    checkpointer (Checkmate: shadow consolidation) and continue.
+
+    ``channel`` is the one-argument spelling of the full paper dataflow:
+    ``train(..., channel=PacketizedChannel(topology="rail-optimized"))``
+    builds a bootstrapped `ShadowCluster` (``shadow_nodes`` CPU nodes) and a
+    `CheckmateCheckpointer` wired through that channel. The built
+    checkpointer is exposed as ``stats.checkpointer`` (its ``.shadow`` holds
+    the cluster). Mutually exclusive with ``checkpointer``.
+    """
     mesh = rules.mesh
-    checkpointer = checkpointer or NoCheckpointer()
     failure_plan = failure_plan or FailurePlan()
     stream = SyntheticStream(cfg, batch, seq, seed=seed)
     if state is None:
         state = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
+    if channel is not None:
+        if checkpointer is not None:
+            raise ValueError("pass either checkpointer= or channel=, not both")
+        shadow = ShadowCluster(layout_for_tree(state.params), opt,
+                               n_nodes=shadow_nodes)
+        shadow.bootstrap(state.params, state.mu, state.nu, int(state.step))
+        checkpointer = CheckmateCheckpointer(shadow, channel=channel)
+    checkpointer = checkpointer or NoCheckpointer()
 
     step_fn = jax.jit(build_train_step(cfg, mesh, rules, opt, lr_fn),
                       donate_argnums=(0,))
-    stats = LoopStats()
+    stats = LoopStats(checkpointer=checkpointer)
     ema_iter = None
     step = int(state.step)
 
@@ -127,10 +151,10 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
         host_grads = None
         if isinstance(grads, dict):
             host_grads = {k: np.asarray(v) for k, v in grads.items()}
-        stall = checkpointer.on_step(
-            step,
-            state_fn=lambda: checkpoint_from_state(state),
-            grads=host_grads, lr=lr, grad_scale=scale, iter_time=iter_time)
+        stall = checkpointer.on_step(StepEvent(
+            step=step, grads=host_grads, lr=lr, grad_scale=scale,
+            iter_time=iter_time,
+            state_fn=lambda: checkpoint_from_state(state)))
         stats.stall_times.append(stall)
 
     checkpointer.finalize()

@@ -1,0 +1,302 @@
+"""GradientChannel delivery API: in-process vs packetized equivalence
+(bit-identical shadow state over random layouts/topologies), compressed
+bounded divergence (error-feedback invariant), gated-delivery semantics,
+capture accounting, consolidation timeouts, and the deprecation shims."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.buckets import layout_for_tree
+from repro.core.channel import (CompressedChannel, InProcessChannel,
+                                PacketizedChannel, StepEvent)
+from repro.core.checkpoint import CheckmateCheckpointer, SyncCheckpointer
+from repro.core.shadow import ConsolidationTimeout, ShadowCluster
+from repro.dist.compression import compress_tree, init_error_feedback
+from repro.optim import OptimizerConfig, apply_updates, init_state
+
+
+def _tree(n_leaves: int, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {f"leaf{k}": rng.standard_normal((6 + 2 * k, 5))
+            .astype(np.float32) for k in range(n_leaves)}
+
+
+def _drive(channel, layout, params, grad_steps, opt=None, n_nodes=2):
+    """Push ``grad_steps`` through ``channel`` into a fresh shadow cluster;
+    returns the consolidated checkpoint."""
+    opt = opt or OptimizerConfig(lr=1e-3)
+    shadow = ShadowCluster(layout, opt, n_nodes=n_nodes)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    channel.open(layout)
+    for step, grads in enumerate(grad_steps, start=1):
+        channel.send(StepEvent(step=step, grads=grads, lr=1e-3))
+        for d in channel.poll():
+            assert d.complete
+            shadow.on_delivery(d)
+    channel.close()
+    return shadow.consolidate()
+
+
+# -- equivalence: the transport must not change the checkpoint ---------------
+
+@given(st.integers(1, 4), st.sampled_from([1024, 4096, 1 << 16]),
+       st.integers(1, 3), st.sampled_from([1, 2]), st.sampled_from([2, 4]),
+       st.sampled_from(["single", "rail-optimized", "leaf-spine"]))
+@settings(max_examples=6, deadline=None)
+def test_inprocess_packetized_bit_identical(n_leaves, cap, n_nodes,
+                                            n_groups, rpg, topo):
+    """InProcessChannel and PacketizedChannel (loss-free fabric) produce
+    bit-identical ShadowCluster.consolidate() output over random bucket
+    layouts, DP-group counts, and topologies."""
+    params = _tree(n_leaves, seed=n_leaves * 7 + cap % 97)
+    layout = layout_for_tree(params, cap_bytes=cap)
+    rng = np.random.default_rng(42)
+    grad_steps = [{k: rng.standard_normal(v.shape).astype(np.float32) * 0.01
+                   for k, v in params.items()} for _ in range(2)]
+
+    a = _drive(InProcessChannel(), layout, params, grad_steps,
+               n_nodes=n_nodes)
+    b = _drive(PacketizedChannel(topology=topo, n_dp_groups=n_groups,
+                                 ranks_per_group=rpg, ranks_per_leaf=4),
+               layout, params, grad_steps, n_nodes=n_nodes)
+    assert a["step"] == b["step"] == 2
+    for k in a["params"]:
+        assert np.array_equal(a["params"][k], b["params"][k]), k
+        assert np.array_equal(a["mu"][k], b["mu"][k]), k
+        assert np.array_equal(a["nu"][k], b["nu"][k]), k
+
+
+def test_packetized_gated_delivery():
+    """A fabric failure surfaces as a gated (complete=False) delivery that
+    the shadow refuses; the next step is clean again (one-shot failure)."""
+    params = _tree(3, seed=0)
+    layout = layout_for_tree(params, cap_bytes=4096)
+    chan = PacketizedChannel(ranks_per_group=4, failures_at={2: "capture"})
+    chan.open(layout)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    for step in (1, 2, 3):
+        chan.send(StepEvent(step=step, grads=params, lr=1e-3))
+    ds = chan.poll()
+    assert [d.complete for d in ds] == [True, False, True]
+    assert ds[1].grads is None and ds[1].missing_captures > 0
+    assert ds[1].fabric.ring_completed      # training was NOT affected
+    with pytest.raises(ValueError, match="gated"):
+        shadow.on_delivery(ds[1])
+
+
+# -- compressed channel: EF bit-identity + bounded divergence ----------------
+
+def test_compressed_channel_matches_reference_stream():
+    """The channel's internal compressor is bit-identical to the reference
+    compress_tree chain: a training state applying the reference dequantized
+    stream equals the shadow state fed through CompressedChannel."""
+    params = _tree(3, seed=1)
+    layout = layout_for_tree(params, cap_bytes=4096)
+    opt = OptimizerConfig(lr=1e-3)
+    rng = np.random.default_rng(5)
+    raw_steps = [{k: rng.standard_normal(v.shape).astype(np.float32) * 0.01
+                  for k, v in params.items()} for _ in range(3)]
+
+    state = init_state({k: jnp.asarray(v) for k, v in params.items()})
+    apply_fn = jax.jit(lambda s, g: apply_updates(s, g, opt, 1e-3))
+    ef = init_error_feedback(params)
+    for raw in raw_steps:
+        deq, ef, _ = compress_tree(raw, ef)
+        state = apply_fn(state, deq)
+
+    ckpt = _drive(CompressedChannel(InProcessChannel()), layout, params,
+                  raw_steps, opt=opt)
+    for k in params:
+        assert np.array_equal(np.asarray(state.params[k]),
+                              ckpt["params"][k]), k
+
+
+def test_compressed_channel_error_feedback_divergence_bound():
+    """With momentum-free SGD the EF invariant is sharp: the shadow (which
+    consumed the compressed stream) diverges from raw-gradient training by
+    exactly lr * residual — bounded by one quantization step, not by the
+    number of iterations."""
+    lr = 0.1
+    opt = OptimizerConfig(name="sgd", momentum=0.0, lr=lr, weight_decay=0.0)
+    params = _tree(2, seed=2)
+    layout = layout_for_tree(params, cap_bytes=4096)
+    rng = np.random.default_rng(9)
+    raw_steps = [{k: rng.standard_normal(v.shape).astype(np.float32)
+                  for k, v in params.items()} for _ in range(4)]
+
+    chan = CompressedChannel(InProcessChannel())
+    shadow = ShadowCluster(layout, opt, n_nodes=2)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    chan.open(layout)
+    for step, grads in enumerate(raw_steps, start=1):
+        chan.send(StepEvent(step=step, grads=grads, lr=lr))
+        for d in chan.poll():
+            shadow.on_delivery(d)
+    ckpt = shadow.consolidate()
+
+    raw = {k: v.copy() for k, v in params.items()}       # p -= lr * g, f32
+    for grads in raw_steps:
+        for k in raw:
+            raw[k] = (raw[k] - np.float32(lr) * grads[k]).astype(np.float32)
+
+    ef = {k: np.asarray(v) for k, v in chan.compressor.ef.items()}
+    for k in params:
+        div = ckpt["params"][k] - raw[k]
+        # p_shadow - p_raw == lr * ef_T (the un-applied residual mass)
+        np.testing.assert_allclose(div, lr * ef[k], atol=5e-6)
+        assert np.max(np.abs(div)) <= lr * np.max(np.abs(ef[k])) + 5e-6
+    assert chan.compressor.ratio > 3.5               # it really compressed
+    assert any(np.any(ckpt["params"][k] != raw[k]) for k in params)
+
+
+# -- capture accounting ------------------------------------------------------
+
+def test_gated_capture_accounting():
+    """A gated capture produces NO checkpoint (neither n_checkpoints nor
+    the stall accounting moves; skipped_captures/skipped_steps record it)
+    AND desynchronizes the stream: without a resync the shadow refuses
+    later applies, staying frozen at the last fully-captured step instead
+    of manufacturing a state that skipped the lost gradient."""
+    params = _tree(2, seed=3)
+    layout = layout_for_tree(params, cap_bytes=4096)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=1)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    ck = CheckmateCheckpointer(
+        shadow, channel=PacketizedChannel(ranks_per_group=4,
+                                          failures_at={2: "capture"}))
+    ck.on_step(StepEvent(step=1, grads=params, lr=1e-3))
+    stall_after_clean = ck.stall_total
+    ck.on_step(StepEvent(step=2, grads=params, lr=1e-3))
+    ck.on_step(StepEvent(step=3, grads=params, lr=1e-3))
+    assert ck.n_checkpoints == 1
+    assert ck.skipped_captures == 2          # the gap AND the refused step 3
+    assert ck.skipped_steps == [2, 3]
+    assert shadow.consolidate()["step"] == 1  # frozen: contiguity preserved
+    assert ck.stall_total == stall_after_clean   # gated steps add no stall
+
+
+def test_gated_capture_resyncs_from_state_fn():
+    """When the next StepEvent carries state_fn (as the training loop's
+    always do), the checkpointer heals the gap with a full-state copy: the
+    resync counts as that step's checkpoint and the stream resumes."""
+    params = _tree(2, seed=3)
+    layout = layout_for_tree(params, cap_bytes=4096)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=1)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    ck = CheckmateCheckpointer(
+        shadow, channel=PacketizedChannel(ranks_per_group=4,
+                                          failures_at={2: "capture"}))
+    snap3 = {"params": {k: v + 7.0 for k, v in params.items()},
+             "mu": zeros, "nu": zeros, "step": 3}
+    ck.on_step(StepEvent(step=1, grads=params, lr=1e-3))
+    ck.on_step(StepEvent(step=2, grads=params, lr=1e-3))       # gated
+    ck.on_step(StepEvent(step=3, grads=params, lr=1e-3,
+                         state_fn=lambda: snap3))              # resync copy
+    ck.on_step(StepEvent(step=4, grads=params, lr=1e-3))       # streams again
+    assert ck.n_checkpoints == 3                 # steps 1, 3 (copy), 4
+    assert ck.skipped_captures == 1
+    assert ck.skipped_steps == [2]
+    ckpt = shadow.consolidate()
+    assert ckpt["step"] == 4
+    # restore() clears the desync too: recovery rewinds training onto the
+    # shadow state, so the resumed stream is contiguous by construction
+    ck2 = CheckmateCheckpointer(
+        ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=1),
+        channel=PacketizedChannel(ranks_per_group=4,
+                                  failures_at={1: "capture"}))
+    ck2.shadow.bootstrap(params, zeros, zeros, 0)
+    ck2.on_step(StepEvent(step=1, grads=params, lr=1e-3))      # gated
+    assert ck2.restore()["step"] == 0
+    ck2.on_step(StepEvent(step=1, grads=params, lr=1e-3))      # re-run, clean
+    assert ck2.n_checkpoints == 1 and ck2.shadow.consolidate()["step"] == 1
+
+
+# -- consolidation timeout ---------------------------------------------------
+
+def test_consolidate_timeout_reports_laggards():
+    """A wedged shadow worker can no longer hang recovery: consolidate
+    honors its deadline end-to-end and reports the lagging node ids."""
+    params = _tree(2, seed=4)
+    layout = layout_for_tree(params, cap_bytes=4096)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2,
+                           async_mode=True)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    release = time.time() + 1.5
+    original_apply = shadow.nodes[0].apply
+
+    def wedged_apply(*a, **kw):                  # node 0 stalls ~1.5s
+        while time.time() < release:
+            time.sleep(0.01)
+        return original_apply(*a, **kw)
+
+    shadow.nodes[0].apply = wedged_apply
+    chan = InProcessChannel()
+    chan.open(layout)
+    chan.send(StepEvent(step=1, grads=params, lr=1e-3))
+    for d in chan.poll():
+        shadow.on_delivery(d)
+    with pytest.raises(ConsolidationTimeout) as err:
+        shadow.consolidate(timeout=0.2)
+    assert err.value.lagging_nodes == [0]
+    assert err.value.partial["step"] == 0        # min across nodes: stale
+    ckpt = shadow.consolidate(timeout=30)        # worker released: completes
+    assert ckpt["step"] == 1
+    shadow.shutdown()
+
+
+# -- deprecation shims -------------------------------------------------------
+
+def test_deprecated_on_gradients_still_works_and_warns():
+    params = _tree(2, seed=6)
+    layout = layout_for_tree(params, cap_bytes=4096)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+
+    old = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2)
+    old.bootstrap(params, zeros, zeros, 0)
+    with pytest.warns(DeprecationWarning, match="on_gradients"):
+        old.on_gradients(1, 1e-3, params)
+
+    new = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2)
+    new.bootstrap(params, zeros, zeros, 0)
+    chan = InProcessChannel()
+    chan.open(layout)
+    chan.send(StepEvent(step=1, grads=params, lr=1e-3))
+    for d in chan.poll():
+        new.on_delivery(d)
+
+    a, b = old.consolidate(), new.consolidate()
+    for k in params:
+        assert np.array_equal(a["params"][k], b["params"][k]), k
+
+
+def test_deprecated_kwarg_on_step_still_works_and_warns():
+    st_tree = {"params": {"w": np.ones(64, np.float32)},
+               "mu": {"w": np.zeros(64, np.float32)},
+               "nu": {"w": np.zeros(64, np.float32)}, "step": 1}
+    ck = SyncCheckpointer(freq=1)
+    with pytest.warns(DeprecationWarning, match="StepEvent"):
+        stall = ck.on_step(1, state_fn=lambda: st_tree, grads=None,
+                           lr=1e-3, iter_time=0.01)
+    assert stall >= 0.0 and ck.n_checkpoints == 1
+
+    ck2 = SyncCheckpointer(freq=1)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)   # new API must be clean
+        ck2.on_step(StepEvent(step=1, state_fn=lambda: st_tree, lr=1e-3))
+    assert ck2.n_checkpoints == 1
+
+    with pytest.raises(TypeError):                     # no mixing
+        ck2.on_step(StepEvent(step=2, state_fn=lambda: st_tree), lr=1e-3)

@@ -169,16 +169,18 @@ def test_shadow_nic_kill_loses_capture_not_training():
 # -- failure -> core.recovery: bit-identical resume --------------------------
 
 def test_link_failure_recovers_bit_identical():
-    """End-to-end acceptance scenario: a fabric simulation determines that
-    a mid-iteration shadow-link failure loses iteration LOST's capture;
-    the shadow cluster therefore skips that apply; when the training node
-    then fails, `core.recovery` consolidates at LOST-1 and the resumed run
-    converges bit-identically to an uninterrupted one."""
+    """End-to-end acceptance scenario: the PacketizedChannel's fabric loses
+    iteration LOST's capture to a mid-iteration shadow-NIC failure, so its
+    delivery arrives gated and the shadow cluster skips that apply; when
+    the training node then fails, `core.recovery` consolidates at LOST-1
+    and the resumed run converges bit-identically to an uninterrupted
+    one — no manual lost-step plumbing anywhere."""
     import jax
 
     import repro.configs as C
     from repro.core.buckets import layout_for_tree
-    from repro.core.checkpoint import CaptureGatedCheckmateCheckpointer
+    from repro.core.channel import PacketizedChannel
+    from repro.core.checkpoint import CheckmateCheckpointer
     from repro.core.recovery import FailurePlan
     from repro.core.shadow import ShadowCluster
     from repro.dist.sharding import ShardingRules, make_smoke_mesh
@@ -186,14 +188,7 @@ def test_link_failure_recovers_bit_identical():
     from repro.train.loop import train
     from repro.train.step import make_train_state
 
-    fabric = simulate_fabric(**MIDRUN,
-                             failures=[FailureSpec(_midpoint(),
-                                                   "shadow_nic", "s0"),
-                                       FailureSpec(_midpoint(),
-                                                   "shadow_nic", "s1")])
-    assert fabric.ring_completed and not fabric.reassembled_ok
-    LOST = 4                     # the iteration that fabric run stood for
-
+    LOST = 4                     # iteration whose capture the fabric loses
     steps, batch, seq, seed = 6, 2, 16, 11
     cfg = C.get("tinyllama-1.1b").reduced()
     rules = ShardingRules(make_smoke_mesh())
@@ -204,13 +199,19 @@ def test_link_failure_recovers_bit_identical():
     s0 = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
     shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=2)
     shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
-    lost = {LOST} if not fabric.reassembled_ok else set()
+    channel = PacketizedChannel(
+        topology="rail-optimized", n_dp_groups=2, ranks_per_group=4,
+        failures_at={LOST: "capture"})
+    ck = CheckmateCheckpointer(shadow, channel=channel)
     state_b, stats_b = train(
         cfg, rules, steps=steps, batch=batch, seq=seq, opt=opt, seed=seed,
-        state=s0,
-        checkpointer=CaptureGatedCheckmateCheckpointer(shadow, lost),
+        state=s0, checkpointer=ck,
         failure_plan=FailurePlan((LOST + 1,)))
-    # the shadow skipped LOST, so recovery lands one step earlier
+    # the fabric gated LOST, so recovery lands one step earlier
+    assert ck.skipped_steps == [LOST]
+    assert ck.skipped_captures == 1
+    # gated capture not counted; the post-recovery rerun of LOST is
+    assert ck.n_checkpoints == stats_b.steps - 1 == steps
     assert stats_b.recoveries == 1
     assert stats_b.recovered_at == [LOST - 1]
     for k in state_a.params:

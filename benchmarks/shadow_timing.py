@@ -1,6 +1,24 @@
 """Fig 7: can the shadow keep up? Batch-size sweep — iteration time vs
-shadow pull+optimizer time, and the min shadow-node count (§6.3)."""
+shadow pull+optimizer time, and the min shadow-node count (§6.3).
+
+``--json`` mode benchmarks the flat wire-layout apply (one fused optimizer
+pass per bucket, `ShadowCluster(flat=True)`) against the legacy per-leaf
+path at the gpt2_1_5b layout and writes ``BENCH_shadow.json`` with
+mean/max apply seconds for both. Exits nonzero if the flat path is not
+faster — the CI smoke gate for the shadow hot loop.
+
+The json benchmark uses the paper's *per-layer* leaf structure for GPT-2
+1.5B (48 layers x 12 tensors + embeddings = 580 leaves, the shape a DDP
+bucketer actually sees on the capture side), dimension-scaled to fit a CPU
+container, bucketed at the default DDP 25 MB cap. The repo's jax models
+scan-stack layer weights into ~12 mega-leaves, which hides exactly the
+per-leaf dispatch cost the flat path deletes.
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import sys
 
 import numpy as np
 
@@ -8,6 +26,7 @@ import jax
 
 from benchmarks.common import bench_config, csv_row, smoke_env
 from repro.core.buckets import layout_for_tree
+from repro.core.channel import InProcessChannel, StepEvent
 from repro.core.shadow import ShadowCluster, plan_shadow_nodes
 from repro.optim import OptimizerConfig
 from repro.train.loop import train
@@ -39,5 +58,99 @@ def run():
                     f"min_nodes={n_min} keeps_up={keeps_up}")
 
 
+def gpt2_1_5b_leaf_tree(d: int = 128, vocab: int = 6272, pos: int = 128,
+                        n_layers: int = 48) -> dict[str, np.ndarray]:
+    """GPT-2 1.5B's per-layer leaf structure (the DDP capture-side view),
+    dimension-scaled (default ~12.5x down from d=1600) for a CPU host."""
+    rng = np.random.default_rng(0)
+
+    def t(shape):
+        return rng.standard_normal(shape).astype(np.float32) * 0.02
+
+    tree = {"wte.w": t((vocab, d)), "wpe.w": t((pos, d))}
+    for i in range(n_layers):
+        pre = f"h{i}."
+        tree.update({
+            pre + "ln1.w": t((d,)), pre + "ln1.b": t((d,)),
+            pre + "attn.qkv.w": t((d, 3 * d)),
+            pre + "attn.qkv.b": t((3 * d,)),
+            pre + "attn.proj.w": t((d, d)), pre + "attn.proj.b": t((d,)),
+            pre + "ln2.w": t((d,)), pre + "ln2.b": t((d,)),
+            pre + "mlp.fc.w": t((d, 4 * d)), pre + "mlp.fc.b": t((4 * d,)),
+            pre + "mlp.proj.w": t((4 * d, d)), pre + "mlp.proj.b": t((d,)),
+        })
+    tree.update({"lnf.w": t((d,)), "lnf.b": t((d,))})
+    return tree
+
+
+def _time_paths(layout, params, grad_steps, opt: OptimizerConfig):
+    """Per-step apply seconds through the channel->shadow hot path for the
+    flat and the legacy cluster, INTERLEAVED step by step so both paths see
+    the same machine conditions (shared CPU containers throttle in bursts);
+    the first (compile-heavy) apply is excluded."""
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadows, chans = {}, {}
+    for mode, flat in (("flat", True), ("legacy", False)):
+        # window sized to the run so the compile-heavy first apply is
+        # still in apply_times when we slice it off below
+        shadows[mode] = ShadowCluster(layout, opt, n_nodes=1, flat=flat,
+                                      apply_times_maxlen=len(grad_steps) + 1)
+        shadows[mode].bootstrap(params, zeros, zeros, 0)
+        chans[mode] = InProcessChannel()
+        chans[mode].open(layout)
+    for step, grads in enumerate(grad_steps, start=1):
+        for mode in ("flat", "legacy"):
+            chans[mode].send(StepEvent(step=step, grads=grads, lr=1e-3))
+            for d in chans[mode].poll():
+                shadows[mode].on_delivery(d)
+    out = {}
+    for mode in ("flat", "legacy"):
+        chans[mode].close()
+        times = list(shadows[mode].nodes[0].apply_times)[1:]
+        out[mode] = {"mean_apply_s": float(np.mean(times)),
+                     "max_apply_s": float(np.max(times)),
+                     "steps": len(times)}
+    return out
+
+
+def run_json(out_path: str = "BENCH_shadow.json", steps: int = 8) -> int:
+    opt = OptimizerConfig(lr=1e-3)
+    params = gpt2_1_5b_leaf_tree()
+    layout = layout_for_tree(params)          # default DDP 25 MB cap
+    rng = np.random.default_rng(7)
+    grad_steps = [{k: rng.standard_normal(v.shape).astype(np.float32) * 0.01
+                   for k, v in params.items()} for _ in range(steps + 1)]
+
+    timed = _time_paths(layout, params, grad_steps, opt)
+    flat, legacy = timed["flat"], timed["legacy"]
+    speedup = legacy["mean_apply_s"] / flat["mean_apply_s"]
+    report = {
+        "arch": "gpt2-1.5b (per-layer leaf structure, dim-scaled)",
+        "n_buckets": len(layout.buckets),
+        "n_leaves": sum(len(b.slots) for b in layout.buckets),
+        "state_bytes": layout.total_bytes,
+        "flat": flat,
+        "legacy": legacy,
+        "speedup": speedup,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    if flat["mean_apply_s"] >= legacy["mean_apply_s"]:
+        print("FAIL: flat apply is not faster than the legacy per-leaf path",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="flat-vs-legacy apply benchmark; write "
+                         "BENCH_shadow.json and gate on flat being faster")
+    ap.add_argument("--out", default="BENCH_shadow.json")
+    ap.add_argument("--steps", type=int, default=8)
+    args = ap.parse_args()
+    if args.json:
+        sys.exit(run_json(args.out, steps=args.steps))
     run()

@@ -3,7 +3,8 @@ from repro.core.tagging import (  # noqa: F401
     TagEvent,
 )
 from repro.core.buckets import (  # noqa: F401
-    Bucket, BucketLayout, build_buckets, pack_bucket, unpack_bucket,
+    Bucket, BucketLayout, FlatTreeView, build_buckets, pack_bucket,
+    pack_bucket_into, unpack_bucket,
 )
 from repro.core.multicast import (  # noqa: F401
     MulticastGroup, SwitchControlPlane, assign_buckets, multicast_groups,

@@ -9,6 +9,7 @@ copies.
 """
 from __future__ import annotations
 
+from collections.abc import Mapping
 from dataclasses import dataclass, field
 from typing import Iterable
 
@@ -56,7 +57,13 @@ class BucketLayout:
 def build_buckets(named_leaves: Iterable[tuple[str, tuple, str]],
                   cap_bytes: int = DEFAULT_BUCKET_BYTES,
                   reverse: bool = True) -> BucketLayout:
-    """named_leaves: iterable of (name, shape, dtype) in model order."""
+    """named_leaves: iterable of (name, shape, dtype) in model order.
+
+    Buckets are per-dtype (like DDP's bucketer): mixing dtypes in one
+    contiguous wire buffer would silently promote the narrower leaves
+    (``pack_bucket`` concatenates), changing the bytes on the wire and the
+    per-step rounding the shadow replays.
+    """
     leaves = list(named_leaves)
     if reverse:
         leaves = leaves[::-1]
@@ -64,12 +71,13 @@ def build_buckets(named_leaves: Iterable[tuple[str, tuple, str]],
     cur: list[LeafSlot] = []
     cur_elems = 0
     cur_bytes = 0
+    cur_dtype: str | None = None
 
     def flush():
-        nonlocal cur, cur_elems, cur_bytes
+        nonlocal cur, cur_elems, cur_bytes, cur_dtype
         if cur:
             buckets.append(Bucket(len(buckets), tuple(cur), cur_elems))
-            cur, cur_elems, cur_bytes = [], 0, 0
+            cur, cur_elems, cur_bytes, cur_dtype = [], 0, 0, None
 
     for name, shape, dtype in leaves:
         size = int(np.prod(shape)) if shape else 1
@@ -80,11 +88,13 @@ def build_buckets(named_leaves: Iterable[tuple[str, tuple, str]],
                 len(buckets),
                 (LeafSlot(name, 0, size, tuple(shape), dtype),), size))
             continue
-        if cur_bytes + nbytes > cap_bytes:
+        if cur_bytes + nbytes > cap_bytes or (cur_dtype is not None
+                                              and dtype != cur_dtype):
             flush()
         cur.append(LeafSlot(name, cur_elems, size, tuple(shape), dtype))
         cur_elems += size
         cur_bytes += nbytes
+        cur_dtype = dtype
     flush()
     return BucketLayout(tuple(buckets))
 
@@ -119,3 +129,113 @@ def unpack_all(layout: BucketLayout, flats: dict[int, object], xp=np) -> dict:
     for b in layout.buckets:
         out.update(unpack_bucket(b, flats[b.bucket_id], xp))
     return out
+
+
+# -- flat wire layout as the native state format ------------------------------
+
+XLA_ALIGN = 64      # bytes; XLA CPU adopts >=64-byte-aligned host buffers
+                    # zero-copy (jnp.asarray/device_put without a memcpy)
+
+
+def alloc_flat(size: int, dtype) -> np.ndarray:
+    """Allocate a flat buffer aligned so jax adopts it WITHOUT copying.
+
+    numpy's default allocation is only 16-byte aligned; XLA's CPU client
+    requires 64 to alias a host buffer. Delivering gradients in aligned
+    flat buffers is what makes the shadow's fused apply a true single pass
+    — the device "transfer" of the gradient bucket is free.
+    """
+    dtype = np.dtype(dtype)
+    raw = np.empty(size * dtype.itemsize + XLA_ALIGN, np.uint8)
+    ofs = (-raw.ctypes.data) % XLA_ALIGN
+    return raw[ofs:ofs + size * dtype.itemsize].view(dtype)
+
+
+def bucket_dtype(bucket: Bucket) -> np.dtype:
+    """The dtype of the bucket's contiguous wire buffer.
+
+    `build_buckets` never mixes dtypes in a bucket (a shared buffer would
+    silently promote the narrower leaves); a hand-built mixed bucket is a
+    layout bug, so fail loudly rather than promote.
+    """
+    dtypes = {s.dtype for s in bucket.slots}
+    assert len(dtypes) == 1, \
+        f"bucket {bucket.bucket_id} mixes dtypes {sorted(dtypes)}"
+    return np.dtype(next(iter(dtypes)))
+
+
+def pack_bucket_into(bucket: Bucket, tree: Mapping, out: np.ndarray
+                     ) -> np.ndarray:
+    """One-pass pack: write the bucket's leaves straight into ``out``
+    (a preallocated flat buffer of ``bucket.size`` elements) with no
+    intermediate concatenate. Returns ``out``."""
+    for s in bucket.slots:
+        out[s.offset:s.offset + s.size] = np.ravel(
+            np.asarray(tree[s.name]), order="C")
+    return out
+
+
+def pack_all_into(layout: BucketLayout, tree: Mapping,
+                  out: dict[int, np.ndarray]) -> dict[int, np.ndarray]:
+    """Pack a whole tree into preallocated per-bucket flat buffers."""
+    for b in layout.buckets:
+        pack_bucket_into(b, tree, out[b.bucket_id])
+    return out
+
+
+def alloc_flats(layout: BucketLayout, dtype=None) -> dict[int, np.ndarray]:
+    """Allocate (aligned) per-bucket flat buffers in the wire layout."""
+    return {b.bucket_id: alloc_flat(b.size, bucket_dtype(b) if dtype is None
+                                    else dtype)
+            for b in layout.buckets}
+
+
+class FlatTreeView(Mapping):
+    """Lazy zero-copy leaf-dict view over per-bucket flat wire buffers.
+
+    ``view[name]`` is a numpy *view* (``reshape`` of a contiguous slice)
+    into the underlying bucket buffer — no element is copied; mutating the
+    flat buffer is visible through the view and vice versa. This is what
+    keeps ``Delivery.grads`` backward compatible while the flat buffers
+    stay the one true payload (one HBM pass per state element).
+    """
+
+    __slots__ = ("_layout", "_flats", "_index", "_cache")
+
+    def __init__(self, layout: BucketLayout, flats: dict[int, object]):
+        self._layout = layout
+        self._flats = flats
+        self._index = None           # leaf name -> (bucket_id, LeafSlot)
+        self._cache: dict[str, object] = {}
+
+    def _resolve(self, name: str):
+        if self._index is None:
+            self._index = {s.name: (b.bucket_id, s)
+                           for b in self._layout.buckets
+                           if b.bucket_id in self._flats for s in b.slots}
+        return self._index[name]
+
+    def __getitem__(self, name: str):
+        try:
+            return self._cache[name]
+        except KeyError:
+            pass
+        bid, s = self._resolve(name)
+        flat = self._flats[bid]
+        view = flat[s.offset:s.offset + s.size].reshape(s.shape)
+        self._cache[name] = view
+        return view
+
+    def __iter__(self):
+        for b in self._layout.buckets:
+            if b.bucket_id in self._flats:
+                for s in b.slots:
+                    yield s.name
+
+    def __len__(self):
+        return sum(len(b.slots) for b in self._layout.buckets
+                   if b.bucket_id in self._flats)
+
+    def __repr__(self):
+        return (f"FlatTreeView({len(self)} leaves over "
+                f"{len(self._flats)} buckets)")

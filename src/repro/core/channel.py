@@ -10,10 +10,16 @@ Every reduced gradient that reaches the shadow plane flows through one
         shadow.on_delivery(d)                # (only complete captures apply)
     channel.close()
 
-Three composable implementations ship here:
+Every delivery carries the bucket *wire layout* as its primary payload
+(``Delivery.flats``: bucket_id -> contiguous flat buffer) — the shadow
+applies it with one fused optimizer pass per bucket, and
+``Delivery.grads`` stays available as a lazy zero-copy leaf view
+(`repro.core.buckets.FlatTreeView`). Three composable implementations
+ship here:
 
-* ``InProcessChannel``   — today's zero-copy reference hand-off (the
-                           delivery *is* the sender's gradient dict).
+* ``InProcessChannel``   — pack-once wire-layout hand-off (the delivery's
+                           flats are packed at ``send`` and enqueued by
+                           reference).
 * ``PacketizedChannel``  — the full paper dataflow: pack buckets
                            (`core.buckets`), segment into MTU frames
                            (`net.packets`), route through the event-driven
@@ -42,7 +48,8 @@ from typing import Callable, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.core.buckets import BucketLayout, pack_bucket, unpack_bucket
+from repro.core.buckets import (XLA_ALIGN, BucketLayout, FlatTreeView,
+                                alloc_flat, bucket_dtype, pack_bucket_into)
 from repro.core.multicast import MulticastGroup
 from repro.core.multicast import multicast_groups as _make_groups
 
@@ -64,6 +71,11 @@ class StepEvent:
         iter_time: wall-clock seconds of the iteration (overlap budgets).
         state_fn: zero-arg callable producing a host snapshot of the full
             TrainState — only copy-persist baselines call it.
+        flats: the same gradients already in wire layout (bucket_id ->
+            contiguous flat buffer, `repro.core.buckets`). Channels that
+            receive both use ``flats`` and skip the pack — this is how
+            channel wrappers (e.g. `CompressedChannel`) forward an
+            already-packed payload without a second pass.
     """
     step: int
     grads: Optional[dict] = None
@@ -71,24 +83,52 @@ class StepEvent:
     grad_scale: float = 1.0
     iter_time: Optional[float] = None
     state_fn: Optional[Callable[[], dict]] = None
+    flats: Optional[dict] = None
 
 
-@dataclass
 class Delivery:
     """One iteration's gradients as they arrived on the shadow side.
 
+    The primary payload is ``flats`` — the bucket wire layout (bucket_id ->
+    contiguous flat buffer) exactly as it left the transport's rx buffer;
+    the shadow applies it with one fused optimizer pass per bucket.
+    ``grads`` remains available as a backward-compatible *lazy zero-copy*
+    leaf view (`repro.core.buckets.FlatTreeView` built over the same
+    buffers) — reading a leaf never copies an element.
+
     ``complete=False`` is a *gated* delivery: the transport could not
     reassemble the full capture (lost mirror frames, dead shadow NIC);
-    ``grads`` is None and the shadow must not apply it.
+    ``flats``/``grads`` are None and the shadow must not apply it.
     """
-    step: int
-    lr: float
-    grad_scale: float
-    grads: Optional[dict]
-    complete: bool = True
-    missing_captures: int = 0
-    wire_bytes: int = 0
-    fabric: object = None          # FabricResult for packetized transports
+
+    __slots__ = ("step", "lr", "grad_scale", "complete", "missing_captures",
+                 "wire_bytes", "fabric", "flats", "layout", "_grads")
+
+    def __init__(self, step: int, lr: float, grad_scale: float,
+                 grads: Optional[dict] = None, complete: bool = True,
+                 missing_captures: int = 0, wire_bytes: int = 0,
+                 fabric: object = None, flats: Optional[dict] = None,
+                 layout: Optional[BucketLayout] = None):
+        self.step = step
+        self.lr = lr
+        self.grad_scale = grad_scale
+        self.complete = complete
+        self.missing_captures = missing_captures
+        self.wire_bytes = wire_bytes
+        self.fabric = fabric           # FabricResult for packetized transports
+        self.flats = flats
+        self.layout = layout
+        self._grads = grads
+
+    @property
+    def grads(self) -> Optional[dict]:
+        if self._grads is None and self.flats is not None and self.complete:
+            self._grads = FlatTreeView(self.layout, self.flats)
+        return self._grads
+
+    def __repr__(self):
+        return (f"Delivery(step={self.step}, complete={self.complete}, "
+                f"wire_bytes={self.wire_bytes})")
 
 
 @runtime_checkable
@@ -114,12 +154,33 @@ class GradientChannel(Protocol):
     def close(self) -> None: ...
 
 
-class InProcessChannel:
-    """Zero-copy reference hand-off (the legacy in-process shortcut).
+def _flats_from_event(layout: BucketLayout, event: StepEvent) -> dict:
+    """The event's payload in wire layout: reuse ``event.flats`` when the
+    sender already packed (channel wrappers), else pack ``event.grads``
+    once — the single pass that turns the leaf tree into the native flat
+    format every downstream stage consumes."""
+    if event.flats is not None:
+        return event.flats
+    assert event.grads is not None, "channels carry gradients"
+    return {b.bucket_id: pack_bucket_into(
+                b, event.grads, alloc_flat(b.size, bucket_dtype(b)))
+            for b in layout.buckets}
 
-    ``send`` enqueues the sender's gradient dict by reference;
-    ``Delivery.grads`` *is* ``event.grads``. ``wire_bytes`` is 0 — nothing
-    crossed a wire.
+
+class InProcessChannel:
+    """In-process hand-off in wire layout (the paper's loopback shortcut).
+
+    ``send`` packs the gradient tree into per-bucket flat buffers ONCE (or
+    adopts ``event.flats`` if the sender already packed) and enqueues those
+    buffers by reference; the delivery's ``grads`` is a lazy zero-copy leaf
+    view over the very same buffers. ``wire_bytes`` is 0 — nothing crossed
+    a wire.
+
+    The pack pass is deliberately charged as sender stall: in-process, the
+    wire-format copy IS work the sending thread performs (DDP's bucket
+    flatten is likewise a training-side copy). The paper's zero-stall
+    claim belongs to `PacketizedChannel`, where the capture rides the ring
+    AllGather and ``send`` returns 0.0.
     """
     name = "inprocess"
 
@@ -131,11 +192,12 @@ class InProcessChannel:
         self._layout = layout
 
     def send(self, event: StepEvent) -> float:
-        assert event.grads is not None, "channels carry gradients"
+        assert self._layout is not None, "open() before send()"
         t0 = time.perf_counter()
+        flats = _flats_from_event(self._layout, event)
         self._pending.append(Delivery(
             step=event.step, lr=event.lr, grad_scale=event.grad_scale,
-            grads=event.grads, complete=True))
+            flats=flats, layout=self._layout, complete=True))
         return time.perf_counter() - t0
 
     def poll(self) -> list[Delivery]:
@@ -210,6 +272,13 @@ class PacketizedChannel:
         self._topo = None
         self._groups: Optional[list[MulticastGroup]] = None
         self._pending: list[Delivery] = []
+        # derived once at open(), reused every send (perf: send used to
+        # re-derive pack metas and reallocate the wire buffer per step)
+        self._metas: list[tuple] = []         # (dtype, size, nbytes, offset)
+        self._per = 0                         # padded bytes per DP group
+        self._total = 0                       # wire buffer size
+        self._src_buf: Optional[bytearray] = None
+        self._src_views: list[np.ndarray] = []
 
     def open(self, layout, multicast_groups=None):
         from repro.net.planner import build_topology
@@ -223,6 +292,41 @@ class PacketizedChannel:
                         else _make_groups(self.n_dp_groups,
                                           self.ranks_per_group,
                                           self.n_shadow_nodes))
+        self._set_wire_geometry(tuple(bucket_dtype(b)
+                                      for b in layout.buckets))
+
+    def _set_wire_geometry(self, dtypes: tuple):
+        """(Re)derive the wire-buffer geometry for per-bucket payload
+        ``dtypes`` and allocate the reusable tx buffer.
+
+        Bucket dtypes/sizes/offsets are a function of the layout plus the
+        payload dtype (a `CompressedChannel` forwards the dequantized f32
+        stand-in even over narrower layouts, and the wire must carry what
+        the payload is — never silently downcast). The buffer is padded so
+        it splits evenly into n_dp_groups payloads of rpg whole chunks
+        each, and each bucket's wire slot starts XLA-aligned so the
+        delivery's rx views are adoptable zero-copy by the shadow's fused
+        apply.
+        """
+        self._wire_dtypes = dtypes
+        self._metas, cum = [], 0
+        for b, dt in zip(self._layout.buckets, dtypes):
+            dt = np.dtype(dt)
+            nbytes = b.size * dt.itemsize
+            cum = -(-cum // XLA_ALIGN) * XLA_ALIGN
+            self._metas.append((dt, b.size, nbytes, cum))
+            cum += nbytes
+        n_g, rpg = self.n_dp_groups, self.ranks_per_group
+        self._per = -(-max(cum, n_g * rpg) // (n_g * rpg)) * rpg
+        self._total = self._per * n_g
+        # the tx wire buffer is allocated once and reused across sends —
+        # its bytes are consumed synchronously inside sim.run(); the rx
+        # buffer is fresh per send because the delivery's flat views alias
+        # it for as long as the consumer holds them
+        self._src_buf = bytearray(self._total)
+        self._src_views = [
+            np.frombuffer(self._src_buf, dtype=dt, count=size, offset=ofs)
+            for dt, size, _, ofs in self._metas]
 
     def _failures_for(self, step: int):
         from repro.net.simulator import FailureSpec
@@ -240,26 +344,33 @@ class PacketizedChannel:
         from repro.net.pfc import PfcConfig
         from repro.net.simulator import FabricSimulator
         assert self._layout is not None, "open() before send()"
-        assert event.grads is not None, "channels carry gradients"
 
-        # pack buckets -> one contiguous wire buffer, padded so it splits
-        # evenly into n_dp_groups payloads of rpg whole chunks each
+        # one pass: leaves (or an already-packed payload) straight into the
+        # reused wire buffer — no intermediate per-bucket concatenate
         buckets = self._layout.buckets
-        flats = [np.ascontiguousarray(pack_bucket(b, event.grads, xp=np))
-                 for b in buckets]
-        metas = [(a.dtype, a.size, a.nbytes) for a in flats]
-        nraw = sum(a.nbytes for a in flats)
-        n_g, rpg = self.n_dp_groups, self.ranks_per_group
-        per = -(-max(nraw, n_g * rpg) // (n_g * rpg)) * rpg
-        total = per * n_g
-        src_buf = bytearray(total)
-        src = memoryview(src_buf)
-        ofs = 0
-        for a in flats:                  # single copy, straight into the wire
-            src[ofs:ofs + a.nbytes] = memoryview(a).cast("B")
-            ofs += a.nbytes
-        rx_buf = bytearray(total)
-        rx = memoryview(rx_buf)
+        if event.flats is not None:
+            dtypes = tuple(np.dtype(event.flats[b.bucket_id].dtype)
+                           for b in buckets)
+            if dtypes != self._wire_dtypes:    # e.g. f32 dequantized stream
+                self._set_wire_geometry(dtypes)
+            for b, dst in zip(buckets, self._src_views):
+                dst[:] = event.flats[b.bucket_id]
+        else:
+            assert event.grads is not None, "channels carry gradients"
+            # the wire carries the GRADIENT dtype (may differ from the
+            # param layout's, e.g. f32 grads over a bf16 tree) — exactly
+            # what pack_bucket's concatenate would have produced
+            dtypes = tuple(
+                np.result_type(*[event.grads[s.name].dtype
+                                 for s in b.slots]) for b in buckets)
+            if dtypes != self._wire_dtypes:
+                self._set_wire_geometry(dtypes)
+            for b, dst in zip(buckets, self._src_views):
+                pack_bucket_into(b, event.grads, dst)
+        per, total = self._per, self._total
+        src = memoryview(self._src_buf)
+        rx_np = alloc_flat(total, np.uint8)      # aligned: views adopt free
+        rx = memoryview(rx_np)
 
         sim = FabricSimulator(
             self._topo, grad_bytes_per_group=per,
@@ -281,20 +392,17 @@ class PacketizedChannel:
         sim.shadow_rx_hook = shadow_rx
         result = sim.run()
 
-        grads = None
+        flats = None
         if result.reassembled_ok:
-            grads = {}
-            cum = 0
-            for b, (dtype, size, nbytes) in zip(buckets, metas):
-                # zero-copy view into the freshly-allocated rx buffer, which
-                # the delivery's arrays keep alive
-                flat = np.frombuffer(rx_buf, dtype=dtype, count=size,
-                                     offset=cum)
-                grads.update(unpack_bucket(b, flat, xp=np))
-                cum += nbytes
+            # the delivery's flats ARE the rx buffer: zero-copy per-bucket
+            # views which keep rx_np alive; Delivery.grads is a lazy leaf
+            # view over the same bytes
+            flats = {b.bucket_id: rx_np[ofs:ofs + nbytes].view(dt)
+                     for b, (dt, _, nbytes, ofs) in zip(buckets, self._metas)}
         self._pending.append(Delivery(
             step=event.step, lr=event.lr, grad_scale=event.grad_scale,
-            grads=grads, complete=result.reassembled_ok,
+            flats=flats, layout=self._layout,
+            complete=result.reassembled_ok,
             missing_captures=result.missing_captures,
             wire_bytes=total * self.replication_factor, fabric=result))
         # Zero sender-visible stall (§4 zero-overhead claim): the gradient
@@ -310,17 +418,22 @@ class PacketizedChannel:
     def close(self):
         self._pending.clear()
         self._topo = None
+        self._src_buf = None
+        self._src_views = []
 
 
 class CompressedChannel:
     """Wrap any channel with int8 + error-feedback gradient compression.
 
-    ``send`` quantizes the gradient tree (`dist.compression.Compressor`,
-    residuals carried across iterations) and forwards the *dequantized*
-    stream to the inner channel — exactly what a compressed multicast
-    payload delivers. The shadow replica therefore tracks the compressed
-    stream; divergence from raw-gradient training is bounded by the
-    error-feedback invariant (tests/test_compression_shadow.py).
+    ``send`` packs the gradient tree into wire layout once, quantizes the
+    flat buckets in a single pass (`dist.compression.Compressor
+    .compress_flats`, residuals carried across iterations as flat buffers
+    in the same layout), and forwards the *dequantized* flats to the inner
+    channel — exactly what a compressed multicast payload delivers, with
+    no leaf-dict churn on the hot path. The shadow replica therefore
+    tracks the compressed stream; divergence from raw-gradient training is
+    bounded by the error-feedback invariant
+    (tests/test_compression_shadow.py).
 
     Quantization runs on the sender's critical path, so ``send`` charges it
     as stall (plus the inner channel's). ``Delivery.wire_bytes`` reports
@@ -342,21 +455,24 @@ class CompressedChannel:
                                        else InProcessChannel())
         self.compressor = Compressor()
         self.name = f"compressed[{self.inner.name}]"
+        self._layout: Optional[BucketLayout] = None
         self._sent_bytes: dict[int, int] = {}
 
     def open(self, layout, multicast_groups=None):
+        self._layout = layout
         self.inner.open(layout, multicast_groups)
 
     def send(self, event: StepEvent) -> float:
-        assert event.grads is not None, "channels carry gradients"
+        assert self._layout is not None, "open() before send()"
         t0 = time.perf_counter()
         before = self.compressor.wire_bytes_total
-        deq = self.compressor.compress(event.grads)
-        deq = {k: np.asarray(v) for k, v in deq.items()}
+        flats = _flats_from_event(self._layout, event)      # pack once
+        deq = self.compressor.compress_flats(self._layout, flats)
         self._sent_bytes[event.step] = (self.compressor.wire_bytes_total
                                         - before)
         stall = time.perf_counter() - t0
-        return stall + self.inner.send(dataclasses.replace(event, grads=deq))
+        return stall + self.inner.send(
+            dataclasses.replace(event, grads=None, flats=deq))
 
     def poll(self) -> list[Delivery]:
         out = self.inner.poll()

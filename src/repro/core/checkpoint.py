@@ -60,6 +60,11 @@ def _persist(leaves: list[np.ndarray], sink: io.BytesIO):
 
 class BaseCheckpointer:
     name = "base"
+    # whether on_step reads event.grads: only gradient-streaming
+    # checkpointers do — the training loop skips the per-step
+    # device->host gradient copy for everyone else (copy-persist
+    # baselines consume state_fn snapshots instead)
+    consumes_grads = False
 
     def __init__(self, freq: int = 1):
         self.freq = max(1, freq)
@@ -248,13 +253,17 @@ class CheckmateCheckpointer(BaseCheckpointer):
 
     The reduced gradients are an *output of the train step* (the RS capture
     point, docs/ARCHITECTURE.md); ``on_step`` sends them into a
-    `GradientChannel` (default: `InProcessChannel`, the zero-copy reference
-    hand-off) and applies the channel's deliveries to the shadow cluster —
-    the optimizer replay happens on shadow CPU threads off the training
-    critical path. The stall charged per step is the channel's
-    sender-visible send cost (``GradientChannel.send``'s return value), so
-    a `PacketizedChannel`'s event-loop wall time — host CPU *simulating*
-    the network — is never booked as training stall.
+    `GradientChannel` (default: `InProcessChannel`) and applies the
+    channel's deliveries to the shadow cluster — the optimizer replay
+    happens on shadow CPU threads off the training critical path. The
+    channel packs the capture into bucket wire layout ONCE at send; the
+    delivery's flat buffers feed the shadow's fused per-bucket apply
+    directly (one pass per state element, docs/channels.md), and
+    ``Delivery.grads`` stays available as a lazy zero-copy leaf view. The
+    stall charged per step is the channel's sender-visible send cost
+    (``GradientChannel.send``'s return value), so a `PacketizedChannel`'s
+    event-loop wall time — host CPU *simulating* the network — is never
+    booked as training stall.
 
     A gated delivery (incomplete capture reported by the transport, e.g. a
     `PacketizedChannel` whose fabric lost mirror frames, §4.3.2) is NOT
@@ -272,6 +281,7 @@ class CheckmateCheckpointer(BaseCheckpointer):
       state, so the resumed stream is contiguous again by construction.
     """
     name = "checkmate"
+    consumes_grads = True
 
     def __init__(self, shadow: ShadowCluster,
                  channel: Optional[GradientChannel] = None):

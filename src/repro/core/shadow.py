@@ -11,6 +11,18 @@ apply — no forward/backward (paper Listing 2):
         buckets.recv()
         optimizer.step()
 
+The bucket *wire layout* is the node's native state format: params/mu/nu
+live as per-bucket contiguous flat buffers in exactly the layout deliveries
+arrive in (`repro.core.buckets`), so an apply is ONE fused optimizer pass
+per bucket — `repro.kernels.ops.fused_adamw_flat` for AdamW,
+`repro.optim.functional.UPDATE_FNS_FLAT` for the rest — with no per-leaf
+dispatch, no dict churn, and no retrace when leaf sets vary (the paper's §5
+streaming-apply story: touch each state element exactly once per
+iteration). Leaf trees only exist at the cold boundaries: ``bootstrap``
+packs them in, ``consolidate`` unpacks them out. ``flat=False`` keeps the
+legacy per-leaf path as a regression oracle
+(tests/test_flat_shadow.py, benchmarks/shadow_timing.py).
+
 Async mode runs one worker thread per node (the paper's timeliness
 requirement §6.3: shadow must finish before training starts the next
 optimizer step); queue depth and per-apply wall time are tracked so the
@@ -22,6 +34,7 @@ import queue
 import threading
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -30,10 +43,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.buckets import BucketLayout, pack_bucket, unpack_bucket
+from repro.core.buckets import (BucketLayout, alloc_flat, bucket_dtype,
+                                pack_bucket, pack_bucket_into, unpack_bucket)
 from repro.core.channel import Delivery, InProcessChannel, StepEvent
 from repro.core.multicast import assign_buckets
-from repro.optim.functional import OptimizerConfig, UPDATE_FNS
+from repro.optim.functional import (OptimizerConfig, UPDATE_FNS,
+                                    UPDATE_FNS_FLAT)
+
+APPLY_TIMES_MAXLEN = 512       # recent-apply window kept per node
 
 
 class ConsolidationTimeout(RuntimeError):
@@ -56,36 +73,112 @@ class ConsolidationTimeout(RuntimeError):
 
 
 class ShadowNode:
-    """One CPU shadow node: partition state + functional optimizer."""
+    """One CPU shadow node: partition state + functional optimizer.
+
+    ``flat=True`` (default) stores the partition as per-bucket flat
+    buffers and applies deliveries with one fused pass per bucket;
+    ``flat=False`` is the legacy per-leaf path (regression oracle).
+    """
 
     def __init__(self, node_id: int, opt: OptimizerConfig,
-                 layout: BucketLayout, bucket_ids: list[int]):
+                 layout: BucketLayout, bucket_ids: list[int],
+                 flat: bool = True,
+                 apply_times_maxlen: int = APPLY_TIMES_MAXLEN):
         self.node_id = node_id
         self.opt = opt
         self.layout = layout
+        self.flat = flat
         self.bucket_ids = sorted(bucket_ids)
         # hot path: resolved once here, not per apply (§6.3 timeliness)
         self._by_id = {b.bucket_id: b for b in layout.buckets}
         ids = set(bucket_ids)
         self._leaves = [s.name for b in layout.buckets
                         if b.bucket_id in ids for s in b.slots]
+        # legacy per-leaf state (flat=False)
         self.params: dict[str, jnp.ndarray] = {}
         self.mu: dict[str, jnp.ndarray] = {}
         self.nu: dict[str, jnp.ndarray] = {}
+        # flat wire-layout state (flat=True): bucket_id -> flat buffer
+        self._pf: dict[int, jnp.ndarray] = {}
+        self._mf: dict[int, jnp.ndarray] = {}
+        self._vf: dict[int, jnp.ndarray] = {}
         self.step = 0
-        self.apply_times: list[float] = []
+        # bounded recent-apply window + exact running counters (long runs
+        # must not grow memory; stats() stays exact via the counters)
+        self.apply_times: deque = deque(maxlen=apply_times_maxlen)
+        self.apply_count = 0
+        self.apply_total_s = 0.0
+        self.apply_max_s = 0.0
         # guards the params/mu/nu/step install so a consolidation snapshot
         # never sees a torn partition (params at t+1, moments at t)
         self.state_lock = threading.Lock()
-        self._update = jax.jit(self._update_fn)
+        # Flat updates DONATE p/m/v: the state buffers are updated in place
+        # (XLA reuses the donated pages), which matters on the shadow host —
+        # the apply is pure memory bandwidth (§5), and re-allocating 3
+        # model-sized buffers per step roughly doubles the write traffic.
+        # Safe because apply() holds state_lock across the call, so no
+        # snapshot can observe a donated (invalidated) buffer.
+        if flat:
+            if opt.name == "adamw":
+                from repro.kernels import ops as _ops
+                cfg = opt
+
+                def _adamw(p, g, m, v, step, lr, scale):
+                    return _ops.fused_adamw_flat(
+                        p, g, m, v, step, lr, scale, b1=cfg.b1, b2=cfg.b2,
+                        eps=cfg.eps, wd=cfg.weight_decay)
+                self._update_flat = jax.jit(_adamw,
+                                            donate_argnums=(0, 2, 3))
+            else:
+                fn = UPDATE_FNS_FLAT[opt.name]
+                self._update_flat = jax.jit(
+                    lambda p, g, m, v, step, lr, scale:
+                    fn(p, g, m, v, step, self.opt, lr, scale),
+                    donate_argnums=(0, 2, 3))
+        else:
+            self._update = jax.jit(self._update_fn)
 
     # -- state ---------------------------------------------------------------
     def bootstrap(self, params, mu, nu, step: int):
+        """Install the replica (cold path: leaf trees -> flat partitions)."""
+        if self.flat:
+            pf, mf, vf = {}, {}, {}
+            for bid in self.bucket_ids:
+                b = self._by_id[bid]
+                pf[bid] = jnp.asarray(pack_bucket_into(
+                    b, params, alloc_flat(b.size, bucket_dtype(b))))
+                mf[bid] = jnp.asarray(pack_bucket_into(
+                    b, mu, alloc_flat(b.size, np.float32)))
+                vf[bid] = jnp.asarray(pack_bucket_into(
+                    b, nu, alloc_flat(b.size, np.float32)))
+            with self.state_lock:
+                self._pf, self._mf, self._vf = pf, mf, vf
+                self.step = int(step)
+            return
         for name in self._leaves:
             self.params[name] = jnp.asarray(params[name])
             self.mu[name] = jnp.asarray(mu[name])
             self.nu[name] = jnp.asarray(nu[name])
         self.step = int(step)
+
+    def snapshot(self) -> tuple[dict, dict, dict, int]:
+        """Apply-atomic (params, mu, nu, step) leaf trees for this
+        partition — the cold flat -> leaf boundary used by consolidate."""
+        with self.state_lock:
+            if not self.flat:
+                return dict(self.params), dict(self.mu), dict(self.nu), \
+                    self.step
+            pf = {bid: np.asarray(a) for bid, a in self._pf.items()}
+            mf = {bid: np.asarray(a) for bid, a in self._mf.items()}
+            vf = {bid: np.asarray(a) for bid, a in self._vf.items()}
+            step = self.step
+        params, mu, nu = {}, {}, {}
+        for bid in self.bucket_ids:
+            b = self._by_id[bid]
+            params.update(unpack_bucket(b, pf[bid], xp=np))
+            mu.update(unpack_bucket(b, mf[bid], xp=np))
+            nu.update(unpack_bucket(b, vf[bid], xp=np))
+        return params, mu, nu, step
 
     # -- update --------------------------------------------------------------
     def _update_fn(self, params, mu, nu, grads, step, lr, scale):
@@ -97,24 +190,58 @@ class ShadowNode:
             out_p[name], out_m[name], out_v[name] = p, m, v
         return out_p, out_m, out_v
 
+    def _record(self, dt: float):
+        self.apply_times.append(dt)
+        self.apply_count += 1
+        self.apply_total_s += dt
+        if dt > self.apply_max_s:
+            self.apply_max_s = dt
+
     def apply(self, step: int, lr: float, flats: dict[int, np.ndarray],
               grad_scale: float = 1.0):
-        """Apply one iteration's bucket gradients for this node's partition."""
+        """Apply one iteration's bucket gradients for this node's partition.
+
+        ``flats`` is the delivery payload in wire layout; only this node's
+        ``bucket_ids`` are read. Flat mode runs ONE fused optimizer pass
+        per bucket directly on the flat state buffers.
+        """
         t0 = time.perf_counter()
+        if self.flat:
+            step_f = jnp.float32(step)
+            lr_f = jnp.float32(lr)
+            scale_f = jnp.float32(grad_scale)
+            # the whole update runs under state_lock: inputs are DONATED to
+            # the fused kernel, so a concurrent snapshot must never read
+            # them mid-apply (it would see invalidated buffers, not a torn
+            # tree)
+            with self.state_lock:
+                for bid in self.bucket_ids:
+                    p, m, v = self._update_flat(
+                        self._pf[bid], jnp.asarray(flats[bid]),
+                        self._mf[bid], self._vf[bid], step_f, lr_f, scale_f)
+                    self._pf[bid] = p
+                    self._mf[bid] = m
+                    self._vf[bid] = v
+                jax.block_until_ready(self._pf)
+                self.step = step
+            self._record(time.perf_counter() - t0)
+            return
         grads = {}
         for bid in self.bucket_ids:
             bucket = self._by_id[bid]
-            grads.update(unpack_bucket(bucket, jnp.asarray(flats[bid]), xp=jnp))
+            grads.update(unpack_bucket(bucket, jnp.asarray(flats[bid]),
+                                       xp=jnp))
         grads = {k: v for k, v in grads.items() if k in self.params}
         p, m, v = self._update(self.params, self.mu, self.nu, grads,
                                jnp.float32(step), jnp.float32(lr),
                                jnp.float32(grad_scale))
+        jax.block_until_ready(p)
         with self.state_lock:
             self.params.update(p)
             self.mu.update(m)
             self.nu.update(v)
             self.step = step
-        self.apply_times.append(time.perf_counter() - t0)
+        self._record(time.perf_counter() - t0)
 
 
 @dataclass
@@ -131,20 +258,25 @@ class ShadowCluster:
     """Checkmate's shadow plane: N nodes x partitioned functional optimizer."""
 
     def __init__(self, layout: BucketLayout, opt: OptimizerConfig,
-                 n_nodes: int = 1, async_mode: bool = False):
+                 n_nodes: int = 1, async_mode: bool = False,
+                 flat: bool = True,
+                 apply_times_maxlen: int = APPLY_TIMES_MAXLEN):
         self.layout = layout
         self.opt = opt
         self.n_nodes = n_nodes
+        self.flat = flat
         self.assignment = assign_buckets(layout, n_nodes)
         self.nodes = [
             ShadowNode(i, opt, layout,
-                       [b for b, n in self.assignment.items() if n == i])
+                       [b for b, n in self.assignment.items() if n == i],
+                       flat=flat, apply_times_maxlen=apply_times_maxlen)
             for i in range(n_nodes)
         ]
         self.async_mode = async_mode
         self.train_step_seen = 0
         self.max_queue_depth = 0
         self._queues: list[queue.Queue] = []
+        self._drained: list[threading.Event] = []
         self._workers: list[threading.Thread] = []
         if async_mode:
             self._start_workers()
@@ -153,26 +285,37 @@ class ShadowCluster:
     def _start_workers(self):
         for node in self.nodes:
             q: queue.Queue = queue.Queue()
-            t = threading.Thread(target=self._worker, args=(node, q),
+            ev = threading.Event()
+            ev.set()                           # empty queue == drained
+            t = threading.Thread(target=self._worker, args=(node, q, ev),
                                  daemon=True)
             t.start()
             self._queues.append(q)
+            self._drained.append(ev)
             self._workers.append(t)
 
-    def _worker(self, node: ShadowNode, q: queue.Queue):
+    def _worker(self, node: ShadowNode, q: queue.Queue,
+                drained: threading.Event):
         by_id = node._by_id
         while True:
             item = q.get()
             if item is None:
                 q.task_done()
+                drained.set()
                 return
-            step, lr, scale, grads = item
-            # bucket packing happens HERE, on the shadow node — the caller
-            # only enqueued a reference (the paper's zero-copy hand-off)
-            flats = {bid: pack_bucket(by_id[bid], grads, xp=np)
-                     for bid in node.bucket_ids}
+            step, lr, scale, grads, flats = item
+            if flats is None:
+                # legacy leaf-tree hand-off: bucket packing happens HERE, on
+                # the shadow node — the caller only enqueued a reference
+                flats = {bid: pack_bucket(by_id[bid], grads, xp=np)
+                         for bid in node.bucket_ids}
             node.apply(step, lr, flats, scale)
             q.task_done()
+            # drain signal for the event-based consolidate wait: set only
+            # when no enqueued work remains (checked under the queue lock)
+            with q.mutex:
+                if q.unfinished_tasks == 0:
+                    drained.set()
 
     # -- API -------------------------------------------------------------------
     def bootstrap(self, params, mu, nu, step: int = 0):
@@ -187,15 +330,21 @@ class ShadowCluster:
     def on_delivery(self, delivery: Delivery):
         """Consume one channel delivery (the ONLY gradient ingress).
 
-        Gated deliveries (``complete=False``) must be filtered by the
-        caller — the shadow refuses a partial apply.
+        The delivery's ``flats`` (wire layout) feed the fused per-bucket
+        apply directly — no unpack, no repack. Gated deliveries
+        (``complete=False``) must be filtered by the caller — the shadow
+        refuses a partial apply.
         """
         if not delivery.complete:
             raise ValueError(
                 f"refusing gated delivery for step {delivery.step}: "
                 f"capture incomplete ({delivery.missing_captures} missing)")
-        self._ingest(delivery.step, delivery.lr, delivery.grads,
-                     delivery.grad_scale)
+        if delivery.flats is not None:
+            self._ingest(delivery.step, delivery.lr, None,
+                         delivery.grad_scale, flats=delivery.flats)
+        else:
+            self._ingest(delivery.step, delivery.lr, delivery.grads,
+                         delivery.grad_scale)
 
     def on_gradients(self, step: int, lr: float, grads: dict,
                      grad_scale: float = 1.0):
@@ -208,24 +357,29 @@ class ShadowCluster:
             DeprecationWarning, stacklevel=2)
         self._ingest(step, lr, grads, grad_scale)
 
-    def _ingest(self, step: int, lr: float, grads: dict,
-                grad_scale: float = 1.0):
+    def _ingest(self, step: int, lr: float, grads: Optional[dict],
+                grad_scale: float = 1.0,
+                flats: Optional[dict] = None):
         """Apply one iteration's reduced gradients to every node.
 
-        Async mode enqueues a REFERENCE only — packing and the optimizer
-        replay run on the shadow workers, off the training critical path.
+        ``flats`` (the wire-layout delivery payload) is handed to nodes as
+        is — zero copies between the channel rx buffer and the fused apply.
+        Async mode enqueues a REFERENCE only — any (legacy) packing and the
+        optimizer replay run on the shadow workers, off the training
+        critical path.
         """
         self.train_step_seen = step
         if self.async_mode:
-            for node, q in zip(self.nodes, self._queues):
-                q.put((step, lr, grad_scale, grads))
+            for node, q, ev in zip(self.nodes, self._queues, self._drained):
+                ev.clear()
+                q.put((step, lr, grad_scale, grads, flats))
                 self.max_queue_depth = max(self.max_queue_depth, q.qsize())
-        else:
+            return
+        if flats is None:
             flats = {b.bucket_id: pack_bucket(b, grads, xp=np)
                      for b in self.layout.buckets}
-            for node in self.nodes:
-                sub = {bid: flats[bid] for bid in node.bucket_ids}
-                node.apply(step, lr, sub, grad_scale)
+        for node in self.nodes:
+            node.apply(step, lr, flats, grad_scale)
 
     @staticmethod
     def _pending(q: queue.Queue) -> int:
@@ -238,15 +392,23 @@ class ShadowCluster:
         Waits up to ``timeout`` seconds (default 60) for in-flight updates
         — end to end, including the apply currently executing, so a wedged
         worker cannot hang recovery — then merges node partitions into full
-        params/mu/nu trees. Raises `ConsolidationTimeout` (carrying the
-        lagging node ids and the partial checkpoint) if any node is still
-        behind at the deadline.
+        params/mu/nu trees. The wait is event-based (each worker signals
+        when its queue drains), not a sleep-poll. Raises
+        `ConsolidationTimeout` (carrying the lagging node ids and the
+        partial checkpoint) if any node is still behind at the deadline.
         """
         if self.async_mode:
-            deadline = time.time() + (60.0 if timeout is None else timeout)
-            while (any(self._pending(q) for q in self._queues)
-                   and time.time() < deadline):
-                time.sleep(0.001)
+            deadline = time.monotonic() + (60.0 if timeout is None else
+                                           timeout)
+            for q, ev in zip(self._queues, self._drained):
+                while self._pending(q):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or not ev.wait(remaining):
+                        break                  # deadline hit: node is lagging
+                    if self._pending(q):
+                        # stale signal (new work arrived since the worker
+                        # drained): re-arm and wait for the next drain
+                        ev.clear()
             lagging = [i for i, q in enumerate(self._queues)
                        if self._pending(q)]
             if lagging:
@@ -259,25 +421,26 @@ class ShadowCluster:
         nu: dict = {}
         steps = []
         for node in self.nodes:
-            with node.state_lock:    # apply-atomic per-partition snapshot
-                params.update(node.params)
-                mu.update(node.mu)
-                nu.update(node.nu)
-                steps.append(node.step)
+            p, m, v, step = node.snapshot()    # apply-atomic per partition
+            params.update(p)
+            mu.update(m)
+            nu.update(v)
+            steps.append(step)
         return {"params": params, "mu": mu, "nu": nu,
                 "step": min(steps, default=0)}
 
     def stats(self) -> ShadowStats:
-        times = [t for n in self.nodes for t in n.apply_times]
-        per_node = [float(np.mean(n.apply_times)) if n.apply_times else 0.0
+        count = sum(n.apply_count for n in self.nodes)
+        total = sum(n.apply_total_s for n in self.nodes)
+        per_node = [n.apply_total_s / n.apply_count if n.apply_count else 0.0
                     for n in self.nodes]
         return ShadowStats(
             steps_applied=min((n.step for n in self.nodes), default=0),
             lag=self.train_step_seen - min((n.step for n in self.nodes),
                                            default=0),
             max_queue_depth=self.max_queue_depth,
-            mean_apply_s=float(np.mean(times)) if times else 0.0,
-            max_apply_s=float(np.max(times)) if times else 0.0,
+            mean_apply_s=total / count if count else 0.0,
+            max_apply_s=max((n.apply_max_s for n in self.nodes), default=0.0),
             per_node_apply_s=per_node)
 
     def shutdown(self):

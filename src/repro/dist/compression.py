@@ -18,6 +18,8 @@ Wire format per leaf: the int8 payload + one f32 scale.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -80,12 +82,16 @@ class Compressor:
 
     def __init__(self):
         self._ef = None
+        self._ef_flat = None           # bucket_id -> flat f32 residual buffer
+        self._layout = None
         self.wire_bytes_total = 0
         self.raw_bytes_total = 0
 
     def compress(self, tree):
         """Quantize one iteration's gradients; returns the dequantized tree
         (what the wire delivers) and accumulates wire/raw byte totals."""
+        assert self._ef_flat is None, \
+            "this Compressor already carries flat (wire-layout) residuals"
         if self._ef is None:
             self._ef = init_error_feedback(tree)
         deq, self._ef, wire = compress_tree(tree, self._ef)
@@ -95,10 +101,50 @@ class Compressor:
             for leaf in jax.tree.leaves(tree))
         return deq
 
+    def compress_flats(self, layout, flats):
+        """Quantize one iteration already in wire layout (bucket_id -> flat
+        buffer, `repro.core.buckets`); returns the dequantized flat buffers.
+
+        One pass over the bucket bytes: each leaf's contiguous slice is
+        quantized in place of tree churn, with the SAME per-leaf scale (and
+        therefore bit-identical dequantized values and residuals) as the
+        leaf-tree `compress` path — quantization is element-wise and the
+        scale is a per-leaf max, which the slice preserves. Residuals are
+        carried as per-bucket flat f32 buffers in the same layout.
+        """
+        assert self._ef is None, \
+            "this Compressor already carries leaf-tree residuals"
+        if self._ef_flat is None:
+            self._layout = layout
+            self._ef_flat = {b.bucket_id: np.zeros(b.size, np.float32)
+                             for b in layout.buckets}
+        from repro.core.buckets import alloc_flat
+        deq, wire, raw = {}, 0, 0
+        for b in layout.buckets:
+            src = np.asarray(flats[b.bucket_id])
+            out = alloc_flat(b.size, np.float32)
+            ef = self._ef_flat[b.bucket_id]
+            for s in b.slots:
+                sl = slice(s.offset, s.offset + s.size)
+                q, scale, r = quantize_leaf(src[sl], ef[sl])
+                out[sl] = np.asarray(dequantize_leaf(q, scale))
+                ef[sl] = np.asarray(r)
+                wire += s.size + 4
+            raw += src.nbytes
+            deq[b.bucket_id] = out
+        self.wire_bytes_total += wire
+        self.raw_bytes_total += raw
+        return deq
+
     @property
     def ef(self):
         """Current error-feedback residual tree (None before first call) —
-        exactly the gradient mass not yet delivered to the stream."""
+        exactly the gradient mass not yet delivered to the stream. When the
+        compressor runs the flat (wire-layout) path, this is a zero-copy
+        leaf view over the per-bucket residual buffers."""
+        if self._ef_flat is not None:
+            from repro.core.buckets import FlatTreeView
+            return FlatTreeView(self._layout, self._ef_flat)
         return self._ef
 
     @property

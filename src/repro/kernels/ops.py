@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import bucket_pack as _bp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_adamw as _fw
+from repro.kernels import ref as _ref
 
 _ON_TPU = jax.default_backend() == "tpu"
 INTERPRET = not _ON_TPU
@@ -44,6 +45,37 @@ def fused_adamw(p, g, m, v, step, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
                                       interpret=INTERPRET)
     return (po[:n].reshape(shape), mo[:n].reshape(shape),
             vo[:n].reshape(shape))
+
+
+@partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "block_rows"))
+def fused_adamw_flat(p, g, m, v, step, lr, scale=1.0, b1=0.9, b2=0.95,
+                     eps=1e-8, wd=0.1, block_rows=1024):
+    """Fused AdamW over one contiguous flat bucket buffer — the shadow hot
+    loop (`repro.core.shadow`), one pass per state element.
+
+    On TPU this lowers to the Mosaic kernel (`fused_adamw.fused_adamw_flat`,
+    2 MB/operand VMEM tiles). On CPU, Pallas interpret mode executes the
+    kernel body in Python per grid cell — orders of magnitude too slow for
+    the hot loop — so the fallback is the pure-jnp oracle (`ref.adamw_ref`),
+    which XLA fuses into a single elementwise pass over the buffer; the
+    interpret-mode kernel stays the correctness oracle in
+    tests/test_kernels.py. ``scale`` (the global-norm clip factor computed
+    on the training side) is folded into the same pass.
+    """
+    gs = g.astype(jnp.float32) * scale
+    if INTERPRET:
+        return _ref.adamw_ref(p, gs, m, v, step, lr, b1=b1, b2=b2, eps=eps,
+                              wd=wd)
+    n = p.size
+    mult = LANES * block_rows
+    pf, _ = _pad_to(p, mult)
+    gf, _ = _pad_to(gs, mult)
+    mf, _ = _pad_to(m, mult)
+    vf, _ = _pad_to(v, mult)
+    po, mo, vo = _fw.fused_adamw_flat(pf, gf, mf, vf, step, lr, b1, b2, eps,
+                                      wd, block_rows=block_rows,
+                                      interpret=False)
+    return po[:n], mo[:n], vo[:n]
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))

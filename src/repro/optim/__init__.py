@@ -1,5 +1,5 @@
 from repro.optim.functional import (  # noqa: F401
     OptimizerConfig, TrainState, adamw_leaf, adam_leaf, sgd_leaf,
-    init_state, apply_updates, UPDATE_FNS,
+    init_state, apply_updates, UPDATE_FNS, UPDATE_FNS_FLAT,
 )
 from repro.optim.schedules import cosine_schedule  # noqa: F401

@@ -63,6 +63,35 @@ def sgd_leaf(p, g, m, v, step, cfg: OptimizerConfig, lr):
 UPDATE_FNS = {"adamw": adamw_leaf, "adam": adam_leaf, "sgd": sgd_leaf}
 
 
+# -- flat (wire-layout) updates ----------------------------------------------
+#
+# The shadow plane stores params/moments as per-bucket contiguous flat
+# buffers (repro.core.buckets wire layout). Because every update above is
+# purely element-wise, the flat variant of an optimizer is the same function
+# applied to the 1-D bucket buffer — one fused pass over each state element,
+# no per-leaf dispatch, no retrace when leaf sets vary. The gradient scale
+# (global-norm clip, computed on the training side) is folded into the same
+# pass instead of materializing ``g * scale``.
+#
+# Bit-identity with the per-leaf path is a tested invariant
+# (tests/test_flat_shadow.py): element-wise math has no cross-element
+# reductions, so per-bucket == per-leaf bitwise.
+
+def adamw_flat(p, g, m, v, step, cfg: OptimizerConfig, lr, scale=1.0):
+    return adamw_leaf(p, g * scale, m, v, step, cfg, lr)
+
+
+def adam_flat(p, g, m, v, step, cfg: OptimizerConfig, lr, scale=1.0):
+    return adam_leaf(p, g * scale, m, v, step, cfg, lr)
+
+
+def sgd_flat(p, g, m, v, step, cfg: OptimizerConfig, lr, scale=1.0):
+    return sgd_leaf(p, g * scale, m, v, step, cfg, lr)
+
+
+UPDATE_FNS_FLAT = {"adamw": adamw_flat, "adam": adam_flat, "sgd": sgd_flat}
+
+
 # -- train state --------------------------------------------------------------
 
 @jax.tree_util.register_pytree_node_class

@@ -5,8 +5,10 @@ The loop is the paper's Listing 1 with the Checkmate hook: the train step
 already returns the reduce-scattered gradients (the multicast payload), the
 loop wraps each iteration in a `repro.core.channel.StepEvent`, and the
 checkpointer's ``on_step(event)`` pushes it into a `GradientChannel` toward
-the shadow plane. Baseline checkpointers ignore grads and do copy-persist
-on the *state* instead, which is what stalls them.
+the shadow plane — the channel packs the capture into bucket wire layout
+once, and the shadow applies the flat buffers with one fused optimizer pass
+per bucket (docs/channels.md). Baseline checkpointers ignore grads and do
+copy-persist on the *state* instead, which is what stalls them.
 """
 from __future__ import annotations
 
@@ -149,7 +151,11 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
             gn = float(metrics["grad_norm"])
             scale = min(1.0, opt.grad_clip / (gn + 1e-9))
         host_grads = None
-        if isinstance(grads, dict):
+        if isinstance(grads, dict) and getattr(checkpointer,
+                                               "consumes_grads", False):
+            # the capture's device->host DMA; the channel packs these host
+            # leaves straight into the wire buffer (one further pass).
+            # Copy-persist baselines never read grads, so they don't pay it.
             host_grads = {k: np.asarray(v) for k, v in grads.items()}
         stall = checkpointer.on_step(StepEvent(
             step=step, grads=host_grads, lr=lr, grad_scale=scale,

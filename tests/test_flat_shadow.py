@@ -1,0 +1,251 @@
+"""Flat-state shadow plane: the wire layout as the native state format.
+
+Pins the invariants the flat hot path rests on:
+
+* flat fused apply is BIT-identical to the seed per-leaf path for every
+  optimizer in UPDATE_FNS, across multi-bucket layouts, node counts, and
+  sync/async mode (property test);
+* ``Delivery.grads`` is a lazy zero-copy leaf view — no element is ever
+  copied, for in-process and packetized transports alike;
+* ``ShadowNode.apply_times`` is bounded while ``stats()`` stays exact;
+* the flat one-pass compressor path is bit-identical to the leaf path.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buckets import (FlatTreeView, alloc_flat, layout_for_tree,
+                                pack_all)
+from repro.core.channel import (CompressedChannel, InProcessChannel,
+                                PacketizedChannel, StepEvent)
+from repro.core.shadow import ShadowCluster
+from repro.dist.compression import Compressor
+from repro.optim import OptimizerConfig, UPDATE_FNS
+
+
+def _tree(n_leaves: int, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {f"leaf{k}": rng.standard_normal((6 + 2 * k, 5))
+            .astype(np.float32) for k in range(n_leaves)}
+
+
+def _drive(layout, params, grad_steps, *, flat, opt, n_nodes=2,
+           async_mode=False, grad_scale=1.0):
+    shadow = ShadowCluster(layout, opt, n_nodes=n_nodes, flat=flat,
+                           async_mode=async_mode)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    chan = InProcessChannel()
+    chan.open(layout)
+    for step, grads in enumerate(grad_steps, start=1):
+        chan.send(StepEvent(step=step, grads=grads, lr=1e-3,
+                            grad_scale=grad_scale))
+        for d in chan.poll():
+            shadow.on_delivery(d)
+    chan.close()
+    ckpt = shadow.consolidate(timeout=60)
+    shadow.shutdown()
+    return ckpt
+
+
+# -- flat == per-leaf, bitwise, everywhere ------------------------------------
+
+@given(st.sampled_from(sorted(UPDATE_FNS)),
+       st.sampled_from([256, 600, 1 << 20]),
+       st.sampled_from([1, 3]), st.sampled_from([False, True]))
+@settings(max_examples=8, deadline=None)
+def test_flat_apply_bit_identical_to_per_leaf(opt_name, cap, n_nodes,
+                                              async_mode):
+    """The flat fused per-bucket apply produces the SAME bits as the seed
+    per-leaf path for every functional optimizer, across bucket layouts
+    (cap 256/600 give multi-bucket, 1 MiB collapses to one bucket),
+    partitionings, and sync/async delivery."""
+    opt = OptimizerConfig(name=opt_name, lr=1e-3)
+    params = _tree(4, seed=cap % 13)
+    layout = layout_for_tree(params, cap_bytes=cap)
+    rng = np.random.default_rng(99)
+    grad_steps = [{k: rng.standard_normal(v.shape).astype(np.float32) * 0.01
+                   for k, v in params.items()} for _ in range(3)]
+
+    a = _drive(layout, params, grad_steps, flat=True, opt=opt,
+               n_nodes=n_nodes, async_mode=async_mode, grad_scale=0.7)
+    b = _drive(layout, params, grad_steps, flat=False, opt=opt,
+               n_nodes=n_nodes, grad_scale=0.7)
+    assert a["step"] == b["step"] == 3
+    for k in params:
+        assert np.array_equal(a["params"][k], b["params"][k]), k
+        assert np.array_equal(a["mu"][k], b["mu"][k]), k
+        assert np.array_equal(a["nu"][k], b["nu"][k]), k
+
+
+# -- Delivery.grads never copies ----------------------------------------------
+
+def test_inprocess_delivery_grads_views_alias_flats():
+    params = _tree(3, seed=1)
+    layout = layout_for_tree(params, cap_bytes=600)
+    chan = InProcessChannel()
+    chan.open(layout)
+    chan.send(StepEvent(step=1, grads=params, lr=1e-3))
+    (d,) = chan.poll()
+    assert d.flats is not None and isinstance(d.grads, FlatTreeView)
+    index = layout.leaf_index()
+    for name, v in params.items():
+        bid, slot = index[name]
+        view = d.grads[name]
+        assert view.shape == v.shape
+        assert np.array_equal(view, v)
+        # the view aliases the flat buffer: zero copies either way
+        assert np.shares_memory(view, d.flats[bid])
+        d.flats[bid][slot.offset] = 123.0
+        assert view.flat[0] == 123.0
+
+
+def test_packetized_delivery_grads_views_alias_rx_buffer():
+    """The packetized delivery's leaf views alias the fabric rx buffer
+    itself — reassembly is the last time gradient bytes are touched."""
+    params = _tree(3, seed=2)
+    layout = layout_for_tree(params, cap_bytes=600)
+    chan = PacketizedChannel(ranks_per_group=4)
+    chan.open(layout)
+    chan.send(StepEvent(step=1, grads=params, lr=1e-3))
+    (d,) = chan.poll()
+    assert d.complete
+    bases = set()
+    for name, v in params.items():
+        bid, _ = layout.leaf_index()[name]
+        view = d.grads[name]
+        assert np.array_equal(view, v)          # loss-free fabric: exact bytes
+        assert np.shares_memory(view, d.flats[bid])
+        base = view
+        while base.base is not None:
+            base = base.base
+        bases.add(id(base))
+    assert len(bases) == 1                      # one rx buffer behind them all
+    chan.close()
+
+
+def test_packetized_send_reuses_wire_buffer():
+    """open() hoists the topology/meta/buffer work; per-send the tx wire
+    buffer is reused, not reallocated."""
+    params = _tree(2, seed=3)
+    layout = layout_for_tree(params, cap_bytes=600)
+    chan = PacketizedChannel(ranks_per_group=4)
+    chan.open(layout)
+    src_before = chan._src_buf
+    metas_before = chan._metas
+    for step in (1, 2, 3):
+        chan.send(StepEvent(step=step, grads=params, lr=1e-3))
+    assert chan._src_buf is src_before
+    assert chan._metas is metas_before
+    ds = chan.poll()
+    # rx buffers must NOT be shared across deliveries (consumers hold them)
+    assert not np.shares_memory(ds[0].flats[0], ds[1].flats[0])
+    chan.close()
+
+
+# -- bounded apply_times, exact stats -----------------------------------------
+
+def test_apply_times_bounded_stats_exact():
+    params = _tree(2, seed=4)
+    layout = layout_for_tree(params, cap_bytes=600)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=1,
+                           apply_times_maxlen=4)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    chan = InProcessChannel()
+    chan.open(layout)
+    n_steps = 7
+    for step in range(1, n_steps + 1):
+        chan.send(StepEvent(step=step, grads=params, lr=1e-3))
+        for d in chan.poll():
+            shadow.on_delivery(d)
+    node = shadow.nodes[0]
+    assert len(node.apply_times) == 4           # bounded window
+    assert node.apply_count == n_steps          # exact counters keep going
+    st_ = shadow.stats()
+    assert st_.mean_apply_s == pytest.approx(
+        node.apply_total_s / node.apply_count)
+    assert st_.max_apply_s == node.apply_max_s
+    assert st_.max_apply_s >= max(node.apply_times)
+
+
+# -- flat compressor path == leaf compressor path -----------------------------
+
+def test_compress_flats_bit_identical_to_leaf_path():
+    params = _tree(3, seed=5)
+    layout = layout_for_tree(params, cap_bytes=600)
+    rng = np.random.default_rng(11)
+    steps = [{k: rng.standard_normal(v.shape).astype(np.float32)
+              for k, v in params.items()} for _ in range(3)]
+
+    leaf_c, flat_c = Compressor(), Compressor()
+    for tree in steps:
+        deq_leaf = {k: np.asarray(v) for k, v in leaf_c.compress(tree).items()}
+        deq_flat = flat_c.compress_flats(layout, pack_all(layout, tree))
+        view = FlatTreeView(layout, deq_flat)
+        for k in params:
+            assert np.array_equal(deq_leaf[k], view[k]), k
+    assert leaf_c.wire_bytes_total == flat_c.wire_bytes_total
+    assert leaf_c.raw_bytes_total == flat_c.raw_bytes_total
+    for k in params:                            # residuals identical too
+        assert np.array_equal(np.asarray(leaf_c.ef[k]), flat_c.ef[k]), k
+
+
+def test_mixed_dtype_trees_bucket_per_dtype_and_stay_bit_identical():
+    """Buckets never mix dtypes (a shared wire buffer would silently
+    promote the narrower leaves), so flat state keeps each leaf's dtype —
+    and its per-step rounding — exactly like the per-leaf path."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(6)
+    params = {
+        "a.w": rng.standard_normal((8, 4)).astype(np.float32),
+        "b.w": jnp.asarray(rng.standard_normal((8, 4)), jnp.bfloat16),
+        "c.w": rng.standard_normal((8, 4)).astype(np.float32),
+    }
+    layout = layout_for_tree(params)
+    for b in layout.buckets:
+        assert len({s.dtype for s in b.slots}) == 1, b
+    grad_steps = [{k: rng.standard_normal((8, 4)).astype(np.float32) * 0.01
+                   for k in params} for _ in range(3)]
+    opt = OptimizerConfig(lr=1e-3)
+    a = _drive(layout, params, grad_steps, flat=True, opt=opt)
+    b = _drive(layout, params, grad_steps, flat=False, opt=opt)
+    for k in params:
+        assert a["params"][k].dtype == np.asarray(params[k]).dtype, k
+        assert np.array_equal(a["params"][k], b["params"][k]), k
+        assert np.array_equal(a["mu"][k], b["mu"][k]), k
+
+
+def test_compressed_over_packetized_keeps_f32_stream_on_narrow_layout():
+    """The dequantized f32 stand-in must ride the packetized wire as f32
+    even when the param layout is bf16 — the wire adapts to the payload
+    dtype instead of silently downcasting, so the two transports stay
+    bit-identical and the EF residuals track what was actually delivered."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(8)
+    params = {f"w{i}": jnp.asarray(rng.standard_normal((8, 4)), jnp.bfloat16)
+              for i in range(3)}
+    layout = layout_for_tree(params, cap_bytes=600)
+    grads = {k: rng.standard_normal((8, 4)).astype(np.float32)
+             for k in params}
+
+    def deliver(chan):
+        chan.open(layout)
+        chan.send(StepEvent(step=1, grads=grads, lr=1e-3))
+        (d,) = chan.poll()
+        chan.close()
+        return d
+
+    a = deliver(CompressedChannel(InProcessChannel()))
+    b = deliver(CompressedChannel(PacketizedChannel(ranks_per_group=4)))
+    for bid in a.flats:
+        assert a.flats[bid].dtype == np.float32
+        assert b.flats[bid].dtype == np.float32
+        assert np.array_equal(a.flats[bid], b.flats[bid])
+
+
+def test_alloc_flat_is_xla_aligned():
+    for n in (1, 7, 127, 4096):
+        buf = alloc_flat(n, np.float32)
+        assert buf.size == n and buf.dtype == np.float32
+        assert buf.ctypes.data % 64 == 0

@@ -1,89 +1,82 @@
-"""Fabric failure drills on the event-driven network simulator, ending in a
-recovery that is bit-identical to an uninterrupted run (paper §4 + Fig 9).
+"""Fabric failure drills through the chaos harness (docs/harness.md),
+ending in a recovery that is bit-identical to an uninterrupted run
+(paper §4 + Fig 9).
 
     PYTHONPATH=src python examples/fabric_failures.py
 
-Three scenarios on a rail-optimized leaf/spine fabric shared by two DP
-groups:
+All failure injection rides the harness API — declarative Scenarios whose
+`FabricFailure`s reach the event-driven simulator through the
+PacketizedChannel, with the invariant registry checking every step:
+
   1. spine kill     -> ECMP reroutes; ring and capture both complete.
   2. uplink cut     -> same, at smaller blast radius.
-  3. shadow NIC cut -> training unaffected, but that iteration's capture is
-     incomplete; the PacketizedChannel surfaces it as a gated delivery, the
-     shadow cluster skips the apply, and when the training node later
-     fails, `core.recovery` consolidates one step earlier and the resumed
-     run converges bit-identically.
+  3. shadow NIC cut -> training unaffected, but that iteration's capture
+     is incomplete; the channel surfaces it as a gated delivery and the
+     shadow cluster skips the apply (contiguity preserved).
+  4. gated capture + training failure (full stack): recovery consolidates
+     one step earlier and the resumed run converges bit-identically.
 """
 import numpy as np
-import jax
 
-import repro.configs as C
-from repro.core.buckets import layout_for_tree
-from repro.core.channel import PacketizedChannel
-from repro.core.checkpoint import CheckmateCheckpointer
-from repro.core.recovery import FailurePlan
-from repro.core.shadow import ShadowCluster
-from repro.dist.sharding import ShardingRules, make_smoke_mesh
-from repro.net.simulator import FailureSpec, simulate_fabric
-from repro.optim import OptimizerConfig
-from repro.train.loop import train
-from repro.train.step import make_train_state
+from repro.harness import (ChannelSpec, FabricFailure, FailureSchedule,
+                           Scenario, run_scenario)
 
-FABRIC = dict(n_dp_groups=2, ranks_per_group=64,
-              grad_bytes_per_group=64 * 8192, topology="rail",
-              n_shadow_nodes=2, ranks_per_leaf=16)
+RAIL = ChannelSpec(kind="packetized", topology="rail-optimized",
+                   n_dp_groups=2, ranks_per_group=4)
+
+
+def fabric_of(result, step):
+    """The FabricResult of ``step``'s delivery (channel-level runs poll
+    one delivery per step)."""
+    for rec in result.trace.records:
+        for p in rec.polls:
+            if p.step == step:
+                return p.fabric
+    raise KeyError(step)
 
 
 def main():
-    mid = simulate_fabric(**FABRIC).duration_s / 2
+    drills = {
+        "spine kill": FabricFailure(step=2, kind="switch", target="spine0"),
+        "uplink cut": FabricFailure(step=2, kind="link",
+                                    target=("leaf0", "spine0")),
+        "shadow cut": FabricFailure(step=2, kind="capture"),
+    }
+    for label, failure in drills.items():
+        sc = Scenario(name=f"drill-{label.replace(' ', '-')}", seed=5,
+                      steps=3, channel=RAIL,
+                      schedule=FailureSchedule(fabric=(failure,)))
+        result = run_scenario(sc)
+        f = fabric_of(result, 2)
+        print(f"{label:<12}: ok={result.passed} ring_ok={f.ring_completed} "
+              f"capture_ok={f.reassembled_ok} rerouted={f.rerouted} "
+              f"retx={f.retransmits} missing={f.missing_captures}")
+        assert result.passed, result.violations
+        assert f.ring_completed              # training traffic never stalls
 
-    r = simulate_fabric(**FABRIC,
-                        failures=[FailureSpec(mid, "switch", "spine0")])
-    print(f"spine kill   : rerouted={r.rerouted} retx={r.retransmits} "
-          f"capture_ok={r.reassembled_ok}")
-
-    r = simulate_fabric(**FABRIC,
-                        failures=[FailureSpec(mid, "link",
-                                              ("leaf0", "spine1"))])
-    print(f"uplink cut   : rerouted={r.rerouted} retx={r.retransmits} "
-          f"capture_ok={r.reassembled_ok}")
-
-    fab = simulate_fabric(**FABRIC,
-                          failures=[FailureSpec(mid, "shadow_nic", "s0"),
-                                    FailureSpec(mid, "shadow_nic", "s1")])
-    print(f"shadow cut   : ring_ok={fab.ring_completed} "
-          f"capture_ok={fab.reassembled_ok} "
-          f"missing={fab.missing_captures}")
-
-    # couple the capture loss to training: the channel's own fabric loses
-    # iteration LOST mid-run (both shadow NICs cut), so its delivery is
+    # couple the capture loss to training: the channel's fabric loses
+    # iteration LOST mid-run (every shadow NIC cut), so its delivery is
     # gated and the shadow apply skipped; a training failure at LOST+1
-    # then recovers from LOST-1
-    LOST, steps, batch, seq, seed = 4, 8, 2, 16, 5
-    cfg = C.get("tinyllama-1.1b").reduced()
-    rules = ShardingRules(make_smoke_mesh())
-    opt = OptimizerConfig(lr=1e-3)
-    state_a, _ = train(cfg, rules, steps=steps, batch=batch, seq=seq,
-                       opt=opt, seed=seed)
-
-    s0 = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
-    shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=2)
-    shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
-    channel = PacketizedChannel(topology="rail-optimized",
-                                n_dp_groups=2, ranks_per_group=4,
-                                failures_at={LOST: "capture"})
-    ck = CheckmateCheckpointer(shadow, channel=channel)
-    state_b, stats = train(
-        cfg, rules, steps=steps, batch=batch, seq=seq, opt=opt, seed=seed,
-        state=s0, checkpointer=ck,
-        failure_plan=FailurePlan((LOST + 1,)))
-
-    same = all(np.array_equal(np.asarray(state_a.params[k]),
-                              np.asarray(state_b.params[k]))
-               for k in state_a.params)
-    print(f"recovery     : recovered_at={stats.recovered_at} "
-          f"gated={ck.skipped_steps} bit_identical={same}")
-    assert same and stats.recovered_at == [LOST - 1]
-    assert ck.skipped_steps == [LOST]
+    # then recovers from LOST-1, bit-identically to the reference run the
+    # harness executes alongside
+    LOST = 4
+    sc = Scenario(
+        name="fabric-gated-recovery-example", level="full",
+        arch="tinyllama-1.1b", steps=8, batch=2, seq=16, seed=5,
+        channel=RAIL,
+        schedule=FailureSchedule(
+            train_fail_steps=(LOST + 1,),
+            fabric=(FabricFailure(step=LOST, kind="capture"),)))
+    result = run_scenario(sc)
+    trace = result.trace
+    same = all(np.array_equal(trace.final["params"][k],
+                              trace.ref_final["params"][k])
+               for k in trace.ref_final["params"])
+    print(f"recovery    : recovered_at={trace.stats.recovered_at} "
+          f"gated={trace.checkpointer.skipped_steps} bit_identical={same}")
+    assert result.passed, result.violations
+    assert same and trace.stats.recovered_at == [LOST - 1]
+    assert trace.checkpointer.skipped_steps == [LOST]
 
 
 if __name__ == "__main__":

@@ -2,65 +2,52 @@
 from the per-iteration shadow checkpoint, converges IDENTICALLY to an
 uninterrupted run — bit-for-bit.
 
-All gradients flow through a `PacketizedChannel` (buckets -> frames ->
-fabric -> reassembly). The second failure is compounded: the fabric loses
-step 11's capture mid-iteration (shadow-NIC cut), the channel reports a
-gated delivery, and when training fails at step 12 recovery lands on the
-last FULLY captured step (10) — no manual lost-step bookkeeping anywhere.
+Failure injection goes through the chaos harness (`repro.harness`,
+docs/harness.md) — the one blessed path: a declarative Scenario drives
+train loop -> PacketizedChannel (buckets -> frames -> fabric ->
+reassembly) -> shadow plane -> recovery, and the invariant registry
+(resume-bit-identity, replay-determinism, contiguity, exactly-once,
+zero-overhead accounting) checks every step. The second failure is
+compounded: the fabric loses step 11's capture mid-iteration (shadow-NIC
+cut), the channel reports a gated delivery, and when training fails at
+step 12 recovery lands on the last FULLY captured step (10) — no manual
+lost-step bookkeeping anywhere.
 
     PYTHONPATH=src python examples/failure_recovery.py
 """
 import numpy as np
-import jax
 
-import repro.configs as C
-from repro.core.buckets import layout_for_tree
-from repro.core.channel import PacketizedChannel
-from repro.core.checkpoint import CheckmateCheckpointer
-from repro.core.recovery import FailurePlan
-from repro.core.shadow import ShadowCluster
-from repro.dist.sharding import ShardingRules, make_smoke_mesh
-from repro.optim import OptimizerConfig
-from repro.train.loop import train
-from repro.train.step import make_train_state
+from repro.harness import (ChannelSpec, FabricFailure, FailureSchedule,
+                           Scenario, run_scenario)
 
 
 def main():
-    cfg = C.get("llama3.2-3b").reduced()
-    mesh = make_smoke_mesh()
-    rules = ShardingRules(mesh)
-    opt = OptimizerConfig(lr=1e-3)
-    steps, batch, seq, seed = 16, 8, 64, 7
+    scenario = Scenario(
+        name="failure-recovery-example", level="full",
+        arch="llama3.2-3b", steps=16, batch=8, seq=64, seed=7,
+        channel=ChannelSpec(kind="packetized", topology="rail-optimized",
+                            n_dp_groups=2, ranks_per_group=4),
+        schedule=FailureSchedule(
+            train_fail_steps=(6, 12),
+            fabric=(FabricFailure(step=11, kind="capture"),)))
 
-    # Run A: uninterrupted.
-    state_a, stats_a = train(cfg, rules, steps=steps, batch=batch, seq=seq,
-                             opt=opt, seed=seed)
+    result = run_scenario(scenario)
+    trace = result.trace
+    stats, ck = trace.stats, trace.checkpointer
 
-    # Run B: training failures at steps 6 and 12; the fabric additionally
-    # loses step 11's capture, gating that delivery.
-    s0 = make_train_state(jax.random.PRNGKey(seed), cfg, rules)
-    shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=2)
-    shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
-    channel = PacketizedChannel(topology="rail-optimized",
-                                n_dp_groups=2, ranks_per_group=4,
-                                failures_at={11: "capture"})
-    ck = CheckmateCheckpointer(shadow, channel=channel)
-    state_b, stats_b = train(cfg, rules, steps=steps, batch=batch, seq=seq,
-                             opt=opt, seed=seed, state=s0, checkpointer=ck,
-                             failure_plan=FailurePlan((6, 12)))
-
-    same = all(np.array_equal(np.asarray(state_a.params[k]),
-                              np.asarray(state_b.params[k]))
-               for k in state_a.params)
-    print(f"run A losses: {[f'{l:.4f}' for l in stats_a.losses[-4:]]}")
-    print(f"run B losses: {[f'{l:.4f}' for l in stats_b.losses[-4:]]}")
-    print(f"failures={stats_b.failures} recoveries={stats_b.recoveries} "
-          f"recovered_at={stats_b.recovered_at} "
+    same = all(np.array_equal(trace.final["params"][k],
+                              trace.ref_final["params"][k])
+               for k in trace.ref_final["params"])
+    print(f"run A losses: {[f'{l:.4f}' for l in trace.ref_losses[-4:]]}")
+    print(f"run B losses: {[f'{l:.4f}' for l in stats.losses[-4:]]}")
+    print(f"failures={stats.failures} recoveries={stats.recoveries} "
+          f"recovered_at={stats.recovered_at} "
           f"gated_captures={ck.skipped_steps}")
     print(f"final states identical: {same}")
-    assert same and stats_b.recoveries == 2
+    print(f"invariants: {'all passed' if result.passed else result.violations}")
+    assert result.passed and same and stats.recoveries == 2
     # fully-per-iteration recovery at 5; capture-gated recovery at 10
-    assert stats_b.recovered_at == [5, 10]
+    assert stats.recovered_at == [5, 10]
     assert ck.skipped_steps == [11]
 
 

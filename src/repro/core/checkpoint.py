@@ -291,6 +291,7 @@ class CheckmateCheckpointer(BaseCheckpointer):
                                          else InProcessChannel())
         self.channel.open(shadow.layout)
         self.skipped_steps: list[int] = []
+        self.resyncs: list[int] = []
         self._desynced = False
 
     def _apply_deliveries(self):
@@ -314,6 +315,7 @@ class CheckmateCheckpointer(BaseCheckpointer):
             self.shadow.bootstrap(snap["params"], snap["mu"], snap["nu"],
                                   int(snap["step"]))
             self._desynced = False
+            self.resyncs.append(event.step)
             return time.perf_counter() - t0
         assert event.grads is not None, "Checkmate consumes captured gradients"
         stall = float(self.channel.send(event) or 0.0)

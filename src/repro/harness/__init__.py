@@ -1,0 +1,24 @@
+"""Deterministic chaos co-simulation harness (docs/harness.md).
+
+Declarative `Scenario` specs drive the full stack — train loop ->
+GradientChannel -> fabric simulator -> shadow plane -> recovery — under a
+seeded `FailureSchedule`, with a registry of system-wide `Invariant`
+checkers evaluated after every step. Violations emit minimal repro
+bundles (seed + scenario JSON + failing step) that replay bit-identically.
+
+    from repro.harness import GOLDEN, run_scenario, sample_scenario
+    result = run_scenario(GOLDEN["gated-then-recovery"])
+    assert result.passed, result.violations
+
+CLI: ``python -m repro.harness {run,sweep,replay}``.
+"""
+from repro.harness.corpus import GOLDEN                          # noqa: F401
+from repro.harness.invariants import (REGISTRY, Invariant,       # noqa: F401
+                                      Violation, register)
+from repro.harness.runner import (InstrumentedChannel,           # noqa: F401
+                                  ScenarioResult, StepRecord, Trace,
+                                  replay_bundle, run_scenario, write_bundle)
+from repro.harness.scenario import (ChannelSpec, FabricFailure,  # noqa: F401
+                                    FailureSchedule, Scenario,
+                                    repro_seed, sample_scenario,
+                                    scenario_strategy)

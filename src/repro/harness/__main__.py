@@ -1,0 +1,128 @@
+"""Chaos harness CLI (docs/harness.md).
+
+    python -m repro.harness run --corpus golden [--bundle-dir DIR]
+    python -m repro.harness run --scenario gated-then-recovery
+    python -m repro.harness run --seed 1234 [--level channel|full]
+    python -m repro.harness sweep --n 8 [--seed BASE] [--bundle-dir DIR]
+    python -m repro.harness replay --seed 1234
+    python -m repro.harness replay --bundle chaos-bundles/foo.json
+
+``run`` / ``sweep`` exit nonzero if any invariant is violated, writing a
+minimal repro bundle per violating scenario when --bundle-dir is given.
+``replay`` re-runs a bundle (or a sampled seed, twice) and exits zero iff
+the outcome reproduces bit-identically — which is what makes every CI
+chaos failure a one-integer local repro.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.harness.corpus import GOLDEN
+from repro.harness.runner import replay_bundle, run_scenario
+from repro.harness.scenario import repro_seed, sample_scenario
+
+
+def _run_many(scenarios, bundle_dir) -> int:
+    failed = 0
+    for sc in scenarios:
+        result = run_scenario(sc, bundle_dir=bundle_dir)
+        print(result.describe())
+        if not result.passed:
+            failed += 1
+            if result.bundle_path:
+                print(f"         repro bundle -> {result.bundle_path}")
+    n = len(scenarios)
+    print(f"# {n - failed}/{n} scenarios passed"
+          + (f", {failed} FAILED" if failed else ""))
+    return 1 if failed else 0
+
+
+def _cmd_run(args) -> int:
+    if args.scenario:
+        if args.scenario not in GOLDEN:
+            print(f"run: unknown scenario {args.scenario!r}; golden "
+                  f"scenarios: {', '.join(sorted(GOLDEN))}", file=sys.stderr)
+            return 2
+        scenarios = [GOLDEN[args.scenario]]
+    elif args.corpus:
+        scenarios = list(GOLDEN.values())
+    elif args.seed is not None:
+        scenarios = [sample_scenario(args.seed, level=args.level)]
+    else:
+        print("run: pass --corpus golden, --scenario NAME, or --seed N",
+              file=sys.stderr)
+        return 2
+    return _run_many(scenarios, args.bundle_dir)
+
+
+def _cmd_sweep(args) -> int:
+    base = repro_seed() if args.seed is None else args.seed
+    print(f"# sweep: {args.n} scenarios from base seed {base} "
+          f"(replay any with: python -m repro.harness replay --seed S"
+          + (f" --level {args.level}" if args.level else "") + ")")
+    scenarios = [sample_scenario(base + i, level=args.level)
+                 for i in range(args.n)]
+    return _run_many(scenarios, args.bundle_dir)
+
+
+def _cmd_replay(args) -> int:
+    if args.bundle:
+        result, identical = replay_bundle(args.bundle)
+        print(result.describe())
+        verdict = ("reproduced bit-identically" if identical
+                   else "DID NOT reproduce")
+        print(f"# bundle {verdict}: {args.bundle}")
+        return 0 if identical else 1
+    if args.seed is None:
+        print("replay: pass --bundle PATH or --seed N", file=sys.stderr)
+        return 2
+    sc = sample_scenario(args.seed, level=args.level)
+    a = run_scenario(sc).bundle()
+    b = run_scenario(sample_scenario(args.seed, level=args.level)).bundle()
+    identical = a == b
+    print(f"seed {args.seed} -> {sc.name}: "
+          f"{len(a['violations'])} violation(s), replay "
+          f"{'bit-identical' if identical else 'DIVERGED'}")
+    return 0 if identical else 1
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.harness",
+        description="Deterministic chaos co-simulation harness "
+                    "(docs/harness.md)")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    run = sub.add_parser("run", help="run golden corpus / named / sampled "
+                                     "scenarios")
+    run.add_argument("--corpus", choices=["golden"])
+    run.add_argument("--scenario", help="golden scenario name")
+    run.add_argument("--seed", type=int,
+                     help="sample one random scenario from this seed")
+    run.add_argument("--level", choices=["channel", "full"])
+    run.add_argument("--bundle-dir",
+                     help="write violation repro bundles here")
+    run.set_defaults(fn=_cmd_run)
+
+    sweep = sub.add_parser("sweep", help="run N seeded random scenarios")
+    sweep.add_argument("--n", type=int, default=8)
+    sweep.add_argument("--seed", type=int,
+                       help="base seed (default: REPRO_SEED env var or 0)")
+    sweep.add_argument("--level", choices=["channel", "full"])
+    sweep.add_argument("--bundle-dir")
+    sweep.set_defaults(fn=_cmd_sweep)
+
+    rep = sub.add_parser("replay", help="re-run a violation bundle or a "
+                                        "sampled seed bit-identically")
+    rep.add_argument("--bundle", help="path to a repro bundle JSON")
+    rep.add_argument("--seed", type=int)
+    rep.add_argument("--level", choices=["channel", "full"])
+    rep.set_defaults(fn=_cmd_replay)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

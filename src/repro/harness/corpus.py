@@ -1,0 +1,122 @@
+"""The golden scenario corpus: named chaos drills spanning the scenario
+space — single / rail-optimized / strided topologies x all three channel
+stacks x every failure class (link, switch, shadow-NIC, gated-capture
+bursts, worker wedge, training-node failures, multi-failure sequences).
+
+Every golden scenario must pass every applicable invariant;
+``python -m repro.harness run --corpus golden`` is the CI chaos gate.
+Channel-level scenarios drive checkpointer -> channel -> fabric -> shadow
+on a synthetic stream (fast); full-level ones run the real training loop.
+"""
+from __future__ import annotations
+
+from repro.harness.scenario import (ChannelSpec, FabricFailure,
+                                    FailureSchedule, Scenario)
+
+_RAIL = dict(kind="packetized", topology="rail-optimized")
+
+
+def _sc(name: str, **kw) -> Scenario:
+    return Scenario(name=name, **kw).validate()
+
+
+GOLDEN: dict[str, Scenario] = {s.name: s for s in [
+    # -- clean transports: every topology, every channel stack --------------
+    _sc("inprocess-clean", seed=11, steps=5),
+    _sc("packetized-single-clean", seed=12, steps=5,
+        channel=ChannelSpec(kind="packetized", topology="single")),
+    _sc("packetized-rail-clean", seed=13, steps=5,
+        channel=ChannelSpec(**_RAIL)),
+    _sc("packetized-strided-clean", seed=14, steps=5,
+        channel=ChannelSpec(kind="packetized", topology="leaf-spine")),
+    _sc("packetized-two-groups", seed=15, steps=4, n_leaves=4,
+        channel=ChannelSpec(**_RAIL, n_dp_groups=2, ranks_per_group=4)),
+    _sc("packetized-replicated", seed=16, steps=4,
+        channel=ChannelSpec(**_RAIL, replication_factor=2)),
+    _sc("async-shadow-clean", seed=17, steps=5, shadow_async=True,
+        shadow_nodes=3, channel=ChannelSpec(**_RAIL)),
+    _sc("adam-nodes3-clean", seed=18, steps=5, optimizer="adam",
+        shadow_nodes=3, channel=ChannelSpec(kind="packetized",
+                                            topology="single")),
+
+    # -- gated captures: freeze, resync, burst ------------------------------
+    _sc("capture-frozen", seed=21, steps=4, resync=False,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=2, kind="capture"),))),
+    _sc("capture-resync", seed=22, steps=5,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=3, kind="capture"),))),
+    _sc("capture-burst", seed=23, steps=6,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=3, kind="capture"),
+            FabricFailure(step=4, kind="capture")))),
+
+    # -- hardware kills mid-iteration ---------------------------------------
+    _sc("shadow-nic-kill", seed=31, steps=5,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=3, kind="shadow_nic", target="s0"),))),
+    _sc("spine-kill-reroutes", seed=32, steps=5,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=3, kind="switch", target="spine0"),))),
+    _sc("uplink-cut-reroutes", seed=33, steps=5,
+        channel=ChannelSpec(kind="packetized", topology="leaf-spine"),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=2, kind="link",
+                          target=("leaf0", "spine0")),))),
+    _sc("multi-failure-sequence", seed=34, steps=5,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=2, kind="link", target=("leaf0", "spine0")),
+            FabricFailure(step=2, kind="switch", target="spine1",
+                          at_us=1.0),
+            FabricFailure(step=4, kind="shadow_nic", target="s1")))),
+
+    # -- recovery: training-node failures rewind onto the shadow ------------
+    _sc("inprocess-recovery", seed=41, steps=6,
+        schedule=FailureSchedule(train_fail_steps=(4,))),
+    _sc("gated-then-recovery", seed=42, steps=6,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(
+            train_fail_steps=(5,),
+            fabric=(FabricFailure(step=4, kind="capture"),))),
+    _sc("double-recovery", seed=43, steps=7,
+        channel=ChannelSpec(kind="packetized", topology="single"),
+        schedule=FailureSchedule(train_fail_steps=(3, 6))),
+
+    # -- compressed stream: EF bound + gated compressed captures ------------
+    _sc("compressed-sgd-ef-bound", seed=51, steps=5, optimizer="sgd",
+        momentum=0.0, lr=0.1,
+        channel=ChannelSpec(kind="compressed")),
+    _sc("compressed-packetized", seed=52, steps=5,
+        channel=ChannelSpec(kind="compressed", inner="packetized",
+                            topology="rail-optimized")),
+    _sc("compressed-capture-resync", seed=53, steps=5,
+        channel=ChannelSpec(kind="compressed", inner="packetized",
+                            topology="single"),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=3, kind="capture"),))),
+
+    # -- consolidation under a wedged worker --------------------------------
+    _sc("wedge-consolidate", seed=61, steps=4, shadow_async=True,
+        shadow_nodes=2,
+        schedule=FailureSchedule(wedge_node=0, wedge_release_s=1.5)),
+
+    # -- full-stack: the real training loop ---------------------------------
+    _sc("full-inprocess-recovery", level="full", seed=71, steps=8,
+        schedule=FailureSchedule(train_fail_steps=(3, 6))),
+    _sc("full-packetized-gated-recovery", level="full", seed=72, steps=6,
+        channel=ChannelSpec(**_RAIL, n_dp_groups=2, ranks_per_group=4),
+        schedule=FailureSchedule(
+            train_fail_steps=(5,),
+            fabric=(FabricFailure(step=4, kind="capture"),))),
+    _sc("full-sync-repeated-work", level="full", seed=73, steps=6,
+        checkpointer="sync", ckpt_freq=3,
+        schedule=FailureSchedule(train_fail_steps=(5,))),
+    _sc("full-packetized-rail-clean", level="full", seed=74, steps=5,
+        channel=ChannelSpec(**_RAIL)),
+]}

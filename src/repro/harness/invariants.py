@@ -1,0 +1,354 @@
+"""System-wide invariants the chaos harness checks after every step.
+
+Each `Invariant` inspects the run's `Trace` (see `repro.harness.runner`)
+— per-step records of sends, polls, stalls, checkpointer counters, the
+consolidated shadow state, and the trainer/reference state — and yields
+`Violation`s. ``applies()`` scopes an invariant to the scenarios where
+its claim holds (e.g. the sharp error-feedback bound needs momentum-free
+SGD); a scenario can force a specific set by name instead
+(`Scenario.invariants`), which is how the violation-bundle machinery is
+demonstrated against a knowingly-inapplicable check.
+
+The registry is open: ``@register`` a new `Invariant` subclass and every
+scenario (golden corpus, random sweeps, refactored failure drills) checks
+it for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional
+
+import numpy as np
+
+REGISTRY: dict[str, type] = {}
+
+
+def register(cls):
+    REGISTRY[cls.name] = cls
+    return cls
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One invariant breach: the minimal fact a repro bundle must replay."""
+    invariant: str
+    step: Optional[int]
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"invariant": self.invariant, "step": self.step,
+                "message": self.message}
+
+
+class Invariant:
+    """One checkable claim about a run. Instances are per-run (they may
+    carry state across ``check_step`` calls, e.g. the contiguity model)."""
+    name = "base"
+
+    def applies(self, trace) -> bool:
+        return True
+
+    def check_step(self, trace, rec) -> Iterable[Violation]:
+        return ()
+
+    def check_end(self, trace) -> Iterable[Violation]:
+        return ()
+
+    def _v(self, step, message) -> Violation:
+        return Violation(self.name, step, message)
+
+
+def tree_mismatch(a: dict, b: dict, parts=("params", "mu", "nu")
+                  ) -> Optional[str]:
+    """First bitwise mismatch between two checkpoint trees, or None."""
+    for part in parts:
+        pa, pb = a[part], b[part]
+        if set(pa) != set(pb):
+            return f"{part} leaf sets differ"
+        for k in sorted(pa):
+            x, y = np.asarray(pa[k]), np.asarray(pb[k])
+            if not np.array_equal(x, y):
+                d = float(np.max(np.abs(x.astype(np.float64)
+                                        - y.astype(np.float64))))
+                return f"{part}[{k}] differs (max|delta|={d:.3e})"
+    return None
+
+
+@register
+class ExactlyOnceDelivery(Invariant):
+    """Every complete capture was reassembled exactly-once on the fabric
+    (no missing replica spans, no duplicate mirror bytes on clean steps,
+    no drops/retransmits without an injected failure), and the gating
+    verdict the channel reports agrees with the fabric's own account."""
+    name = "exactly-once"
+
+    def applies(self, trace) -> bool:
+        return trace.scenario.channel.has_fabric
+
+    def check_step(self, trace, rec):
+        clean = rec.step not in trace.fabric_steps
+        for p in rec.polls:
+            f = p.fabric
+            if f is None:
+                continue
+            if p.complete != f.reassembled_ok:
+                yield self._v(p.step, f"delivery complete={p.complete} but "
+                                      f"fabric reassembled_ok="
+                                      f"{f.reassembled_ok}")
+            if p.complete and f.missing_captures:
+                yield self._v(p.step, f"complete delivery with "
+                                      f"{f.missing_captures} missing "
+                                      f"capture spans")
+            if not p.complete and not (f.missing_captures
+                                       or not f.ring_completed):
+                yield self._v(p.step, "gated delivery but the fabric "
+                                      "reports a full capture")
+            if clean:
+                for attr in ("duplicate_mirror_bytes", "mirror_lost_frames",
+                             "drops", "retransmits"):
+                    n = getattr(f, attr)
+                    if n:
+                        yield self._v(p.step, f"clean step (no injected "
+                                              f"failure) but {attr}={n}")
+                if not f.reassembled_ok:
+                    yield self._v(p.step, "clean step but capture not "
+                                          "reassembled exactly-once")
+
+
+@register
+class ZeroOverheadAccounting(Invariant):
+    """The packetized transport's sender-visible stall is exactly 0.0:
+    the event-loop wall time (host CPU *simulating* the fabric) is never
+    booked on the training critical path (§4 zero-overhead claim)."""
+    name = "zero-overhead"
+
+    def applies(self, trace) -> bool:
+        return trace.scenario.channel.kind == "packetized"
+
+    def check_step(self, trace, rec):
+        # NOTE: messages stay free of wall-clock values — replay_bundle
+        # verifies reproduction by exact message equality
+        for s in rec.sends:
+            if s.reported != 0.0:
+                yield self._v(s.step, "packetized send reported nonzero "
+                                      "stall (the simulator's event-loop "
+                                      "wall time must not be booked)")
+
+
+@register
+class StallAccounting(Invariant):
+    """Gated/frozen steps book zero stall and no checkpoint; every
+    consumed event is either a checkpoint, a skipped capture, or a
+    resync-counted checkpoint — nothing double-counts."""
+    name = "stall-accounting"
+
+    def applies(self, trace) -> bool:
+        return trace.scenario.checkpointer == "checkmate"
+
+    def check_step(self, trace, rec):
+        if rec.gated and not rec.applied and not rec.resync:
+            if rec.stall != 0.0:
+                # no wall-clock value in the message: bundles must replay
+                # bit-identically
+                yield self._v(rec.step, "gated step booked nonzero stall")
+
+    def check_end(self, trace):
+        ck = trace.checkpointer
+        n_events = len(trace.records)
+        if ck.n_checkpoints + ck.skipped_captures != n_events:
+            yield self._v(None, f"accounting leak: n_checkpoints="
+                                f"{ck.n_checkpoints} + skipped_captures="
+                                f"{ck.skipped_captures} != {n_events} "
+                                f"consumed events")
+        if len(ck.skipped_steps) != ck.skipped_captures:
+            yield self._v(None, f"skipped_steps={ck.skipped_steps} vs "
+                                f"skipped_captures={ck.skipped_captures}")
+
+
+@register
+class CheckpointContiguity(Invariant):
+    """The shadow replays a contiguous gradient stream: its consolidated
+    step only ever advances one applied step at a time, never across a
+    gated gap, and only jumps at an explicit resync or a recovery rewind.
+    While desynced it stays frozen at the last fully-captured step."""
+    name = "contiguity"
+
+    def __init__(self):
+        self.expected: Optional[int] = None
+
+    def applies(self, trace) -> bool:
+        return trace.scenario.checkpointer == "checkmate"
+
+    def check_step(self, trace, rec):
+        if self.expected is None:
+            self.expected = trace.bootstrap_step
+        if rec.restored_step is not None:
+            if rec.restored_step != self.expected:
+                yield self._v(rec.step, f"restore() returned step "
+                                        f"{rec.restored_step}, shadow "
+                                        f"should be at {self.expected}")
+                self.expected = rec.restored_step
+        if rec.resync:
+            self.expected = rec.step
+        elif rec.applied:
+            if rec.step != self.expected + 1:
+                yield self._v(rec.step, f"applied step {rec.step} onto a "
+                                        f"shadow at {self.expected} — the "
+                                        f"stream skipped a gap")
+            self.expected = rec.step
+        if rec.shadow_step is not None and rec.shadow_step != self.expected:
+            yield self._v(rec.step, f"shadow consolidated at "
+                                    f"{rec.shadow_step}, contiguous stream "
+                                    f"ends at {self.expected}")
+
+
+@register
+class ShadowTrainerBitIdentity(Invariant):
+    """At every sync point the shadow's consolidated params/mu/nu are
+    bit-identical to the trainer's state at the shadow's step — the
+    functional-optimizer replay claim (§4.2.4)."""
+    name = "shadow-bit-identity"
+
+    def applies(self, trace) -> bool:
+        return (trace.scenario.checkpointer == "checkmate"
+                and trace.scenario.channel.kind != "compressed")
+
+    def check_step(self, trace, rec):
+        if rec.shadow_ckpt is None or rec.shadow_step is None:
+            return
+        ref = trace.states.get(rec.shadow_step)
+        if ref is None:                      # e.g. the bootstrap step
+            return
+        bad = tree_mismatch(rec.shadow_ckpt, ref)
+        if bad:
+            yield self._v(rec.step, f"shadow@{rec.shadow_step} != "
+                                    f"trainer@{rec.shadow_step}: {bad}")
+
+
+@register
+class ReplayDeterminism(Invariant):
+    """Re-executed iterations (after a recovery rewind) reproduce the
+    original trainer state and loss bit-identically — the PRNG-counter
+    data pipeline plus deterministic step make resume exact (Fig 9)."""
+    name = "replay-determinism"
+
+    def applies(self, trace) -> bool:
+        # recovery onto a compressed shadow stream rewinds the trainer
+        # onto a state its original trajectory never visited, so replays
+        # legitimately diverge (same scope as resume-bit-identity)
+        return not (trace.scenario.channel.kind == "compressed"
+                    and trace.scenario.schedule.train_fail_steps)
+
+    def check_step(self, trace, rec):
+        if rec.state is None:
+            return
+        if not rec.first_seen:       # a replay: the runner kept the original
+            bad = tree_mismatch(rec.state, trace.states[rec.step])
+            if bad:
+                yield self._v(rec.step, f"replayed step diverged from its "
+                                        f"original execution: {bad}")
+        if rec.loss is not None and trace.ref_losses is not None:
+            ref = trace.ref_losses[rec.step - 1]
+            if rec.loss != ref:
+                yield self._v(rec.step, f"loss {rec.loss!r} != reference "
+                                        f"run's {ref!r}")
+
+
+@register
+class BitIdenticalResume(Invariant):
+    """The chaos run's final trainer state equals the uninterrupted
+    reference run's, bit for bit — failures + recovery are invisible in
+    the training trajectory (§6.5 / Fig 9)."""
+    name = "resume-bit-identity"
+
+    def applies(self, trace) -> bool:
+        # a compressed shadow stream intentionally diverges from raw
+        # training, so a recovery onto it rewrites the trajectory
+        return (trace.ref_final is not None
+                and not (trace.scenario.channel.kind == "compressed"
+                         and trace.scenario.schedule.train_fail_steps))
+
+    def check_end(self, trace):
+        if trace.final is None:
+            return
+        bad = tree_mismatch(trace.final, trace.ref_final)
+        if bad:
+            yield self._v(None, f"final state != uninterrupted reference: "
+                                f"{bad}")
+
+
+@register
+class CompressedDivergenceBound(Invariant):
+    """Error-feedback invariant, sharp in the momentum-free SGD regime:
+    the shadow (which consumed the compressed stream) diverges from the
+    raw-gradient trainer by exactly lr * residual — bounded by one
+    quantization step, not by the number of iterations."""
+    name = "compressed-ef-bound"
+    ATOL = 5e-6
+
+    def applies(self, trace) -> bool:
+        sc = trace.scenario
+        return (sc.channel.kind == "compressed" and sc.optimizer == "sgd"
+                and sc.momentum == 0.0 and not sc.schedule.fabric
+                and not sc.schedule.train_fail_steps
+                and trace.compressor is not None
+                and trace.final_shadow is not None)
+
+    def check_end(self, trace):
+        ef = trace.compressor.ef
+        lr = trace.scenario.lr
+        shadow, ref = trace.final_shadow, trace.final
+        for k in sorted(shadow["params"]):
+            div = (np.asarray(shadow["params"][k], np.float64)
+                   - np.asarray(ref["params"][k], np.float64))
+            res = lr * np.asarray(ef[k], np.float64)
+            if not np.allclose(div, res, atol=self.ATOL):
+                yield self._v(None, f"params[{k}]: shadow-ref divergence "
+                                    f"is not lr*residual (max|delta|="
+                                    f"{float(np.max(np.abs(div - res))):.3e})")
+            bound = lr * float(np.max(np.abs(np.asarray(ef[k])))) + self.ATOL
+            if float(np.max(np.abs(div))) > bound:
+                yield self._v(None, f"params[{k}]: divergence "
+                                    f"{float(np.max(np.abs(div))):.3e} "
+                                    f"exceeds the EF bound {bound:.3e}")
+
+
+@register
+class ConsolidateTimeout(Invariant):
+    """A wedged shadow worker cannot hang recovery: consolidation honors
+    its deadline, names exactly the lagging node, and a retry after the
+    wedge releases completes at the true step."""
+    name = "consolidate-timeout"
+
+    def applies(self, trace) -> bool:
+        return trace.scenario.schedule.wedge_node is not None
+
+    def check_end(self, trace):
+        w = trace.wedge
+        sc = trace.scenario
+        if w is None:
+            yield self._v(None, "wedge scheduled but the runner recorded "
+                                "no consolidation attempt")
+            return
+        if not w["raised"]:
+            yield self._v(None, "consolidate() returned despite a wedged "
+                                "worker inside the deadline")
+            return
+        if w["lagging"] != [sc.schedule.wedge_node]:
+            yield self._v(None, f"lagging nodes {w['lagging']} != "
+                                f"[{sc.schedule.wedge_node}]")
+        if w["partial_step"] >= w["final_step"]:
+            yield self._v(None, f"partial checkpoint at {w['partial_step']} "
+                                f"not older than the completed one at "
+                                f"{w['final_step']}")
+
+
+def select(trace) -> list[Invariant]:
+    """Instantiate the invariants for one run: the scenario's forced list,
+    or every registered invariant (``applies()`` scopes them per check)."""
+    names = trace.scenario.invariants or tuple(sorted(REGISTRY))
+    unknown = [n for n in names if n not in REGISTRY]
+    if unknown:
+        raise KeyError(f"unknown invariants {unknown}; "
+                       f"registered: {sorted(REGISTRY)}")
+    return [REGISTRY[n]() for n in names]

@@ -1,0 +1,456 @@
+"""Deterministic chaos co-simulation runner.
+
+`run_scenario` drives one declarative `Scenario` through the real stack —
+checkpointer -> GradientChannel -> fabric simulator -> shadow plane ->
+recovery — while a reference trainer runs beside it, and evaluates the
+invariant registry (`repro.harness.invariants`) after every step. Two
+stack depths:
+
+* channel level — a synthetic gradient stream (pure function of the
+  scenario seed) through a `CheckmateCheckpointer`, with the reference
+  trainer applying the same functional optimizer to the raw gradients;
+  training-node failures rewind the reference onto ``restore()``.
+* full level — the real `repro.train.loop.train` loop on a reduced model
+  config, observed through its ``step_hook``; an uninterrupted reference
+  run provides the bit-identity targets.
+
+On violation the runner emits a minimal repro bundle — scenario JSON +
+seed + failing step — that `replay_bundle` re-runs and compares
+bit-identically (tests/test_harness.py replays bundles as pytest cases).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.harness import invariants as inv
+from repro.harness.scenario import Scenario
+
+WEDGE_TIMEOUT_S = 0.25      # the deadline the wedged consolidate must honor
+WEDGE_RETRY_S = 30.0        # post-release retry budget
+
+
+@dataclass
+class SendRecord:
+    """One ``channel.send``: the stall it reported vs the wall it took."""
+    step: int
+    reported: float
+    wall_s: float
+
+
+@dataclass
+class PollRecord:
+    """One delivery as the shadow side saw it."""
+    step: int
+    complete: bool
+    missing_captures: int
+    fabric: object          # FabricResult for packetized transports
+
+
+class InstrumentedChannel:
+    """Transparent `GradientChannel` wrapper recording every send/poll —
+    the harness's observation point on the delivery edge."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = getattr(inner, "name", "channel")
+        self._sends: list[SendRecord] = []
+        self._polls: list[PollRecord] = []
+
+    def open(self, layout, multicast_groups=None):
+        self.inner.open(layout, multicast_groups)
+
+    def send(self, event) -> float:
+        t0 = time.perf_counter()
+        reported = self.inner.send(event)
+        self._sends.append(SendRecord(event.step, float(reported or 0.0),
+                                      time.perf_counter() - t0))
+        return reported
+
+    def poll(self):
+        out = self.inner.poll()
+        self._polls.extend(
+            PollRecord(d.step, d.complete, d.missing_captures,
+                       getattr(d, "fabric", None)) for d in out)
+        return out
+
+    def close(self):
+        self.inner.close()
+
+    def take_sends(self) -> list[SendRecord]:
+        out, self._sends = self._sends, []
+        return out
+
+    def take_polls(self) -> list[PollRecord]:
+        out, self._polls = self._polls, []
+        return out
+
+
+@dataclass
+class StepRecord:
+    """Everything the invariants see about one executed iteration."""
+    step: int
+    stall: float = 0.0
+    loss: Optional[float] = None
+    shadow_step: Optional[int] = None    # consolidated shadow step after
+    gated: bool = False                  # skipped_steps grew this on_step
+    applied: bool = False                # a delivery advanced the shadow
+    resync: bool = False                 # healed via full-state copy
+    restored_step: Optional[int] = None  # a restore() ran just before this
+    first_seen: bool = True              # False = replay after a recovery
+    sends: list = field(default_factory=list)
+    polls: list = field(default_factory=list)
+    state: Optional[dict] = None         # trainer checkpoint after this step
+    shadow_ckpt: Optional[dict] = None   # cleared after per-step checks
+
+
+class Trace:
+    """The run's observable history, shared with every invariant."""
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+        self.records: list[StepRecord] = []
+        self.states: dict[int, dict] = {}    # step -> first-seen trainer ckpt
+        self.ref_losses: Optional[list] = None
+        self.ref_final: Optional[dict] = None
+        self.final: Optional[dict] = None
+        self.final_shadow: Optional[dict] = None
+        self.bootstrap_step = 0
+        self.checkpointer = None
+        self.channel: Optional[InstrumentedChannel] = None
+        self.compressor = None
+        self.wedge: Optional[dict] = None
+        self.stats = None
+        self.violations: list[inv.Violation] = []
+        self.fabric_steps = scenario.schedule.fabric_steps
+
+
+class _Engine:
+    """Evaluates the selected invariants per step and at the end. A forced
+    selection (``Scenario.invariants``) bypasses ``applies()`` — that is
+    how an inapplicable check demonstrates the violation-bundle path."""
+
+    def __init__(self, trace: Trace):
+        self.trace = trace
+        self.forced = bool(trace.scenario.invariants)
+        self.invariants = inv.select(trace)
+
+    def _active(self, i) -> bool:
+        return self.forced or i.applies(self.trace)
+
+    def step(self, rec: StepRecord):
+        for i in self.invariants:
+            if self._active(i):
+                self.trace.violations.extend(i.check_step(self.trace, rec))
+
+    def end(self):
+        for i in self.invariants:
+            if self._active(i):
+                self.trace.violations.extend(i.check_end(self.trace))
+
+
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    violations: tuple[inv.Violation, ...]
+    trace: Trace
+    bundle_path: Optional[Path] = None
+
+    @property
+    def passed(self) -> bool:
+        return not self.violations
+
+    @property
+    def failing_step(self) -> Optional[int]:
+        steps = [v.step for v in self.violations if v.step is not None]
+        return min(steps) if steps else None
+
+    def bundle(self) -> dict:
+        """The minimal replayable repro: seed + scenario + failing step."""
+        return {"seed": self.scenario.seed,
+                "scenario": self.scenario.to_dict(),
+                "failing_step": self.failing_step,
+                "violations": [v.to_dict() for v in self.violations]}
+
+    def describe(self) -> str:
+        sc = self.scenario
+        tag = "PASS" if self.passed else f"FAIL@{self.failing_step}"
+        extra = ""
+        if self.violations:
+            v = self.violations[0]
+            extra = f"  [{v.invariant}] {v.message}"
+        return (f"{tag:<8} {sc.name:<34} {sc.level:<7} "
+                f"{sc.channel.kind:<11} steps={sc.steps}{extra}")
+
+
+# -- bundles ------------------------------------------------------------------
+
+def write_bundle(result: ScenarioResult, bundle_dir) -> Path:
+    bundle_dir = Path(bundle_dir)
+    bundle_dir.mkdir(parents=True, exist_ok=True)
+    path = bundle_dir / f"{result.scenario.name}.json"
+    path.write_text(json.dumps(result.bundle(), indent=2, sort_keys=True))
+    return path
+
+
+def replay_bundle(path) -> tuple[ScenarioResult, bool]:
+    """Re-run a violation bundle's scenario; True iff the violations
+    reproduce bit-identically (same invariants, steps, and messages)."""
+    stored = json.loads(Path(path).read_text())
+    result = run_scenario(Scenario.from_dict(stored["scenario"]))
+    fresh = result.bundle()
+    identical = (fresh["violations"] == stored["violations"]
+                 and fresh["failing_step"] == stored["failing_step"])
+    return result, identical
+
+
+# -- channel-level co-simulation ----------------------------------------------
+
+def _grads_at(sc: Scenario, params: dict, step: int) -> dict:
+    """The synthetic gradient stream: a pure function of (seed, step), so
+    recovery replays the identical stream (mirrors repro.data.synthetic)."""
+    rng = np.random.default_rng((sc.seed + 1) * 1_000_003 + step)
+    return {k: (rng.standard_normal(v.shape) * 0.01).astype(np.float32)
+            for k, v in params.items()}
+
+
+def _install_wedge(shadow, node_id: int, release_s: float):
+    node = shadow.nodes[node_id]
+    original = node.apply
+    release = time.time() + release_s
+
+    def wedged(*a, **kw):
+        while time.time() < release:
+            time.sleep(0.01)
+        return original(*a, **kw)
+
+    node.apply = wedged
+
+
+def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
+    import jax.numpy as jnp
+
+    import jax
+    from repro.core.buckets import layout_for_tree
+    from repro.core.channel import StepEvent
+    from repro.core.checkpoint import CheckmateCheckpointer
+    from repro.core.shadow import ConsolidationTimeout, ShadowCluster
+    from repro.optim.functional import TrainState, apply_updates
+
+    rng = np.random.default_rng(np.uint64(sc.seed))
+    params = {f"leaf{k}": rng.standard_normal(
+                  (6 + 2 * k, sc.leaf_cols)).astype(np.float32)
+              for k in range(sc.n_leaves)}
+    layout = layout_for_tree(params, cap_bytes=sc.cap_bytes)
+    opt = sc.opt_config()
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+
+    shadow = ShadowCluster(layout, opt, n_nodes=sc.shadow_nodes,
+                           async_mode=sc.shadow_async)
+    shadow.bootstrap(params, zeros, zeros, 0)
+    chan = InstrumentedChannel(sc.channel.build(
+        sc.schedule.failures_at(), n_shadow_nodes=sc.shadow_nodes))
+    ck = CheckmateCheckpointer(shadow, channel=chan)
+    trace.checkpointer, trace.channel = ck, chan
+    trace.compressor = getattr(chan.inner, "compressor", None)
+
+    # the reference trainer: same functional optimizer over the RAW stream
+    def as_state(p, m, v, step):
+        return TrainState(
+            params={k: jnp.asarray(np.asarray(x)) for k, x in p.items()},
+            mu={k: jnp.asarray(np.asarray(x)) for k, x in m.items()},
+            nu={k: jnp.asarray(np.asarray(x)) for k, x in v.items()},
+            step=jnp.asarray(step, jnp.int32))
+
+    state = as_state(params, zeros, zeros, 0)
+    apply_fn = jax.jit(lambda s, g: apply_updates(s, g, opt, sc.lr))
+    pending_restore: Optional[int] = None
+    fails = set(sc.schedule.train_fail_steps)
+    last_ckpt = None
+    step, executed = 0, 0
+    try:
+        while step < sc.steps:
+            executed += 1
+            if executed > 6 * sc.steps + 12:
+                raise RuntimeError(f"{sc.name}: runaway recovery loop")
+            nxt = step + 1
+            if nxt in fails:                 # training node dies mid-step
+                fails.discard(nxt)
+                restored = ck.restore()
+                state = as_state(restored["params"], restored["mu"],
+                                 restored["nu"], restored["step"])
+                pending_restore = int(restored["step"])
+                step = int(restored["step"])
+                continue
+            grads = _grads_at(sc, params, nxt)
+            state = apply_fn(state, grads)
+            ckpt = {"params": {k: np.asarray(v)
+                               for k, v in state.params.items()},
+                    "mu": {k: np.asarray(v) for k, v in state.mu.items()},
+                    "nu": {k: np.asarray(v) for k, v in state.nu.items()},
+                    "step": nxt}
+            wedged = (sc.schedule.wedge_node is not None and nxt == sc.steps)
+            if wedged:
+                _install_wedge(shadow, sc.schedule.wedge_node,
+                               sc.schedule.wedge_release_s)
+            before = (ck.n_checkpoints, len(ck.skipped_steps),
+                      len(ck.resyncs))
+            stall = ck.on_step(StepEvent(
+                step=nxt, grads=grads, lr=sc.lr,
+                state_fn=(lambda c=ckpt: c) if sc.resync else None))
+
+            rec = StepRecord(step=nxt, stall=stall)
+            rec.resync = len(ck.resyncs) > before[2]
+            rec.gated = len(ck.skipped_steps) > before[1]
+            rec.applied = ck.n_checkpoints > before[0] and not rec.resync
+            rec.restored_step, pending_restore = pending_restore, None
+            rec.sends, rec.polls = chan.take_sends(), chan.take_polls()
+            if wedged:
+                # the deadline drill replaces this step's consolidate
+                try:
+                    shadow.consolidate(timeout=WEDGE_TIMEOUT_S)
+                    raised, lagging, partial = False, [], -1
+                except ConsolidationTimeout as e:
+                    raised, lagging = True, list(e.lagging_nodes)
+                    partial = int(e.partial["step"])
+                shadow_ck = shadow.consolidate(timeout=WEDGE_RETRY_S)
+                trace.wedge = {"raised": raised, "lagging": lagging,
+                               "partial_step": partial,
+                               "final_step": int(shadow_ck["step"])}
+            else:
+                shadow_ck = shadow.consolidate()
+            rec.shadow_step = int(shadow_ck["step"])
+            rec.shadow_ckpt = shadow_ck
+            trace.final_shadow = shadow_ck
+            rec.state = ckpt
+            rec.first_seen = nxt not in trace.states
+            if rec.first_seen:
+                trace.states[nxt] = ckpt
+            trace.records.append(rec)
+            engine.step(rec)
+            rec.shadow_ckpt = None          # free the per-step tree
+            if not rec.first_seen:          # replays: first-seen copy is
+                rec.state = None            # already kept in trace.states
+            last_ckpt = ckpt
+            step = nxt
+        trace.final = last_ckpt
+    finally:
+        chan.close()
+        if sc.shadow_async:
+            shadow.shutdown()
+
+
+# -- full-stack co-simulation -------------------------------------------------
+
+def _run_full(sc: Scenario, trace: Trace, engine: _Engine):
+    import jax
+
+    import repro.configs as C
+    from repro.core.buckets import layout_for_tree
+    from repro.core.checkpoint import (CheckmateCheckpointer, NoCheckpointer,
+                                       SyncCheckpointer)
+    from repro.core.recovery import FailurePlan, checkpoint_from_state
+    from repro.core.shadow import ShadowCluster
+    from repro.dist.sharding import ShardingRules, make_smoke_mesh
+    from repro.train.loop import train
+    from repro.train.step import make_train_state
+
+    cfg = C.get(sc.arch).reduced()
+    rules = ShardingRules(make_smoke_mesh())
+    opt = sc.opt_config()
+
+    def lr_fn(_):
+        return sc.lr
+
+    # uninterrupted reference: the bit-identity target
+    ref_state, ref_stats = train(cfg, rules, steps=sc.steps, batch=sc.batch,
+                                 seq=sc.seq, opt=opt, lr_fn=lr_fn,
+                                 seed=sc.seed)
+    trace.ref_losses = list(ref_stats.losses)
+    trace.ref_final = checkpoint_from_state(ref_state)
+
+    s0 = make_train_state(jax.random.PRNGKey(sc.seed), cfg, rules)
+    shadow = None
+    if sc.checkpointer == "checkmate":
+        shadow = ShadowCluster(layout_for_tree(s0.params), opt,
+                               n_nodes=sc.shadow_nodes,
+                               async_mode=sc.shadow_async)
+        shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
+        chan = InstrumentedChannel(sc.channel.build(
+            sc.schedule.failures_at(), n_shadow_nodes=sc.shadow_nodes))
+        ck = CheckmateCheckpointer(shadow, channel=chan)
+        trace.channel = chan
+        trace.compressor = getattr(chan.inner, "compressor", None)
+    elif sc.checkpointer == "sync":
+        ck = SyncCheckpointer(freq=sc.ckpt_freq)
+    else:
+        ck = NoCheckpointer()
+    trace.checkpointer = ck
+
+    seen = {"ncp": 0, "skip": 0, "resync": 0, "recov": 0}
+
+    def hook(step, state, stats):
+        rec = StepRecord(step=step, stall=stats.stall_times[-1],
+                         loss=stats.losses[-1])
+        if stats.recoveries > seen["recov"]:
+            seen["recov"] = stats.recoveries
+            rec.restored_step = stats.recovered_at[-1]
+        if shadow is not None:
+            rec.resync = len(ck.resyncs) > seen["resync"]
+            rec.gated = len(ck.skipped_steps) > seen["skip"]
+            rec.applied = ck.n_checkpoints > seen["ncp"] and not rec.resync
+            seen.update(ncp=ck.n_checkpoints, skip=len(ck.skipped_steps),
+                        resync=len(ck.resyncs))
+            shadow_ck = shadow.consolidate()
+            rec.shadow_step = int(shadow_ck["step"])
+            rec.shadow_ckpt = shadow_ck
+            trace.final_shadow = shadow_ck
+        if trace.channel is not None:
+            rec.sends = trace.channel.take_sends()
+            rec.polls = trace.channel.take_polls()
+        rec.state = checkpoint_from_state(state)
+        rec.first_seen = step not in trace.states
+        if rec.first_seen:
+            trace.states[step] = rec.state
+        trace.records.append(rec)
+        engine.step(rec)
+        rec.shadow_ckpt = None
+        if not rec.first_seen:              # replays: first-seen copy is
+            rec.state = None                # already kept in trace.states
+
+    state, stats = train(
+        cfg, rules, steps=sc.steps, batch=sc.batch, seq=sc.seq, opt=opt,
+        lr_fn=lr_fn, seed=sc.seed, state=s0, checkpointer=ck,
+        failure_plan=FailurePlan(sc.schedule.train_fail_steps),
+        step_hook=hook)
+    trace.stats = stats
+    trace.final = checkpoint_from_state(state)
+    if shadow is not None and sc.shadow_async:
+        shadow.shutdown()
+
+
+def run_scenario(scenario: Scenario, *, bundle_dir=None) -> ScenarioResult:
+    """Run one scenario end to end and evaluate its invariants.
+
+    With ``bundle_dir``, any violation writes a minimal repro bundle
+    (seed + scenario JSON + failing step) that `replay_bundle` re-runs
+    bit-identically.
+    """
+    scenario.validate()
+    trace = Trace(scenario)
+    engine = _Engine(trace)
+    if scenario.level == "channel":
+        _run_channel(scenario, trace, engine)
+    else:
+        _run_full(scenario, trace, engine)
+    engine.end()
+    result = ScenarioResult(scenario=scenario,
+                            violations=tuple(trace.violations), trace=trace)
+    if bundle_dir is not None and result.violations:
+        result.bundle_path = write_bundle(result, bundle_dir)
+    return result

@@ -1,0 +1,354 @@
+"""Declarative chaos scenarios: everything a co-simulation run needs,
+expandable from a single integer seed.
+
+A `Scenario` names the full stack configuration — model (or synthetic
+tree), channel stack, optimizer, DP groups, shadow plane — plus a
+`FailureSchedule` of link/switch/shadow-NIC kills, gated-capture bursts,
+worker wedges, and training-node failures. Scenarios are frozen,
+JSON-round-trippable (`to_dict`/`from_dict`), and `sample_scenario(seed)`
+expands a random-but-valid scenario deterministically from one RNG seed —
+which is what makes every chaos run replayable from one integer
+(`python -m repro.harness replay --seed N`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def repro_seed(default: int = 0) -> int:
+    """The process-wide base seed: ``REPRO_SEED`` env var (see
+    tests/conftest.py, which prints it in the pytest header) or
+    ``default``. Every harness RNG derives from a scenario seed, and
+    seeded sweeps derive scenario seeds from this."""
+    return int(os.environ.get("REPRO_SEED", default))
+
+
+@dataclass(frozen=True)
+class ChannelSpec:
+    """How gradients travel from the capture point to the shadow plane.
+
+    ``kind`` picks the `repro.core.channel` implementation; ``inner`` is
+    the transport a ``compressed`` channel wraps. The remaining fields are
+    forwarded to `PacketizedChannel` (fabric shape).
+    """
+    kind: str = "inprocess"            # inprocess | packetized | compressed
+    inner: str = "inprocess"           # compressed only: inner transport
+    topology: str = "rail-optimized"
+    n_dp_groups: int = 1
+    ranks_per_group: int = 4
+    ranks_per_leaf: int = 4
+    n_spines: int = 2
+    shadow_nics: int = 2
+    n_channels: int = 1
+    replication_factor: int = 1
+
+    @property
+    def has_fabric(self) -> bool:
+        """Whether a fabric simulator sits somewhere in the stack (i.e.
+        fabric failure injection is meaningful)."""
+        return self.kind == "packetized" or (
+            self.kind == "compressed" and self.inner == "packetized")
+
+    def build(self, failures_at: dict, n_shadow_nodes: int = 2):
+        """Instantiate the channel stack (fabric failures attach to the
+        packetized transport). ``n_shadow_nodes`` is the scenario's shadow
+        cluster size, so the fabric models exactly the shadow hosts the
+        scenario declares."""
+        from repro.core.channel import (CompressedChannel, InProcessChannel,
+                                        PacketizedChannel)
+
+        def packetized():
+            return PacketizedChannel(
+                topology=self.topology, n_dp_groups=self.n_dp_groups,
+                ranks_per_group=self.ranks_per_group,
+                n_shadow_nodes=n_shadow_nodes,
+                ranks_per_leaf=self.ranks_per_leaf, n_spines=self.n_spines,
+                shadow_nics=self.shadow_nics, n_channels=self.n_channels,
+                replication_factor=self.replication_factor,
+                failures_at=failures_at)
+
+        if self.kind == "inprocess":
+            if failures_at:
+                raise ValueError("fabric failures need a packetized "
+                                 "transport in the channel stack")
+            return InProcessChannel()
+        if self.kind == "packetized":
+            return packetized()
+        if self.kind == "compressed":
+            if self.inner == "packetized":
+                return CompressedChannel(packetized())
+            if failures_at:
+                raise ValueError("fabric failures need a packetized "
+                                 "transport in the channel stack")
+            return CompressedChannel(InProcessChannel())
+        raise ValueError(f"unknown channel kind {self.kind!r}")
+
+
+@dataclass(frozen=True)
+class FabricFailure:
+    """One fabric-level failure bound to a training step.
+
+    kind: "capture" (cut every shadow NIC at t=0 — that step's capture is
+    lost, §4.3.2), or a `repro.net.simulator.FailureSpec` kind ("link",
+    "switch", "shadow_nic") fired ``at_us`` microseconds into that step's
+    fabric iteration. ``target`` follows FailureSpec conventions
+    (("leaf0", "spine0") for links, a switch/shadow-host name otherwise).
+    """
+    step: int
+    kind: str
+    target: tuple | str | None = None
+    at_us: float = 0.0
+
+
+@dataclass(frozen=True)
+class FailureSchedule:
+    """Everything that goes wrong during one scenario.
+
+    * ``train_fail_steps`` — training-node failures (the iteration aborts
+      mid-step and recovery restores from the checkpointer), fired once
+      each (`repro.core.recovery.FailurePlan`).
+    * ``fabric`` — `FabricFailure` events injected into the channel's
+      fabric simulator, one-shot per step.
+    * ``wedge_node`` — wedge this shadow node's apply before the final
+      step so consolidation hits its deadline (`ConsolidationTimeout`
+      drill); requires an async shadow cluster. ``wedge_release_s`` is how
+      long the worker stays wedged.
+    """
+    train_fail_steps: tuple[int, ...] = ()
+    fabric: tuple[FabricFailure, ...] = ()
+    wedge_node: int | None = None
+    wedge_release_s: float = 1.5
+
+    def failures_at(self) -> dict:
+        """The fabric schedule in `PacketizedChannel(failures_at=...)`
+        form: {step: "capture" | (FailureSpec, ...)}."""
+        from repro.net.simulator import FailureSpec
+        by_step: dict[int, list[FabricFailure]] = {}
+        for f in self.fabric:
+            by_step.setdefault(f.step, []).append(f)
+        out: dict = {}
+        for step, fs in by_step.items():
+            kinds = {f.kind for f in fs}
+            if "capture" in kinds:
+                if len(fs) > 1:
+                    raise ValueError(
+                        f"step {step}: 'capture' (kill every shadow NIC) "
+                        f"cannot combine with other failures")
+                out[step] = "capture"
+            else:
+                out[step] = tuple(
+                    FailureSpec(f.at_us * 1e-6, f.kind,
+                                tuple(f.target) if isinstance(
+                                    f.target, (list, tuple)) else f.target)
+                    for f in fs)
+        return out
+
+    @property
+    def fabric_steps(self) -> frozenset[int]:
+        return frozenset(f.step for f in self.fabric)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One declarative chaos co-simulation run (see docs/harness.md).
+
+    ``level`` picks the stack depth:
+
+    * ``"channel"`` — synthetic gradient stream through
+      checkpointer -> channel -> fabric -> shadow, with a functional-
+      optimizer reference trainer maintained side by side (fast; most of
+      the golden corpus).
+    * ``"full"`` — the real `repro.train.loop.train` loop on a reduced
+      model config, with an uninterrupted reference run for bit-identity.
+
+    ``invariants`` empty means auto-select every registered invariant
+    whose ``applies()`` matches the scenario; naming invariants forces
+    exactly those (used to demonstrate violation bundles).
+    ``resync`` (channel level) mirrors whether events carry ``state_fn``,
+    i.e. whether a gated capture heals via full-state copy (the training
+    loop always resyncs) or freezes the shadow.
+    """
+    name: str
+    level: str = "channel"             # channel | full
+    seed: int = 0
+    steps: int = 5
+    # full level: model + data shape
+    arch: str = "tinyllama-1.1b"
+    batch: int = 2
+    seq: int = 16
+    # channel level: synthetic tree shape
+    n_leaves: int = 3
+    leaf_cols: int = 5
+    cap_bytes: int = 4096
+    resync: bool = True
+    # shared
+    optimizer: str = "adamw"
+    lr: float = 1e-3
+    momentum: float = 0.9
+    shadow_nodes: int = 2
+    shadow_async: bool = False
+    checkpointer: str = "checkmate"    # checkmate | sync | none
+    ckpt_freq: int = 1
+    channel: ChannelSpec = field(default_factory=ChannelSpec)
+    schedule: FailureSchedule = field(default_factory=FailureSchedule)
+    invariants: tuple[str, ...] = ()
+
+    # -- construction helpers -------------------------------------------------
+    def opt_config(self):
+        from repro.optim import OptimizerConfig
+        return OptimizerConfig(name=self.optimizer, lr=self.lr,
+                               momentum=self.momentum)
+
+    def validate(self) -> "Scenario":
+        if self.level not in ("channel", "full"):
+            raise ValueError(f"unknown level {self.level!r}")
+        if self.seed < 0:
+            raise ValueError(f"{self.name}: seed must be non-negative")
+        if self.schedule.fabric and not self.channel.has_fabric:
+            raise ValueError(
+                f"{self.name}: fabric failures scheduled but channel "
+                f"{self.channel.kind!r} has no fabric transport")
+        if self.schedule.wedge_node is not None:
+            if not self.shadow_async:
+                raise ValueError(f"{self.name}: wedge_node requires an "
+                                 f"async shadow cluster")
+            if self.schedule.wedge_node >= self.shadow_nodes:
+                raise ValueError(f"{self.name}: wedge_node out of range")
+            if self.level != "channel":
+                raise ValueError(f"{self.name}: wedge drills are "
+                                 f"channel-level scenarios")
+        if self.checkpointer != "checkmate" and self.level == "channel":
+            raise ValueError(f"{self.name}: channel-level scenarios drive "
+                             f"a CheckmateCheckpointer")
+        bad = [s for s in self.schedule.fabric_steps
+               if not 1 <= s <= self.steps]
+        if bad:
+            raise ValueError(f"{self.name}: fabric failure steps {bad} "
+                             f"outside 1..{self.steps}")
+        bad = [s for s in self.schedule.train_fail_steps
+               if not 1 <= s <= self.steps]
+        if bad:
+            raise ValueError(f"{self.name}: train failure steps {bad} "
+                             f"outside 1..{self.steps} — they would never "
+                             f"fire")
+        return self
+
+    # -- JSON round trip ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        d["channel"] = ChannelSpec(**d.get("channel", {}))
+        sched = dict(d.get("schedule", {}))
+        sched["train_fail_steps"] = tuple(sched.get("train_fail_steps", ()))
+        sched["fabric"] = tuple(
+            FabricFailure(**{**f, "target": tuple(f["target"])
+                             if isinstance(f.get("target"), list)
+                             else f.get("target")})
+            for f in sched.get("fabric", ()))
+        d["schedule"] = FailureSchedule(**sched)
+        d["invariants"] = tuple(d.get("invariants", ()))
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+
+# -- random scenarios from one integer ---------------------------------------
+
+def sample_scenario(seed: int, level: str | None = None) -> Scenario:
+    """Deterministically expand one integer into a valid random scenario.
+
+    The whole scenario space the golden corpus spans is sampled here:
+    channel kind x topology x DP shape x optimizer x failure classes
+    (captures, bursts, hardware kills, training failures, multi-failure
+    sequences). Every sampled scenario must PASS all auto-selected
+    invariants — a violation is a real bug, and the CLI writes its repro
+    bundle.
+    """
+    seed = int(seed) & 0xFFFFFFFFFFFFFFFF      # negative CLI seeds wrap
+    rng = np.random.default_rng(seed)
+    if level is None:
+        level = "full" if rng.random() < 0.2 else "channel"
+    steps = int(rng.integers(4, 8))
+
+    kind = str(rng.choice(["inprocess", "packetized", "packetized",
+                           "compressed"]))
+    inner = ("packetized" if kind == "compressed" and rng.random() < 0.4
+             else "inprocess")
+    topology = str(rng.choice(["single", "rail-optimized", "leaf-spine"]))
+    spec = ChannelSpec(
+        kind=kind, inner=inner, topology=topology,
+        n_dp_groups=int(rng.choice([1, 2])),
+        ranks_per_group=int(rng.choice([2, 4])),
+        ranks_per_leaf=4,
+        replication_factor=int(rng.choice([1, 1, 2])))
+
+    if kind == "compressed" and rng.random() < 0.5:
+        optimizer, momentum = "sgd", 0.0    # the sharp EF-bound regime
+    else:
+        optimizer = str(rng.choice(["adamw", "adam", "sgd"]))
+        momentum = 0.9
+
+    fabric: list[FabricFailure] = []
+    if spec.has_fabric and steps >= 2:
+        r = rng.random()
+        s = int(rng.integers(2, steps + 1))
+        if r < 0.30:                                    # one lost capture
+            fabric.append(FabricFailure(step=s, kind="capture"))
+        elif r < 0.45 and s < steps:                    # gated-capture burst
+            fabric += [FabricFailure(step=s, kind="capture"),
+                       FabricFailure(step=s + 1, kind="capture")]
+        elif r < 0.70:                                  # hardware kill(s)
+            at = float(round(rng.uniform(0.0, 200.0), 1))
+            if topology == "single":
+                fabric.append(FabricFailure(step=s, kind="shadow_nic",
+                                            target="s0", at_us=at))
+            else:
+                hw = str(rng.choice(["switch", "link", "shadow_nic"]))
+                target = {"switch": "spine0",
+                          "link": ("leaf0", "spine0"),
+                          "shadow_nic": "s0"}[hw]
+                fabric.append(FabricFailure(step=s, kind=hw, target=target,
+                                            at_us=at))
+                if rng.random() < 0.3:                  # multi-failure seq
+                    fabric.append(FabricFailure(
+                        step=s, kind="switch", target="spine1",
+                        at_us=at + 20.0))
+
+    train_fails: tuple[int, ...] = ()
+    if rng.random() < 0.4:
+        train_fails = (int(rng.integers(2, steps + 1)),)
+
+    return Scenario(
+        name=f"sampled-{seed}", level=level, seed=int(seed) & 0x7FFFFFFF,
+        steps=steps,
+        n_leaves=int(rng.integers(2, 5)),
+        cap_bytes=int(rng.choice([1024, 4096, 1 << 16])),
+        resync=bool(rng.random() < 0.5),
+        optimizer=optimizer, momentum=momentum,
+        shadow_nodes=int(rng.integers(1, 4)),
+        shadow_async=bool(level == "channel" and rng.random() < 0.25),
+        channel=spec,
+        schedule=FailureSchedule(train_fail_steps=train_fails,
+                                 fabric=tuple(fabric)),
+    ).validate()
+
+
+def scenario_strategy(level: str = "channel"):
+    """A hypothesis strategy over valid random scenarios (works with the
+    deterministic fallback too — it only needs integers().map)."""
+    from hypothesis import strategies as st
+    return st.integers(0, 2 ** 20).map(
+        lambda s: sample_scenario(s, level=level))

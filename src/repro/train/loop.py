@@ -80,7 +80,8 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
           seed: int = 0,
           straggler_ema: float = 0.9,
           straggler_factor: float = 2.0,
-          state: Optional[TrainState] = None) -> tuple[TrainState, LoopStats]:
+          state: Optional[TrainState] = None,
+          step_hook: Optional[Callable] = None) -> tuple[TrainState, LoopStats]:
     """Run ``steps`` iterations; on injected failure, restore from the
     checkpointer (Checkmate: shadow consolidation) and continue.
 
@@ -90,6 +91,11 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
     `CheckmateCheckpointer` wired through that channel. The built
     checkpointer is exposed as ``stats.checkpointer`` (its ``.shadow`` holds
     the cluster). Mutually exclusive with ``checkpointer``.
+
+    ``step_hook(step, state, stats)`` is called after every completed
+    iteration (post checkpointer accounting; replayed iterations after a
+    recovery call it again with the replayed step number) — the observation
+    point `repro.harness` evaluates its per-step invariants from.
     """
     mesh = rules.mesh
     failure_plan = failure_plan or FailurePlan()
@@ -162,6 +168,8 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
             iter_time=iter_time,
             state_fn=lambda: checkpoint_from_state(state)))
         stats.stall_times.append(stall)
+        if step_hook is not None:
+            step_hook(step, state, stats)
 
     checkpointer.finalize()
     return state, stats

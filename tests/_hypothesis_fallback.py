@@ -93,7 +93,10 @@ def given(*strats: Strategy):
         # no functools.wraps: pytest must see a zero-arg signature, not the
         # original one (strategy params would look like missing fixtures)
         def wrapper():
-            rng = random.Random(0)
+            # REPRO_SEED pins the sweep (printed in the pytest header by
+            # conftest.py) so any failure is locally replayable
+            import os
+            rng = random.Random(int(os.environ.get("REPRO_SEED", "0")))
             for i in range(n):
                 fn(*(s.example(rng, i) for s in strats))
         wrapper.__name__ = fn.__name__

@@ -3,6 +3,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Global determinism pin: every seeded sweep in the suite (harness
+# scenario sampling, the hypothesis fallback's RNG) derives from
+# REPRO_SEED, so any CI failure is replayable locally by exporting the
+# seed printed in the pytest header below.
+REPRO_SEED = int(os.environ.get("REPRO_SEED", "0"))
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:
@@ -15,6 +21,13 @@ except ImportError:
     sys.path.insert(0, os.path.dirname(__file__))
     from _hypothesis_fallback import install as _install_hypothesis
     _install_hypothesis(sys.modules)
+
+
+def pytest_report_header(config):
+    return (f"repro: REPRO_SEED={REPRO_SEED} (harness scenario sampling and "
+            f"the hypothesis-fallback sweep derive from it; export "
+            f"REPRO_SEED=<n> to replay a failure, or replay one scenario "
+            f"with `python -m repro.harness replay --seed <n>`)")
 
 # NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests must see the
 # real single CPU device. Multi-device paths are tested via subprocesses

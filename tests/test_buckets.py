@@ -1,10 +1,14 @@
-"""Property tests for DDP-style bucketing (paper §4.2.2)."""
+"""Property tests for DDP-style bucketing (paper §4.2.2), including the
+degenerate layouts the per-dtype flush must survive: empty trees, single
+scalar leaves, and all-bf16 trees through build_buckets/pack_bucket_into."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.buckets import (build_buckets, layout_for_tree, pack_all,
-                                pack_bucket, unpack_all, unpack_bucket)
+from repro.core.buckets import (alloc_flat, bucket_dtype, build_buckets,
+                                layout_for_tree, pack_all, pack_all_into,
+                                pack_bucket, pack_bucket_into, unpack_all,
+                                unpack_bucket)
 
 leaf_shapes = st.lists(
     st.tuples(st.integers(1, 8), st.integers(1, 64)), min_size=1, max_size=20)
@@ -57,3 +61,55 @@ def test_offsets_contiguous():
     assert b.slots[0].offset == 0
     assert b.slots[1].offset == b.slots[0].size
     assert b.size == 12 + 5
+
+
+# -- degenerate layouts: the per-dtype flush edge cases -----------------------
+
+def test_empty_tree_layout():
+    """An empty tree is a valid (zero-bucket) layout end to end."""
+    layout = build_buckets([])
+    assert layout.buckets == ()
+    assert layout.total_bytes == 0
+    assert layout.leaf_index() == {}
+    assert pack_all_into(layout, {}, {}) == {}
+    assert layout_for_tree({}).buckets == ()
+
+
+def test_single_scalar_leaf_roundtrip():
+    """A shape-() leaf occupies one element and packs/unpacks exactly."""
+    layout = build_buckets([("s", (), "float32")], cap_bytes=64)
+    (b,) = layout.buckets
+    assert b.size == 1
+    assert b.slots[0].shape == () and b.slots[0].size == 1
+    flat = pack_bucket_into(b, {"s": np.float32(3.5)},
+                            alloc_flat(b.size, bucket_dtype(b)))
+    assert flat.dtype == np.float32 and flat.tolist() == [3.5]
+    back = unpack_bucket(b, flat)
+    assert back["s"].shape == () and back["s"] == np.float32(3.5)
+
+
+@given(st.integers(1, 10), st.integers(64, 4096))
+@settings(max_examples=25, deadline=None)
+def test_all_bf16_tree_packs_without_promotion(n_leaves, cap):
+    """An all-bf16 tree buckets with bf16 wire buffers — the per-dtype
+    flush never silently promotes, and pack_bucket_into round-trips every
+    leaf bit-exactly through the narrow buffer."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(n_leaves * 31 + cap)
+    tree = {f"w{i}": np.asarray(jnp.asarray(
+                rng.standard_normal((1 + i % 3, 4)), jnp.bfloat16))
+            for i in range(n_leaves)}
+    layout = build_buckets([(k, v.shape, str(v.dtype))
+                            for k, v in tree.items()], cap_bytes=cap)
+    seen = []
+    for b in layout.buckets:
+        wire = bucket_dtype(b)
+        assert wire == np.dtype("bfloat16")      # no promotion, loud or silent
+        flat = pack_bucket_into(b, tree, alloc_flat(b.size, wire))
+        assert flat.nbytes == 2 * b.size
+        back = unpack_bucket(b, flat)
+        for name, leaf in back.items():
+            assert leaf.dtype == tree[name].dtype
+            np.testing.assert_array_equal(leaf, tree[name])
+        seen.extend(s.name for s in b.slots)
+    assert sorted(seen) == sorted(tree)

@@ -2,8 +2,6 @@
 (bit-identical shadow state over random layouts/topologies), compressed
 bounded divergence (error-feedback invariant), gated-delivery semantics,
 capture accounting, consolidation timeouts, and the deprecation shims."""
-import time
-
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -14,8 +12,8 @@ import jax.numpy as jnp
 from repro.core.buckets import layout_for_tree
 from repro.core.channel import (CompressedChannel, InProcessChannel,
                                 PacketizedChannel, StepEvent)
-from repro.core.checkpoint import CheckmateCheckpointer, SyncCheckpointer
-from repro.core.shadow import ConsolidationTimeout, ShadowCluster
+from repro.core.checkpoint import SyncCheckpointer
+from repro.core.shadow import ShadowCluster
 from repro.dist.compression import compress_tree, init_error_feedback
 from repro.optim import OptimizerConfig, apply_updates, init_state
 
@@ -158,102 +156,98 @@ def test_compressed_channel_error_feedback_divergence_bound():
     assert any(np.any(ckpt["params"][k] != raw[k]) for k in params)
 
 
-# -- capture accounting ------------------------------------------------------
+# -- capture accounting (failure drills run through the chaos harness) -------
 
 def test_gated_capture_accounting():
     """A gated capture produces NO checkpoint (neither n_checkpoints nor
     the stall accounting moves; skipped_captures/skipped_steps record it)
     AND desynchronizes the stream: without a resync the shadow refuses
     later applies, staying frozen at the last fully-captured step instead
-    of manufacturing a state that skipped the lost gradient."""
-    params = _tree(2, seed=3)
-    layout = layout_for_tree(params, cap_bytes=4096)
-    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=1)
-    zeros = {k: np.zeros_like(v) for k, v in params.items()}
-    shadow.bootstrap(params, zeros, zeros, 0)
-    ck = CheckmateCheckpointer(
-        shadow, channel=PacketizedChannel(ranks_per_group=4,
-                                          failures_at={2: "capture"}))
-    ck.on_step(StepEvent(step=1, grads=params, lr=1e-3))
-    stall_after_clean = ck.stall_total
-    ck.on_step(StepEvent(step=2, grads=params, lr=1e-3))
-    ck.on_step(StepEvent(step=3, grads=params, lr=1e-3))
+    of manufacturing a state that skipped the lost gradient. Driven by
+    the harness (`resync=False` = events without state_fn); the
+    stall-accounting and contiguity invariants check every step."""
+    from repro.harness import (ChannelSpec, FabricFailure, FailureSchedule,
+                               Scenario, run_scenario)
+    sc = Scenario(
+        name="gated-capture-frozen", seed=3, steps=3, n_leaves=2,
+        shadow_nodes=1, resync=False,
+        channel=ChannelSpec(kind="packetized"),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=2, kind="capture"),)))
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+    ck = res.trace.checkpointer
     assert ck.n_checkpoints == 1
     assert ck.skipped_captures == 2          # the gap AND the refused step 3
     assert ck.skipped_steps == [2, 3]
-    assert shadow.consolidate()["step"] == 1  # frozen: contiguity preserved
-    assert ck.stall_total == stall_after_clean   # gated steps add no stall
+    # frozen: contiguity preserved at the last fully-captured step
+    assert res.trace.final_shadow["step"] == 1
+    assert all(r.stall == 0.0 for r in res.trace.records if r.gated)
+    assert ck.stall_total == res.trace.records[0].stall  # gated adds none
 
 
 def test_gated_capture_resyncs_from_state_fn():
     """When the next StepEvent carries state_fn (as the training loop's
-    always do), the checkpointer heals the gap with a full-state copy: the
-    resync counts as that step's checkpoint and the stream resumes."""
-    params = _tree(2, seed=3)
-    layout = layout_for_tree(params, cap_bytes=4096)
-    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=1)
-    zeros = {k: np.zeros_like(v) for k, v in params.items()}
-    shadow.bootstrap(params, zeros, zeros, 0)
-    ck = CheckmateCheckpointer(
-        shadow, channel=PacketizedChannel(ranks_per_group=4,
-                                          failures_at={2: "capture"}))
-    snap3 = {"params": {k: v + 7.0 for k, v in params.items()},
-             "mu": zeros, "nu": zeros, "step": 3}
-    ck.on_step(StepEvent(step=1, grads=params, lr=1e-3))
-    ck.on_step(StepEvent(step=2, grads=params, lr=1e-3))       # gated
-    ck.on_step(StepEvent(step=3, grads=params, lr=1e-3,
-                         state_fn=lambda: snap3))              # resync copy
-    ck.on_step(StepEvent(step=4, grads=params, lr=1e-3))       # streams again
+    always do — harness `resync=True`), the checkpointer heals the gap
+    with a full-state copy: the resync counts as that step's checkpoint
+    and the stream resumes."""
+    from repro.harness import (ChannelSpec, FabricFailure, FailureSchedule,
+                               Scenario, run_scenario)
+    sc = Scenario(
+        name="gated-capture-resync", seed=3, steps=4, n_leaves=2,
+        shadow_nodes=1, resync=True,
+        channel=ChannelSpec(kind="packetized"),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=2, kind="capture"),)))
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+    ck = res.trace.checkpointer
     assert ck.n_checkpoints == 3                 # steps 1, 3 (copy), 4
     assert ck.skipped_captures == 1
     assert ck.skipped_steps == [2]
-    ckpt = shadow.consolidate()
-    assert ckpt["step"] == 4
+    assert ck.resyncs == [3]
+    assert res.trace.final_shadow["step"] == 4
+
     # restore() clears the desync too: recovery rewinds training onto the
     # shadow state, so the resumed stream is contiguous by construction
-    ck2 = CheckmateCheckpointer(
-        ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=1),
-        channel=PacketizedChannel(ranks_per_group=4,
-                                  failures_at={1: "capture"}))
-    ck2.shadow.bootstrap(params, zeros, zeros, 0)
-    ck2.on_step(StepEvent(step=1, grads=params, lr=1e-3))      # gated
-    assert ck2.restore()["step"] == 0
-    ck2.on_step(StepEvent(step=1, grads=params, lr=1e-3))      # re-run, clean
-    assert ck2.n_checkpoints == 1 and ck2.shadow.consolidate()["step"] == 1
+    sc2 = Scenario(
+        name="gated-restore-clears-desync", seed=4, steps=2, n_leaves=2,
+        shadow_nodes=1, resync=False,
+        channel=ChannelSpec(kind="packetized"),
+        schedule=FailureSchedule(
+            train_fail_steps=(2,),
+            fabric=(FabricFailure(step=1, kind="capture"),)))
+    res2 = run_scenario(sc2)
+    assert res2.passed, res2.violations
+    ck2 = res2.trace.checkpointer
+    # gated step 1, failure at 2 -> restore() rewound to the bootstrap
+    # state (step 0) and both steps replayed cleanly
+    replayed = [r for r in res2.trace.records if not r.first_seen]
+    assert replayed and replayed[0].restored_step == 0
+    assert ck2.n_checkpoints == 2
+    assert res2.trace.final_shadow["step"] == 2
 
 
 # -- consolidation timeout ---------------------------------------------------
 
 def test_consolidate_timeout_reports_laggards():
     """A wedged shadow worker can no longer hang recovery: consolidate
-    honors its deadline end-to-end and reports the lagging node ids."""
-    params = _tree(2, seed=4)
-    layout = layout_for_tree(params, cap_bytes=4096)
-    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2,
-                           async_mode=True)
-    zeros = {k: np.zeros_like(v) for k, v in params.items()}
-    shadow.bootstrap(params, zeros, zeros, 0)
-    release = time.time() + 1.5
-    original_apply = shadow.nodes[0].apply
-
-    def wedged_apply(*a, **kw):                  # node 0 stalls ~1.5s
-        while time.time() < release:
-            time.sleep(0.01)
-        return original_apply(*a, **kw)
-
-    shadow.nodes[0].apply = wedged_apply
-    chan = InProcessChannel()
-    chan.open(layout)
-    chan.send(StepEvent(step=1, grads=params, lr=1e-3))
-    for d in chan.poll():
-        shadow.on_delivery(d)
-    with pytest.raises(ConsolidationTimeout) as err:
-        shadow.consolidate(timeout=0.2)
-    assert err.value.lagging_nodes == [0]
-    assert err.value.partial["step"] == 0        # min across nodes: stale
-    ckpt = shadow.consolidate(timeout=30)        # worker released: completes
-    assert ckpt["step"] == 1
-    shadow.shutdown()
+    honors its deadline end-to-end and reports the lagging node ids. The
+    harness's wedge drill installs the wedge before the final step's
+    delivery; the consolidate-timeout invariant checks deadline, laggard
+    ids, and the post-release retry."""
+    from repro.harness import FailureSchedule, Scenario, run_scenario
+    sc = Scenario(
+        name="wedge-timeout-laggards", seed=4, steps=2, n_leaves=2,
+        shadow_nodes=2, shadow_async=True,
+        schedule=FailureSchedule(wedge_node=0, wedge_release_s=1.5))
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+    w = res.trace.wedge
+    assert w["raised"]
+    assert w["lagging"] == [0]
+    assert w["partial_step"] == 1            # min across nodes: stale
+    assert w["final_step"] == 2              # worker released: completes
 
 
 # -- deprecation shims -------------------------------------------------------

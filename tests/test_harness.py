@@ -1,0 +1,145 @@
+"""Chaos co-simulation harness (docs/harness.md): golden corpus passes
+every invariant, random scenarios sampled from one integer pass and
+replay deterministically, violation bundles reproduce bit-identically
+(and replay as pytest cases), and scenario specs round-trip JSON."""
+import json
+import os
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+
+from repro.harness import (GOLDEN, ChannelSpec, FailureSchedule, Scenario,
+                           replay_bundle, repro_seed, run_scenario,
+                           sample_scenario, scenario_strategy)
+
+CHANNEL_GOLDEN = sorted(n for n, s in GOLDEN.items() if s.level == "channel")
+
+
+# -- golden corpus -----------------------------------------------------------
+
+@pytest.mark.parametrize("name", CHANNEL_GOLDEN)
+def test_golden_channel_scenarios_pass(name):
+    """Every channel-level golden scenario passes every applicable
+    invariant (the full corpus, including full-level, is the CI chaos
+    job: `python -m repro.harness run --corpus golden`)."""
+    result = run_scenario(GOLDEN[name])
+    assert result.passed, (name, result.violations)
+
+
+def test_golden_corpus_spans_the_scenario_space():
+    """The corpus covers all three topologies, all three channel stacks,
+    and every failure class the schedule can express."""
+    scs = list(GOLDEN.values())
+    assert len(scs) >= 20
+    assert {s.channel.kind for s in scs} == {"inprocess", "packetized",
+                                            "compressed"}
+    assert {s.channel.topology for s in scs if s.channel.has_fabric} >= {
+        "single", "rail-optimized", "leaf-spine"}
+    kinds = {f.kind for s in scs for f in s.schedule.fabric}
+    assert kinds == {"capture", "link", "switch", "shadow_nic"}
+    assert any(s.schedule.train_fail_steps for s in scs)
+    assert any(s.schedule.wedge_node is not None for s in scs)
+    assert any(s.level == "full" for s in scs)
+
+
+# -- random scenarios from one integer ---------------------------------------
+
+def test_sample_scenario_deterministic():
+    base = repro_seed()
+    for seed in (base + 5, base + 81, base + 1009):
+        assert sample_scenario(seed) == sample_scenario(seed)
+
+
+@given(scenario_strategy(level="channel"))
+@settings(max_examples=5, deadline=None)
+def test_sampled_scenarios_pass_all_invariants(sc):
+    """Any scenario the sampler can produce must pass — a violation here
+    is a real bug, replayable from the scenario's single seed."""
+    result = run_scenario(sc)
+    assert result.passed, (sc.name, result.violations)
+
+
+def test_sampled_run_replays_bit_identically():
+    """`replay --seed N` semantics: two runs of the same sampled scenario
+    produce byte-identical outcome bundles."""
+    seed = repro_seed() + 333
+    a = run_scenario(sample_scenario(seed, level="channel")).bundle()
+    b = run_scenario(sample_scenario(seed, level="channel")).bundle()
+    assert a == b
+
+
+# -- violation bundles -------------------------------------------------------
+
+def _forced_violation_scenario():
+    """A scenario that deterministically violates: bit-identity is forced
+    onto a compressed stream (whose shadow intentionally diverges)."""
+    return Scenario(name="forced-bit-identity-on-compressed", seed=5,
+                    steps=3, channel=ChannelSpec(kind="compressed"),
+                    invariants=("shadow-bit-identity",))
+
+
+def test_violation_emits_minimal_bundle_that_replays(tmp_path):
+    result = run_scenario(_forced_violation_scenario(), bundle_dir=tmp_path)
+    assert not result.passed
+    assert result.failing_step == 1
+    d = json.loads(result.bundle_path.read_text())
+    # minimal repro: seed + scenario JSON + failing step (+ what failed)
+    assert set(d) == {"seed", "scenario", "failing_step", "violations"}
+    assert d["failing_step"] == 1
+    assert Scenario.from_dict(d["scenario"]) == result.scenario
+    _, identical = replay_bundle(result.bundle_path)
+    assert identical
+
+
+_BUNDLE_DIRS = [Path(__file__).parent / "bundles"]
+if os.environ.get("REPRO_BUNDLE_DIR"):
+    _BUNDLE_DIRS.append(Path(os.environ["REPRO_BUNDLE_DIR"]))
+_BUNDLES = sorted(p for d in _BUNDLE_DIRS if d.is_dir()
+                  for p in d.glob("*.json"))
+
+
+@pytest.mark.parametrize("path", _BUNDLES or [None],
+                         ids=[p.name for p in _BUNDLES] or ["none"])
+def test_repro_bundles_replay_as_pytest_cases(path):
+    """Any bundle dropped in tests/bundles/ (or $REPRO_BUNDLE_DIR, e.g. a
+    CI chaos artifact) replays here bit-identically."""
+    if path is None:
+        pytest.skip("no repro bundles to replay")
+    result, identical = replay_bundle(path)
+    assert identical, (path, result.violations)
+
+
+# -- scenario spec round trip ------------------------------------------------
+
+def test_scenario_json_roundtrip():
+    for seed in (repro_seed() + 2, repro_seed() + 77):
+        sc = sample_scenario(seed)
+        assert Scenario.from_json(sc.to_json()) == sc
+    wedge = GOLDEN["wedge-consolidate"]
+    assert Scenario.from_json(wedge.to_json()) == wedge
+    multi = GOLDEN["multi-failure-sequence"]       # tuple targets survive
+    assert Scenario.from_json(multi.to_json()) == multi
+
+
+def test_scenario_validation_rejects_inconsistent_specs():
+    from repro.harness import FabricFailure
+    with pytest.raises(ValueError, match="fabric"):
+        Scenario(name="x", schedule=FailureSchedule(
+            fabric=(FabricFailure(step=1, kind="capture"),))).validate()
+    with pytest.raises(ValueError, match="async"):
+        Scenario(name="x", schedule=FailureSchedule(
+            wedge_node=0)).validate()
+    with pytest.raises(ValueError, match="outside"):
+        Scenario(name="x", steps=3,
+                 channel=ChannelSpec(kind="packetized"),
+                 schedule=FailureSchedule(fabric=(
+                     FabricFailure(step=9, kind="capture"),))).validate()
+
+
+def test_repro_seed_env(monkeypatch):
+    monkeypatch.setenv("REPRO_SEED", "4242")
+    assert repro_seed() == 4242
+    monkeypatch.delenv("REPRO_SEED")
+    assert repro_seed() == 0
+    assert repro_seed(7) == 7

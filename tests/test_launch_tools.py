@@ -1,0 +1,99 @@
+"""Coverage for the last test-free launch modules: the batched serving
+driver (`repro.launch.serve`) and the three-term roofline model
+(`repro.launch.roofline`) — a smoke test plus one property each."""
+import json
+import sys
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro.configs.base import SHAPES
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_BF16, Roofline,
+                                   model_flops_for)
+
+
+# -- roofline -----------------------------------------------------------------
+
+def _roof(flops, nbytes, coll, chips=4, model=1e9):
+    return Roofline(arch="a", shape="train_4k", mesh="m", chips=chips,
+                    flops_per_device=flops, bytes_per_device=nbytes,
+                    collective_bytes_per_device=coll, model_flops=model,
+                    per_collective={})
+
+
+def test_roofline_smoke_row():
+    r = _roof(1e12, 1e9, 1e8, chips=2, model=5e11)
+    row = r.row()
+    assert row["bound"] in ("compute", "memory", "collective")
+    assert row["step_time_s"] > 0
+    assert row["hlo_flops_total"] == 2e12
+    assert 0 < row["useful_flops_ratio"] <= 1
+    assert 0 < row["mfu_at_roofline"] <= 1
+
+
+@given(st.floats(1e6, 1e15), st.floats(1e3, 1e12), st.floats(0, 1e12),
+       st.integers(1, 4096))
+@settings(max_examples=30, deadline=None)
+def test_roofline_step_time_is_binding_term(flops, nbytes, coll, chips):
+    """step_time is the max of the three terms, `bound` names the binding
+    one, and MFU at the roofline never exceeds the useful-FLOPs ratio
+    (equality exactly when compute-bound)."""
+    r = _roof(flops, nbytes, coll, chips=chips, model=flops * chips / 2)
+    terms = {"compute": flops / PEAK_BF16, "memory": nbytes / HBM_BW,
+             "collective": coll / ICI_BW}
+    assert r.step_time_s == max(terms.values())
+    assert terms[r.bound] == max(terms.values())
+    assert r.mfu <= r.useful_flops_ratio + 1e-12
+    if r.bound == "compute":
+        assert r.mfu == pytest.approx(r.useful_flops_ratio)
+
+
+def test_model_flops_follow_6nd_2nd():
+    """Analytic MODEL_FLOPS: 6ND for train, 2ND forward-only, one token
+    per sequence for decode — and MoE counts ACTIVE params only."""
+    cfg = C.get("tinyllama-1.1b")
+    n = cfg.param_count()
+    train, prefill, decode = (SHAPES["train_4k"], SHAPES["prefill_32k"],
+                              SHAPES["decode_32k"])
+    assert model_flops_for(cfg, train) == \
+        6.0 * n * train.global_batch * train.seq_len
+    assert model_flops_for(cfg, prefill) == \
+        2.0 * n * prefill.global_batch * prefill.seq_len
+    assert model_flops_for(cfg, decode) == 2.0 * n * decode.global_batch
+
+    moe = C.get("dbrx-132b")
+    assert moe.num_experts > 0
+    assert model_flops_for(moe, train) == \
+        6.0 * moe.active_param_count() * train.global_batch * train.seq_len
+    assert moe.active_param_count() < moe.param_count()
+
+
+# -- serve --------------------------------------------------------------------
+
+def _run_serve(monkeypatch, capsys, extra=()):
+    from repro.launch import serve
+    argv = ["serve", "--arch", "tinyllama-1.1b", "--reduced",
+            "--batch", "2", "--prompt-len", "8", "--gen", "4", *extra]
+    monkeypatch.setattr(sys, "argv", argv)
+    serve.main()
+    return json.loads(capsys.readouterr().out)
+
+
+def test_serve_smoke(monkeypatch, capsys):
+    out = _run_serve(monkeypatch, capsys)
+    assert out["arch"] == "tinyllama-1.1b-smoke"
+    assert out["batch"] == 2 and out["generated"] == 4
+    assert out["prefill_s"] >= 0 and out["decode_s"] >= 0
+    assert out["decode_tok_per_s"] > 0
+    cfg = C.get("tinyllama-1.1b").reduced()
+    assert len(out["sample_tokens"]) == 4       # min(gen, 8) greedy tokens
+    assert all(0 <= t < cfg.vocab_size for t in out["sample_tokens"])
+
+
+def test_serve_greedy_decode_deterministic(monkeypatch, capsys):
+    """Greedy decode with a fixed seed is a pure function: two runs emit
+    the identical token stream."""
+    a = _run_serve(monkeypatch, capsys, extra=("--seed", "3"))
+    b = _run_serve(monkeypatch, capsys, extra=("--seed", "3"))
+    assert a["sample_tokens"] == b["sample_tokens"]

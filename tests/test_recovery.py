@@ -1,5 +1,11 @@
 """Recovery correctness (paper §6.5 / Fig 9): interrupted-and-recovered
-training is indistinguishable from uninterrupted training."""
+training is indistinguishable from uninterrupted training.
+
+The failure drills run through the chaos harness (`repro.harness`): a
+declarative Scenario drives train loop -> checkpointer -> recovery, the
+invariant registry (resume-bit-identity, replay-determinism, contiguity,
+stall accounting) checks every step, and the explicit assertions the
+original hand-rolled drills made are kept on top of the result."""
 import numpy as np
 import pytest
 
@@ -7,10 +13,10 @@ import jax
 
 import repro.configs as C
 from repro.core.buckets import layout_for_tree
-from repro.core.checkpoint import CheckmateCheckpointer, SyncCheckpointer
-from repro.core.recovery import FailurePlan
+from repro.core.checkpoint import CheckmateCheckpointer
 from repro.core.shadow import ShadowCluster
 from repro.dist.sharding import ShardingRules, make_smoke_mesh
+from repro.harness import FailureSchedule, Scenario, run_scenario
 from repro.optim import OptimizerConfig
 from repro.train.loop import train
 from repro.train.step import make_train_state
@@ -29,39 +35,41 @@ def baseline():
     return cfg, rules, opt, state, stats
 
 
-def test_checkmate_recovery_bitwise_identical(baseline):
-    cfg, rules, opt, state_a, stats_a = baseline
-    s0 = make_train_state(jax.random.PRNGKey(SEED), cfg, rules)
-    shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=2)
-    shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
-    state_b, stats_b = train(
-        cfg, rules, steps=STEPS, batch=BATCH, seq=SEQ, opt=opt, seed=SEED,
-        state=s0, checkpointer=CheckmateCheckpointer(shadow),
-        failure_plan=FailurePlan((4, 8)))
-    assert stats_b.recoveries == 2
+def test_checkmate_recovery_bitwise_identical():
+    """Two injected failures, recovered from the per-iteration shadow
+    checkpoint, converge bit-identically to the uninterrupted reference
+    (which the harness runs internally)."""
+    sc = Scenario(name="recovery-bitwise", level="full", seed=SEED,
+                  steps=STEPS, batch=BATCH, seq=SEQ,
+                  schedule=FailureSchedule(train_fail_steps=(4, 8)))
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+    stats = res.trace.stats
+    assert stats.recoveries == 2
     # per-iteration checkpointing -> recovery resumes at the failed step
-    assert stats_b.recovered_at == [3, 7]
-    for k in state_a.params:
-        assert np.array_equal(np.asarray(state_a.params[k]),
-                              np.asarray(state_b.params[k])), k
-    assert stats_a.losses == stats_b.losses
+    assert stats.recovered_at == [3, 7]
+    for k in res.trace.ref_final["params"]:
+        assert np.array_equal(res.trace.final["params"][k],
+                              res.trace.ref_final["params"][k]), k
+    assert stats.losses == res.trace.ref_losses
 
 
-def test_repeated_work_vs_frequency(baseline):
+def test_repeated_work_vs_frequency():
     """A freq-5 baseline checkpointer loses work on failure (repeated
     steps), quantifying the paper's repeated-work argument."""
-    cfg, rules, opt, state_a, stats_a = baseline
-    s0 = make_train_state(jax.random.PRNGKey(SEED), cfg, rules)
-    ck = SyncCheckpointer(freq=5)
-    state_b, stats_b = train(
-        cfg, rules, steps=STEPS, batch=BATCH, seq=SEQ, opt=opt, seed=SEED,
-        state=s0, checkpointer=ck, failure_plan=FailurePlan((8,)))
+    sc = Scenario(name="repeated-work-sync-freq5", level="full", seed=SEED,
+                  steps=STEPS, batch=BATCH, seq=SEQ,
+                  checkpointer="sync", ckpt_freq=5,
+                  schedule=FailureSchedule(train_fail_steps=(8,)))
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+    stats = res.trace.stats
     # failed at 8, last checkpoint at 5 -> recomputes steps 6,7 (repeated)
-    assert stats_b.recovered_at == [5]
-    assert stats_b.steps == STEPS + 2          # 2 repeated iterations
-    for k in state_a.params:
-        assert np.array_equal(np.asarray(state_a.params[k]),
-                              np.asarray(state_b.params[k])), k
+    assert stats.recovered_at == [5]
+    assert stats.steps == STEPS + 2          # 2 repeated iterations
+    for k in res.trace.ref_final["params"]:
+        assert np.array_equal(res.trace.final["params"][k],
+                              res.trace.ref_final["params"][k]), k
 
 
 def test_elastic_restore_changes_shadow_partitioning(baseline):

@@ -1,10 +1,10 @@
 """Fig 10: replication-factor sweep on the packet simulator — AllReduce bus
 bandwidth and switch TX/RX frame counts (only tagged packets replicate) —
 plus per-channel send-side overhead (in-process vs packetized vs
-compressed) on the `GradientChannel` delivery API."""
+compressed) measured from the checkpointer's stall-attribution ledger
+(`repro.obs.stalls`), so the number reported here is the same decomposition
+the observability plane books at run time."""
 from __future__ import annotations
-
-import time
 
 import numpy as np
 
@@ -12,10 +12,15 @@ from benchmarks.common import csv_row
 from repro.core.buckets import layout_for_tree
 from repro.core.channel import (CompressedChannel, InProcessChannel,
                                 PacketizedChannel, StepEvent)
+from repro.core.checkpoint import CheckmateCheckpointer
+from repro.core.shadow import ShadowCluster
 from repro.net.simulator import simulate_allgather_replication
+from repro.optim import OptimizerConfig
+
+SEND_STAGES = ("send", "quantize")       # the channel-attributed stall
 
 
-def run():
+def run(registry=None):
     base = None
     for rf in (1, 2, 4, 8, 16):
         r = simulate_allgather_replication(
@@ -31,31 +36,46 @@ def run():
             f"{abs(base - r.bus_bandwidth_gbps) < 1e-6}")
 
     # -- per-channel send-side overhead (capture critical path) --------------
+    # Measured from the stall-attribution ledger: drive the real
+    # CheckmateCheckpointer over each channel and report the channel-
+    # attributed stages (send + quantize) per step — the same decomposition
+    # `repro.obs summary` prints, rather than a one-off wall timing around
+    # send() (which would also charge the fabric event loop / inline apply).
     rng = np.random.default_rng(0)
     tree = {f"layer{i}.w": rng.standard_normal((256, 512)).astype(np.float32)
             for i in range(8)}
     layout = layout_for_tree(tree, cap_bytes=1 << 20)
+    zeros = {k: np.zeros_like(v) for k, v in tree.items()}
+    opt = OptimizerConfig(name="sgd", lr=1e-3)
     channels = [
-        ("inprocess", InProcessChannel()),
-        ("packetized", PacketizedChannel(topology="rail-optimized",
-                                         n_dp_groups=2, ranks_per_group=4)),
-        ("compressed", CompressedChannel(InProcessChannel())),
+        ("inprocess", lambda: InProcessChannel()),
+        ("packetized", lambda: PacketizedChannel(topology="rail-optimized",
+                                                 n_dp_groups=2,
+                                                 ranks_per_group=4)),
+        ("compressed", lambda: CompressedChannel(InProcessChannel())),
     ]
-    for name, chan in channels:
-        chan.open(layout)
-        chan.send(StepEvent(step=1, grads=tree, lr=1e-3))    # warmup
-        chan.poll()
-        reps = []
-        for r_i in range(3):
-            t0 = time.perf_counter()
-            chan.send(StepEvent(step=2 + r_i, grads=tree, lr=1e-3))
-            reps.append(time.perf_counter() - t0)
-        ds = chan.poll()
-        ok = all(d.complete for d in ds)
-        wire = ds[-1].wire_bytes
+    n_reps = 3
+    for name, make in channels:
+        chan = make()
+        shadow = ShadowCluster(layout, opt, n_nodes=2)
+        shadow.bootstrap(tree, zeros, zeros, 0)
+        ck = CheckmateCheckpointer(shadow, channel=chan)
+        ck.on_step(StepEvent(step=1, grads=tree, lr=1e-3))      # warmup
+        base = dict(ck.stall_stages)
+        for r_i in range(n_reps):
+            ck.on_step(StepEvent(step=2 + r_i, grads=tree, lr=1e-3))
+        delta = {k: v - base.get(k, 0.0)
+                 for k, v in ck.stall_stages.items()}
+        send_s = sum(delta.get(s, 0.0) for s in SEND_STAGES)
+        breakdown = " ".join(f"{k}={v / n_reps * 1e6:.1f}us"
+                             for k, v in sorted(delta.items()))
         chan.close()
-        csv_row(f"channel_send.{name}", min(reps) * 1e6,
-                f"wire_bytes={wire} complete={ok}")
+        csv_row(f"channel_send.{name}", send_s / n_reps * 1e6, breakdown)
+        if registry is not None:
+            from repro.obs.publish import publish_channel
+            from repro.obs.stalls import publish_stalls
+            publish_stalls(registry, ck, labels={"bench": name})
+            publish_channel(registry, chan)
 
 
 if __name__ == "__main__":

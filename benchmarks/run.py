@@ -23,6 +23,7 @@ Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -48,6 +49,9 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--smoke", action="store_true",
                     help=f"fast model-free subset: {sorted(SMOKE)}")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a repro.obs metrics snapshot of the run "
+                         "(default BENCH_metrics.json under --smoke)")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     if args.smoke:
@@ -55,6 +59,13 @@ def main() -> None:
         if not only:
             ap.error(f"--only selects no smoke module; smoke set: "
                      f"{sorted(SMOKE)}")
+        if args.metrics_out is None:
+            args.metrics_out = "BENCH_metrics.json"
+
+    registry = None
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
 
     print("name,us_per_call,derived")
     failures = []
@@ -64,12 +75,22 @@ def main() -> None:
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
-            __import__(mod, fromlist=["run"]).run()
+            fn = __import__(mod, fromlist=["run"]).run
+            # benchmarks that accept a registry publish their channel /
+            # stall accounting into the run-wide metrics snapshot
+            if registry is not None and "registry" in (
+                    inspect.signature(fn).parameters):
+                fn(registry=registry)
+            else:
+                fn()
         except Exception as e:                      # keep the harness going
             traceback.print_exc()
             failures.append(name)
             print(f"{name}.FAILED,0,{type(e).__name__}")
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if registry is not None:
+        registry.write_json(args.metrics_out)
+        print(f"# metrics snapshot -> {args.metrics_out}")
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

@@ -43,11 +43,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.buckets import (XLA_ALIGN, BucketLayout, FlatTreeView,
                                 alloc_flat, bucket_dtype, pack_bucket_into)
 from repro.core.multicast import MulticastGroup
@@ -131,6 +132,55 @@ class Delivery:
                 f"wire_bytes={self.wire_bytes})")
 
 
+@dataclass
+class FabricTotals:
+    """Always-on cumulative wire/fabric account for one channel.
+
+    Cheap native counters updated in place per send (no registry lookups
+    on the hot path); `repro.obs.publish.publish_channel` mirrors them
+    into labeled metrics once per run.
+    """
+    sends: int = 0
+    gated: int = 0                      # incomplete captures
+    wire_bytes: int = 0                 # incl. in-switch replication
+    frames_tx: int = 0
+    frames_rx: int = 0
+    frames_mirrored: int = 0
+    drops: int = 0
+    retransmits: int = 0
+    rerouted: int = 0
+    mirror_lost: int = 0
+    pfc_pauses: int = 0
+    pfc_resumes: int = 0
+    pfc_pause_s: float = 0.0            # aggregate link-paused virtual time
+    fabric_time_s: float = 0.0          # simulated time consumed
+    link_pfc: dict = field(default_factory=dict)   # per-link pause account
+
+    def absorb(self, result, wire_bytes: int):
+        """Fold one ``FabricResult`` into the running totals."""
+        self.sends += 1
+        if not result.reassembled_ok:
+            self.gated += 1
+        self.wire_bytes += wire_bytes
+        self.frames_tx += result.tx_frames
+        self.frames_rx += result.rx_frames
+        self.frames_mirrored += result.mirrored_frames
+        self.drops += result.drops
+        self.retransmits += result.retransmits
+        self.rerouted += result.rerouted
+        self.mirror_lost += result.mirror_lost_frames
+        self.pfc_pauses += result.pfc_pauses
+        self.pfc_resumes += result.pfc_resumes
+        self.pfc_pause_s += result.pfc_pause_s
+        self.fabric_time_s += result.duration_s
+        for link, st in result.link_pfc.items():
+            agg = self.link_pfc.setdefault(
+                link, {"pauses": 0, "resumes": 0, "pause_s": 0.0})
+            agg["pauses"] += st["pauses"]
+            agg["resumes"] += st["resumes"]
+            agg["pause_s"] += st["pause_s"]
+
+
 @runtime_checkable
 class GradientChannel(Protocol):
     """Transport protocol between the capture point and the shadow plane.
@@ -140,6 +190,12 @@ class GradientChannel(Protocol):
     performs off the sender's critical path — in-switch replication, wire
     propagation, shadow-side reassembly — is not stall; the fabric's
     virtual-time account lives in ``Delivery.fabric``.
+
+    Channels additionally set ``last_send_parts`` after every ``send``: an
+    ordered ``{stage: seconds}`` decomposition of the return value whose
+    in-order sum equals it *bit-exactly* (stall attribution,
+    `repro.obs.stalls`). Wrappers prepend their own stages to the inner
+    channel's parts.
     """
     name: str
 
@@ -187,18 +243,27 @@ class InProcessChannel:
     def __init__(self):
         self._layout: Optional[BucketLayout] = None
         self._pending: list[Delivery] = []
+        self.last_send_parts: dict = {}
 
     def open(self, layout, multicast_groups=None):
         self._layout = layout
 
     def send(self, event: StepEvent) -> float:
         assert self._layout is not None, "open() before send()"
+        ob = _obs.get()
         t0 = time.perf_counter()
-        flats = _flats_from_event(self._layout, event)
-        self._pending.append(Delivery(
-            step=event.step, lr=event.lr, grad_scale=event.grad_scale,
-            flats=flats, layout=self._layout, complete=True))
-        return time.perf_counter() - t0
+        with ob.tracer.span("channel.send", args={"step": event.step,
+                                                  "channel": self.name}):
+            with ob.tracer.span("bucket.pack", args={"step": event.step}):
+                flats = _flats_from_event(self._layout, event)
+            self._pending.append(Delivery(
+                step=event.step, lr=event.lr, grad_scale=event.grad_scale,
+                flats=flats, layout=self._layout, complete=True))
+        dt = time.perf_counter() - t0
+        self.last_send_parts = {"send": dt}
+        ob.metrics.counter("channel_sends_total", "Gradient sends").inc(
+            1, channel=self.name)
+        return dt
 
     def poll(self) -> list[Delivery]:
         out, self._pending = self._pending, []
@@ -279,6 +344,8 @@ class PacketizedChannel:
         self._total = 0                       # wire buffer size
         self._src_buf: Optional[bytearray] = None
         self._src_views: list[np.ndarray] = []
+        self.totals = FabricTotals()
+        self.last_send_parts: dict = {}
 
     def open(self, layout, multicast_groups=None):
         from repro.net.planner import build_topology
@@ -344,29 +411,35 @@ class PacketizedChannel:
         from repro.net.pfc import PfcConfig
         from repro.net.simulator import FabricSimulator
         assert self._layout is not None, "open() before send()"
+        ob = _obs.get()
+        send_span = ob.tracer.span("channel.send",
+                                   args={"step": event.step,
+                                         "channel": self.name})
+        send_span.__enter__()
 
         # one pass: leaves (or an already-packed payload) straight into the
         # reused wire buffer — no intermediate per-bucket concatenate
         buckets = self._layout.buckets
-        if event.flats is not None:
-            dtypes = tuple(np.dtype(event.flats[b.bucket_id].dtype)
-                           for b in buckets)
-            if dtypes != self._wire_dtypes:    # e.g. f32 dequantized stream
-                self._set_wire_geometry(dtypes)
-            for b, dst in zip(buckets, self._src_views):
-                dst[:] = event.flats[b.bucket_id]
-        else:
-            assert event.grads is not None, "channels carry gradients"
-            # the wire carries the GRADIENT dtype (may differ from the
-            # param layout's, e.g. f32 grads over a bf16 tree) — exactly
-            # what pack_bucket's concatenate would have produced
-            dtypes = tuple(
-                np.result_type(*[event.grads[s.name].dtype
-                                 for s in b.slots]) for b in buckets)
-            if dtypes != self._wire_dtypes:
-                self._set_wire_geometry(dtypes)
-            for b, dst in zip(buckets, self._src_views):
-                pack_bucket_into(b, event.grads, dst)
+        with ob.tracer.span("bucket.pack", args={"step": event.step}):
+            if event.flats is not None:
+                dtypes = tuple(np.dtype(event.flats[b.bucket_id].dtype)
+                               for b in buckets)
+                if dtypes != self._wire_dtypes:  # e.g. f32 dequantized stream
+                    self._set_wire_geometry(dtypes)
+                for b, dst in zip(buckets, self._src_views):
+                    dst[:] = event.flats[b.bucket_id]
+            else:
+                assert event.grads is not None, "channels carry gradients"
+                # the wire carries the GRADIENT dtype (may differ from the
+                # param layout's, e.g. f32 grads over a bf16 tree) — exactly
+                # what pack_bucket's concatenate would have produced
+                dtypes = tuple(
+                    np.result_type(*[event.grads[s.name].dtype
+                                     for s in b.slots]) for b in buckets)
+                if dtypes != self._wire_dtypes:
+                    self._set_wire_geometry(dtypes)
+                for b, dst in zip(buckets, self._src_views):
+                    pack_bucket_into(b, event.grads, dst)
         per, total = self._per, self._total
         src = memoryview(self._src_buf)
         rx_np = alloc_flat(total, np.uint8)      # aligned: views adopt free
@@ -390,7 +463,36 @@ class PacketizedChannel:
 
         sim.frame_tx_hook = frame_tx
         sim.shadow_rx_hook = shadow_rx
-        result = sim.run()
+        rx_frames: list[tuple] = []
+        if ob.tracer.enabled:
+            # per-frame fabric traversal on the simulated-time tracks:
+            # record each mirror delivery (node, virtual tx/arrive times)
+            def traced_rx(node_id, f, _inner=shadow_rx):
+                _inner(node_id, f)
+                rx_frames.append((node_id, f.dp_group, f.chunk, f.replica,
+                                  f.t_send, f.t_arrive, f.n_frames,
+                                  f.payload_len))
+            sim.shadow_rx_hook = traced_rx
+        with ob.tracer.span("fabric.simulate", args={"step": event.step}):
+            result = sim.run()
+        if ob.tracer.enabled:
+            tr = ob.tracer
+            tr.fabric_span(f"allgather step{event.step}", 0.0,
+                           result.duration_s, track="fabric",
+                           args={"step": event.step,
+                                 "events": result.events,
+                                 "reassembled_ok": result.reassembled_ok})
+            for nid, dp, chunk, rep, t_tx, t_rx, nf, pl in rx_frames:
+                tr.fabric_span(f"g{dp}c{chunk}r{rep}", t_tx, t_rx,
+                               track=f"shadow{nid}.rx",
+                               args={"step": event.step, "frames": nf,
+                                     "bytes": pl})
+            tr.fabric_advance(result.duration_s)
+
+        # no live registry incs here: the always-on FabricTotals above is
+        # this channel's single metrics source, mirrored into the registry
+        # once per run by publish_channel (avoids double counting)
+        self.totals.absorb(result, total * self.replication_factor)
 
         flats = None
         if result.reassembled_ok:
@@ -405,10 +507,12 @@ class PacketizedChannel:
             complete=result.reassembled_ok,
             missing_captures=result.missing_captures,
             wire_bytes=total * self.replication_factor, fabric=result))
+        send_span.__exit__(None, None, None)
         # Zero sender-visible stall (§4 zero-overhead claim): the gradient
         # frames ride the ring AllGather training performs anyway, and
         # replication happens in-switch. The event loop above is simulation
         # cost on this host — its virtual-time account is Delivery.fabric.
+        self.last_send_parts = {"send": 0.0}
         return 0.0
 
     def poll(self) -> list[Delivery]:
@@ -457,6 +561,7 @@ class CompressedChannel:
         self.name = f"compressed[{self.inner.name}]"
         self._layout: Optional[BucketLayout] = None
         self._sent_bytes: dict[int, int] = {}
+        self.last_send_parts: dict = {}
 
     def open(self, layout, multicast_groups=None):
         self._layout = layout
@@ -464,15 +569,28 @@ class CompressedChannel:
 
     def send(self, event: StepEvent) -> float:
         assert self._layout is not None, "open() before send()"
+        ob = _obs.get()
         t0 = time.perf_counter()
-        before = self.compressor.wire_bytes_total
-        flats = _flats_from_event(self._layout, event)      # pack once
-        deq = self.compressor.compress_flats(self._layout, flats)
+        with ob.tracer.span("channel.quantize", args={"step": event.step}):
+            before = self.compressor.wire_bytes_total
+            flats = _flats_from_event(self._layout, event)  # pack once
+            deq = self.compressor.compress_flats(self._layout, flats)
         self._sent_bytes[event.step] = (self.compressor.wire_bytes_total
                                         - before)
         stall = time.perf_counter() - t0
-        return stall + self.inner.send(
+        inner_stall = self.inner.send(
             dataclasses.replace(event, grads=None, flats=deq))
+        # attribution: quantize + the inner channel's own decomposition
+        # (which sums in-order to inner_stall), so the parts' in-order sum
+        # equals the stall + inner_stall returned below bit-exactly
+        self.last_send_parts = {
+            "quantize": stall,
+            **dict(getattr(self.inner, "last_send_parts", None)
+                   or {"send": float(inner_stall or 0.0)})}
+        ob.metrics.counter("channel_wire_bytes_total",
+                           "Bytes put on the wire (incl. replication)").inc(
+            self._sent_bytes[event.step], channel="compressed")
+        return stall + inner_stall
 
     def poll(self) -> list[Delivery]:
         out = self.inner.poll()

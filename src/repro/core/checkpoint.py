@@ -34,6 +34,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.channel import (GradientChannel, InProcessChannel, StepEvent)
 from repro.core.shadow import ShadowCluster
 
@@ -65,13 +66,33 @@ class BaseCheckpointer:
     # device->host gradient copy for everyone else (copy-persist
     # baselines consume state_fn snapshots instead)
     consumes_grads = False
+    # default attribution stage for this checkpointer's whole stall
+    # (repro.obs.stalls.KNOWN_STAGES); gradient-streaming checkpointers
+    # book fine-grained stages via _parts instead
+    stage = "copy-persist"
 
     def __init__(self, freq: int = 1):
         self.freq = max(1, freq)
         self.n_checkpoints = 0
         self.skipped_captures = 0
-        self.stall_total = 0.0
+        # ordered stall ledger: stage -> booked seconds, in first-booked
+        # order. stall_total is DEFINED as its in-order sum, so the
+        # stall-attribution report (repro.obs.stalls) sums bit-exactly to
+        # the total by construction.
+        self.stall_stages: dict[str, float] = {}
+        self._parts: Optional[dict] = None
         self._latest: Optional[dict] = None
+
+    @property
+    def stall_total(self) -> float:
+        total = 0.0
+        for sec in self.stall_stages.values():
+            total += sec
+        return total
+
+    def _book(self, stage: str, seconds: float):
+        self.stall_stages[stage] = (self.stall_stages.get(stage, 0.0)
+                                    + seconds)
 
     @staticmethod
     def _coerce_event(event, legacy: dict) -> StepEvent:
@@ -97,14 +118,24 @@ class BaseCheckpointer:
         event = self._coerce_event(event, legacy)
         if event.step % self.freq != 0:
             return 0.0
+        ob = _obs.get()
         t0 = time.perf_counter()
-        captured = self._checkpoint(event)
+        self._parts = None
+        with ob.tracer.span("checkpoint.on_step", track="checkpoint",
+                            args={"step": event.step, "ck": self.name}):
+            captured = self._checkpoint(event)
         if captured is False:
             self.skipped_captures += 1
             return 0.0
         stall = (captured if isinstance(captured, float)
                  else time.perf_counter() - t0)
-        self.stall_total += stall
+        # book the stall by stage: _checkpoint may stage a fine-grained
+        # breakdown in self._parts (whose in-order sum equals the stall it
+        # returned bit-exactly); otherwise the whole stall goes to the
+        # checkpointer's default stage
+        parts = self._parts if self._parts is not None else {self.stage: stall}
+        for part_stage, sec in parts.items():
+            self._book(part_stage, sec)
         self.n_checkpoints += 1
         return stall
 
@@ -305,18 +336,23 @@ class CheckmateCheckpointer(BaseCheckpointer):
                 self.shadow.on_delivery(d)
 
     def _checkpoint(self, event: StepEvent):
+        ob = _obs.get()
         t0 = time.perf_counter()
         if self._desynced:
             if event.state_fn is None:
                 self.skipped_steps.append(event.step)
                 return False             # frozen until resync or recovery
-            self.channel.poll()          # superseded by the full-state copy
-            snap = event.state_fn()
-            self.shadow.bootstrap(snap["params"], snap["mu"], snap["nu"],
-                                  int(snap["step"]))
+            with ob.tracer.span("checkpoint.resync", track="checkpoint",
+                                args={"step": event.step}):
+                self.channel.poll()      # superseded by the full-state copy
+                snap = event.state_fn()
+                self.shadow.bootstrap(snap["params"], snap["mu"], snap["nu"],
+                                      int(snap["step"]))
             self._desynced = False
             self.resyncs.append(event.step)
-            return time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self._parts = {"resync": dt}
+            return dt
         assert event.grads is not None, "Checkmate consumes captured gradients"
         stall = float(self.channel.send(event) or 0.0)
         t1 = time.perf_counter()
@@ -325,10 +361,23 @@ class CheckmateCheckpointer(BaseCheckpointer):
             return False
         # the sender-visible channel cost plus the inline hand-off/apply
         # (sync-mode shadows run the optimizer on this thread)
-        return stall + (time.perf_counter() - t1)
+        inline = time.perf_counter() - t1
+        # stage the attribution: the channel decomposes its own sender
+        # stall (its parts sum in-order to `stall` bit-exactly), and the
+        # inline apply is booked on top — so parts sum == stall + inline
+        parts = dict(getattr(self.channel, "last_send_parts", None)
+                     or {"send": stall})
+        parts["inline-apply"] = inline
+        self._parts = parts
+        return stall + inline
 
     def restore(self) -> Optional[dict]:
-        out = self.shadow.consolidate()
+        ob = _obs.get()
+        t0 = time.perf_counter()
+        with ob.tracer.span("recovery.consolidate", track="recovery"):
+            out = self.shadow.consolidate()
+        # recovery genuinely stalls training while shadows drain
+        self._book("consolidate-wait", time.perf_counter() - t0)
         self._desynced = False           # training rewinds to this state
         return out
 

@@ -43,6 +43,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.core.buckets import (BucketLayout, alloc_flat, bucket_dtype,
                                 pack_bucket, pack_bucket_into, unpack_bucket)
 from repro.core.channel import Delivery, InProcessChannel, StepEvent
@@ -196,6 +197,10 @@ class ShadowNode:
         self.apply_total_s += dt
         if dt > self.apply_max_s:
             self.apply_max_s = dt
+        _obs.get().metrics.histogram(
+            "shadow_apply_seconds",
+            "Per-apply wall time by shadow node").observe(
+            dt, node=self.node_id)
 
     def apply(self, step: int, lr: float, flats: dict[int, np.ndarray],
               grad_scale: float = 1.0):
@@ -205,6 +210,13 @@ class ShadowNode:
         ``bucket_ids`` are read. Flat mode runs ONE fused optimizer pass
         per bucket directly on the flat state buffers.
         """
+        with _obs.get().tracer.span("shadow.apply",
+                                    track=f"shadow{self.node_id}",
+                                    args={"step": step,
+                                          "node": self.node_id}):
+            return self._apply(step, lr, flats, grad_scale)
+
+    def _apply(self, step, lr, flats, grad_scale):
         t0 = time.perf_counter()
         if self.flat:
             step_f = jnp.float32(step)
@@ -397,6 +409,10 @@ class ShadowCluster:
         `ConsolidationTimeout` (carrying the lagging node ids and the
         partial checkpoint) if any node is still behind at the deadline.
         """
+        with _obs.get().tracer.span("shadow.consolidate", track="shadow"):
+            return self._consolidate(timeout)
+
+    def _consolidate(self, timeout: Optional[float]) -> dict:
         if self.async_mode:
             deadline = time.monotonic() + (60.0 if timeout is None else
                                            timeout)

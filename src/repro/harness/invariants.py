@@ -130,9 +130,12 @@ class ZeroOverheadAccounting(Invariant):
         # verifies reproduction by exact message equality
         for s in rec.sends:
             if s.reported != 0.0:
+                stages = sorted(k for k, v in s.parts.items() if v != 0.0)
+                extra = f" [stages: {', '.join(stages)}]" if stages else ""
                 yield self._v(s.step, "packetized send reported nonzero "
                                       "stall (the simulator's event-loop "
-                                      "wall time must not be booked)")
+                                      "wall time must not be booked)"
+                                      + extra)
 
 
 @register
@@ -163,6 +166,61 @@ class StallAccounting(Invariant):
         if len(ck.skipped_steps) != ck.skipped_captures:
             yield self._v(None, f"skipped_steps={ck.skipped_steps} vs "
                                 f"skipped_captures={ck.skipped_captures}")
+
+
+@register
+class StallAttribution(Invariant):
+    """Every booked stall second is attributed to a known stage, and the
+    attribution is bit-exact: each send's per-stage parts sum in order to
+    exactly the stall the channel reported, a packetized channel's "send"
+    component is exactly 0.0, and the checkpointer's stage ledger sums in
+    order to exactly ``stall_total`` (repro.obs.stalls)."""
+    name = "stall-attribution"
+
+    KNOWN = frozenset(("send", "quantize", "inline-apply", "resync",
+                       "consolidate-wait", "copy-persist"))
+
+    def applies(self, trace) -> bool:
+        return trace.scenario.checkpointer == "checkmate"
+
+    def check_step(self, trace, rec):
+        # messages carry stage NAMES only, never wall-clock values —
+        # replay_bundle compares them bit-identically
+        for s in rec.sends:
+            if not s.parts:
+                yield self._v(s.step, "channel send set no stall "
+                                      "decomposition (last_send_parts)")
+                continue
+            total = 0.0
+            for sec in s.parts.values():
+                total += sec
+            if total != s.reported:
+                yield self._v(s.step, f"send parts "
+                                      f"{sorted(s.parts)} do not sum "
+                                      f"bit-exactly to the reported stall")
+            unknown = sorted(set(s.parts) - self.KNOWN)
+            if unknown:
+                yield self._v(s.step, f"unknown stall stages {unknown}")
+        if trace.scenario.channel.kind == "packetized":
+            for s in rec.sends:
+                if s.parts.get("send", 0.0) != 0.0:
+                    yield self._v(s.step, "packetized send booked a nonzero "
+                                          "'send' stage")
+
+    def check_end(self, trace):
+        ck = trace.checkpointer
+        stages = getattr(ck, "stall_stages", None)
+        if stages is None:
+            return
+        total = 0.0
+        for sec in stages.values():
+            total += sec
+        if total != ck.stall_total:
+            yield self._v(None, f"stage ledger {sorted(stages)} does not "
+                                f"sum bit-exactly to stall_total")
+        unknown = sorted(set(stages) - self.KNOWN)
+        if unknown:
+            yield self._v(None, f"unknown ledger stages {unknown}")
 
 
 @register

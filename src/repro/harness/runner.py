@@ -37,10 +37,14 @@ WEDGE_RETRY_S = 30.0        # post-release retry budget
 
 @dataclass
 class SendRecord:
-    """One ``channel.send``: the stall it reported vs the wall it took."""
+    """One ``channel.send``: the stall it reported vs the wall it took,
+    plus the channel's per-stage decomposition of the reported value
+    (``last_send_parts`` — its in-order sum must equal ``reported``
+    bit-exactly, checked by the stall-attribution invariant)."""
     step: int
     reported: float
     wall_s: float
+    parts: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -68,9 +72,16 @@ class InstrumentedChannel:
     def send(self, event) -> float:
         t0 = time.perf_counter()
         reported = self.inner.send(event)
-        self._sends.append(SendRecord(event.step, float(reported or 0.0),
-                                      time.perf_counter() - t0))
+        self._sends.append(SendRecord(
+            event.step, float(reported or 0.0), time.perf_counter() - t0,
+            parts=dict(getattr(self.inner, "last_send_parts", None) or {})))
         return reported
+
+    @property
+    def last_send_parts(self) -> dict:
+        """Forward the inner channel's stall decomposition so the
+        checkpointer's attribution sees through the wrapper."""
+        return getattr(self.inner, "last_send_parts", {})
 
     def poll(self):
         out = self.inner.poll()
@@ -160,6 +171,10 @@ class ScenarioResult:
     violations: tuple[inv.Violation, ...]
     trace: Trace
     bundle_path: Optional[Path] = None
+    # Chrome trace_event JSON of the run's trailing trace window (the
+    # runner's ring tracer); NOT part of bundle() — bundles must compare
+    # bit-identically across replays, and trace timings are wall clock
+    trace_export: Optional[dict] = None
 
     @property
     def passed(self) -> bool:
@@ -190,11 +205,24 @@ class ScenarioResult:
 
 # -- bundles ------------------------------------------------------------------
 
+TRACE_TAIL_EVENTS = 64          # trailing trace window embedded in bundles
+
+
 def write_bundle(result: ScenarioResult, bundle_dir) -> Path:
+    """Write the repro bundle to disk. The on-disk JSON adds the trailing
+    trace window (``trace_tail``) for triage — ``bundle()`` itself stays
+    wall-clock-free so replays compare bit-identically — and the full
+    trace export lands beside it as ``<name>.trace.json``."""
     bundle_dir = Path(bundle_dir)
     bundle_dir.mkdir(parents=True, exist_ok=True)
     path = bundle_dir / f"{result.scenario.name}.json"
-    path.write_text(json.dumps(result.bundle(), indent=2, sort_keys=True))
+    d = result.bundle()
+    if result.trace_export is not None:
+        events = result.trace_export.get("traceEvents", [])
+        d["trace_tail"] = events[-TRACE_TAIL_EVENTS:]
+        (bundle_dir / f"{result.scenario.name}.trace.json").write_text(
+            json.dumps(result.trace_export, indent=1, sort_keys=True))
+    path.write_text(json.dumps(d, indent=2, sort_keys=True))
     return path
 
 
@@ -439,18 +467,41 @@ def run_scenario(scenario: Scenario, *, bundle_dir=None) -> ScenarioResult:
 
     With ``bundle_dir``, any violation writes a minimal repro bundle
     (seed + scenario JSON + failing step) that `replay_bundle` re-runs
-    bit-identically.
+    bit-identically; the bundle JSON embeds the trailing trace window and
+    the full Chrome trace lands beside it.
+
+    Unless an observability session is already active (``repro.obs
+    .enabled_session`` — e.g. the ``repro.obs`` CLI), the runner installs
+    its own ring-buffer tracer (metrics stay disabled) so every result
+    carries the trailing trace window in ``trace_export``.
     """
+    from repro import obs as _obs
+    from repro.obs import Observability
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
+
     scenario.validate()
-    trace = Trace(scenario)
-    engine = _Engine(trace)
-    if scenario.level == "channel":
-        _run_channel(scenario, trace, engine)
-    else:
-        _run_full(scenario, trace, engine)
-    engine.end()
-    result = ScenarioResult(scenario=scenario,
-                            violations=tuple(trace.violations), trace=trace)
+    own_session = not _obs.get().tracer.enabled
+    prev = None
+    if own_session:
+        prev = _obs.install(Observability(
+            MetricsRegistry(enabled=False),
+            Tracer(maxlen=512)))
+    try:
+        trace = Trace(scenario)
+        engine = _Engine(trace)
+        if scenario.level == "channel":
+            _run_channel(scenario, trace, engine)
+        else:
+            _run_full(scenario, trace, engine)
+        engine.end()
+        result = ScenarioResult(scenario=scenario,
+                                violations=tuple(trace.violations),
+                                trace=trace)
+        result.trace_export = _obs.get().tracer.export()
+    finally:
+        if own_session:
+            _obs.install(prev)
     if bundle_dir is not None and result.violations:
         result.bundle_path = write_bundle(result, bundle_dir)
     return result

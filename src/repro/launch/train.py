@@ -44,6 +44,11 @@ def main():
                     help="int8 gradient compression with error feedback")
     ap.add_argument("--mesh", default="smoke", choices=["smoke", "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(enables the tracing session)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the end-of-run metrics snapshot JSON")
     args = ap.parse_args()
 
     import jax
@@ -64,6 +69,8 @@ def main():
     from repro.optim.schedules import cosine_schedule
     from repro.train.loop import train
     from repro.train.step import make_train_state
+    from repro import obs
+    from repro.obs.publish import collect_run, render_digest
 
     cfg = C.get(args.arch)
     if args.reduced:
@@ -103,12 +110,28 @@ def main():
         }[args.checkpointer]
 
     plan = FailurePlan(tuple(int(x) for x in args.fail_at.split(",") if x))
+    # --trace-out/--metrics-out turn the run's instrumentation on; the
+    # digest below works either way (a fresh registry publishes from the
+    # subsystems' native counters at end of run)
+    session = (obs.enabled_session() if args.trace_out or args.metrics_out
+               else None)
+    ob = session.__enter__() if session is not None else None
     t0 = time.time()
-    state, stats = train(cfg, rules, steps=args.steps, batch=args.batch,
-                         seq=args.seq, opt=opt, lr_fn=lr_fn,
-                         checkpointer=ck, failure_plan=plan,
-                         seed=args.seed, state=state0)
-    wall = time.time() - t0
+    try:
+        state, stats = train(cfg, rules, steps=args.steps, batch=args.batch,
+                             seq=args.seq, opt=opt, lr_fn=lr_fn,
+                             checkpointer=ck, failure_plan=plan,
+                             seed=args.seed, state=state0)
+        wall = time.time() - t0
+        reg = ob.metrics if ob is not None else obs.MetricsRegistry()
+        digest_snap = collect_run(reg, checkpointer=ck)
+        if args.trace_out:
+            ob.tracer.write(args.trace_out)
+        if args.metrics_out:
+            reg.write_json(args.metrics_out)
+    finally:
+        if session is not None:
+            session.__exit__(None, None, None)
 
     report = {
         "arch": cfg.name, "steps": stats.steps,
@@ -132,6 +155,9 @@ def main():
         }
         shadow.shutdown()
     print(json.dumps(report, indent=2))
+    # satellite: one-screen end-of-run digest sourced from the metrics
+    # registry (same numbers `python -m repro.obs summary` reports)
+    print(render_digest(digest_snap, ck=ck))
 
 
 if __name__ == "__main__":

@@ -57,6 +57,7 @@ class PfcQueue:
     resume_events: int = 0
     dropped: int = 0
     enqueued_bytes: int = 0
+    paused_offers: int = 0         # offers refused while paused (held bytes)
 
     @property
     def xoff(self) -> int:
@@ -71,6 +72,7 @@ class PfcQueue:
         A correct PFC sender never loses data: drops only happen on overflow,
         which pause prevents."""
         if self.paused:
+            self.paused_offers += 1
             return False
         if self.occupancy + nbytes > self.capacity_bytes:
             # would overflow: this cannot happen if thresholds are sane,

@@ -99,13 +99,19 @@ class FabricResult:
     pfc_resumes: int
     latency: dict
     events: int
+    # per-link PFC pause-duration account (was aggregate-only): total
+    # link-paused virtual seconds, plus {"src->dst": {pauses, resumes,
+    # pause_s}} for every link that ever paused
+    pfc_pause_s: float = 0.0
+    link_pfc: dict = field(default_factory=dict)
 
 
 class _Link:
     """Runtime state of one directed link: FIFO egress queue + serializer."""
     __slots__ = ("src", "dst", "rate_bps", "prop", "q", "qbytes", "busy",
                  "up", "pause_count", "sent_xoff", "cap", "xoff", "xon",
-                 "epoch", "drops", "pause_events", "resume_events", "key")
+                 "epoch", "drops", "pause_events", "resume_events",
+                 "paused_since", "pause_s", "key")
 
     def __init__(self, spec, bounded: bool, pfc: PfcConfig,
                  min_cap: int = 0):
@@ -133,6 +139,8 @@ class _Link:
         self.drops = 0
         self.pause_events = 0
         self.resume_events = 0
+        self.paused_since = 0.0         # sim time the open pause began
+        self.pause_s = 0.0              # closed-pause virtual time total
 
 
 class FabricSimulator:
@@ -338,6 +346,8 @@ class FabricSimulator:
         self._try_tx(lk)
 
     def _pause(self, lk: _Link):
+        if lk.pause_count == 0:          # pause interval opens
+            lk.paused_since = self.now
         lk.pause_count += 1
         lk.pause_events += 1
 
@@ -345,6 +355,8 @@ class FabricSimulator:
         if lk.pause_count > 0:
             lk.pause_count -= 1
             lk.resume_events += 1
+            if lk.pause_count == 0:      # pause interval closes
+                lk.pause_s += self.now - lk.paused_since
             self._try_tx(lk)
 
     def _try_tx(self, lk: _Link):
@@ -551,6 +563,16 @@ class FabricSimulator:
         n = topo.ranks_per_group
         lat = {cls: (c, (s / c) if c else 0.0, mx)
                for cls, (c, s, mx) in self._lat.items()}
+        link_pfc = {}
+        for lk in self.links.values():
+            if not lk.pause_events:
+                continue
+            # flush a still-open pause interval up to the end of the run
+            eff = lk.pause_s + (self.now - lk.paused_since
+                                if lk.pause_count else 0.0)
+            link_pfc[f"{lk.src}->{lk.dst}"] = {
+                "pauses": lk.pause_events, "resumes": lk.resume_events,
+                "pause_s": eff}
         return FabricResult(
             topology=topo.name, n_ranks=topo.n_ranks,
             n_dp_groups=topo.n_dp_groups, ranks_per_group=n,
@@ -573,7 +595,9 @@ class FabricSimulator:
             retransmits=self.retransmits, rerouted=self.rerouted,
             pfc_pauses=sum(lk.pause_events for lk in self.links.values()),
             pfc_resumes=sum(lk.resume_events for lk in self.links.values()),
-            latency=lat, events=self.events)
+            latency=lat, events=self.events,
+            pfc_pause_s=sum(st["pause_s"] for st in link_pfc.values()),
+            link_pfc=link_pfc)
 
 
 def simulate_fabric(n_dp_groups: int, ranks_per_group: int,

@@ -41,6 +41,12 @@ class SwitchCounters:
             mirrored_frames=self.mirrored_frames + other.mirrored_frames,
             dropped_acks=self.dropped_acks + other.dropped_acks)
 
+    def as_dict(self) -> dict:
+        """Plain-dict view for metrics publication / JSON snapshots."""
+        d = dataclasses.asdict(self)
+        d["tx_over_rx"] = self.tx_over_rx
+        return d
+
 
 class SwitchDataPlane:
     """Match-action pipeline of one physical switch.

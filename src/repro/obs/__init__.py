@@ -1,0 +1,77 @@
+"""repro.obs — unified tracing & metrics plane (docs/observability.md).
+
+One `Observability` holder pairs a `MetricsRegistry` with a `Tracer`; the
+module-level active instance (default: fully disabled) is what every
+instrumented hot path reads via `get()`:
+
+    from repro import obs
+    ob = obs.get()
+    with ob.tracer.span("channel.send", args={"step": step}):
+        ...
+    ob.metrics.counter("channel_sends_total").inc(1, channel=name)
+
+Both calls are near-zero-cost no-ops until a session is installed:
+
+    with obs.enabled_session() as ob:
+        run_scenario(GOLDEN["packetized-rail-clean"])
+        ob.tracer.write("trace.json")        # Chrome/Perfetto JSON
+        print(ob.metrics.to_prometheus())
+
+CLI: ``python -m repro.obs {trace,summary,diff}``.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry, diff_snapshots)
+from repro.obs.trace import ManualClock, Tracer            # noqa: F401
+
+
+@dataclass
+class Observability:
+    """One metrics registry + one tracer, enabled/disabled together."""
+    metrics: MetricsRegistry
+    tracer: Tracer
+
+    @property
+    def enabled(self) -> bool:
+        return self.metrics.enabled or self.tracer.enabled
+
+    @classmethod
+    def disabled(cls) -> "Observability":
+        return cls(MetricsRegistry(enabled=False), Tracer(enabled=False))
+
+    @classmethod
+    def session(cls, clock=None,
+                trace_maxlen: Optional[int] = None) -> "Observability":
+        return cls(MetricsRegistry(),
+                   Tracer(clock=clock, maxlen=trace_maxlen))
+
+
+_ACTIVE = Observability.disabled()
+
+
+def get() -> Observability:
+    """The active observability plane (disabled no-op by default)."""
+    return _ACTIVE
+
+
+def install(ob: Observability) -> Observability:
+    """Swap the active plane; returns the previous one (for restore)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, ob
+    return prev
+
+
+@contextmanager
+def enabled_session(clock=None, trace_maxlen: Optional[int] = None):
+    """Scoped fully-enabled plane; restores the previous one on exit."""
+    ob = Observability.session(clock=clock, trace_maxlen=trace_maxlen)
+    prev = install(ob)
+    try:
+        yield ob
+    finally:
+        install(prev)

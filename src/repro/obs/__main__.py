@@ -1,0 +1,183 @@
+"""``python -m repro.obs`` — trace / summary / diff for any run.
+
+Subcommands:
+
+* ``trace``   — run a harness scenario (golden name or sampled seed) or a
+  reduced training config under a fully-enabled observability session and
+  write the Chrome/Perfetto trace_event JSON (plus, optionally, the
+  metrics snapshot).
+* ``summary`` — same run selection, but print the one-screen metrics
+  digest and the stall-attribution report instead of a trace file.
+* ``diff``    — compare two metrics snapshot JSONs metric by metric.
+
+Examples::
+
+    PYTHONPATH=src python -m repro.obs trace --scenario packetized-rail-clean
+    PYTHONPATH=src python -m repro.obs trace --seed 7 --out seed7.trace.json
+    PYTHONPATH=src python -m repro.obs summary --train tinyllama-1.1b \
+        --steps 5 --channel packetized
+    PYTHONPATH=src python -m repro.obs diff before.json after.json
+
+``--manual-clock`` swaps the host wall clock for a deterministic logical
+clock, so a fixed scenario exports a byte-identical trace every run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro import obs
+from repro.obs.publish import collect_run, render_digest
+from repro.obs.stalls import format_stall_report
+
+
+# -- run selection -------------------------------------------------------------
+
+def _add_run_args(ap: argparse.ArgumentParser):
+    sel = ap.add_mutually_exclusive_group(required=True)
+    sel.add_argument("--scenario",
+                     help="golden scenario name (repro.harness.GOLDEN)")
+    sel.add_argument("--seed", type=int,
+                     help="sample a random scenario from one integer")
+    sel.add_argument("--train", metavar="ARCH",
+                     help="run a reduced training config (repro.configs)")
+    ap.add_argument("--level", default="channel",
+                    choices=["channel", "full"],
+                    help="stack depth for --seed sampling")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--channel", default="inprocess",
+                    choices=["inprocess", "packetized"],
+                    help="gradient transport for --train")
+    ap.add_argument("--shadow-nodes", type=int, default=2)
+    ap.add_argument("--manual-clock", action="store_true",
+                    help="deterministic logical host clock (golden traces)")
+
+
+def _run_scenario(args, ob):
+    from repro.harness import GOLDEN, run_scenario, sample_scenario
+
+    if args.scenario is not None:
+        if args.scenario not in GOLDEN:
+            sys.exit(f"unknown scenario {args.scenario!r}; golden names:\n  "
+                     + "\n  ".join(sorted(GOLDEN)))
+        sc = GOLDEN[args.scenario]
+    else:
+        sc = sample_scenario(args.seed, level=args.level)
+    result = run_scenario(sc)
+    ck = result.trace.checkpointer
+    collect_run(ob.metrics, checkpointer=ck, channel=result.trace.channel)
+    return sc.name, ck, result
+
+
+def _run_train(args, ob):
+    import jax
+
+    import repro.configs as C
+    from repro.core.buckets import layout_for_tree
+    from repro.core.channel import InProcessChannel, PacketizedChannel
+    from repro.core.checkpoint import CheckmateCheckpointer
+    from repro.core.shadow import ShadowCluster
+    from repro.dist.sharding import ShardingRules, make_smoke_mesh
+    from repro.optim import OptimizerConfig
+    from repro.train.loop import train
+    from repro.train.step import make_train_state
+
+    cfg = C.get(args.train).reduced()
+    rules = ShardingRules(make_smoke_mesh())
+    opt = OptimizerConfig(name="adamw", lr=1e-3)
+    s0 = make_train_state(jax.random.PRNGKey(0), cfg, rules)
+    shadow = ShadowCluster(layout_for_tree(s0.params), opt,
+                           n_nodes=args.shadow_nodes)
+    shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
+    if args.channel == "packetized":
+        channel = PacketizedChannel(n_shadow_nodes=args.shadow_nodes)
+    else:
+        channel = InProcessChannel()
+    ck = CheckmateCheckpointer(shadow, channel=channel)
+    train(cfg, rules, steps=args.steps, batch=args.batch, seq=args.seq,
+          opt=opt, lr_fn=lambda _: 1e-3, checkpointer=ck, seed=0, state=s0)
+    collect_run(ob.metrics, checkpointer=ck)
+    return f"train-{cfg.name}", ck, None
+
+
+def _run(args, ob):
+    if args.train is not None:
+        return _run_train(args, ob)
+    return _run_scenario(args, ob)
+
+
+# -- subcommands ---------------------------------------------------------------
+
+def cmd_trace(args) -> int:
+    clock = obs.ManualClock(0.0) if args.manual_clock else None
+    with obs.enabled_session(clock=clock) as ob:
+        name, ck, _ = _run(args, ob)
+        out = args.out or f"{name}.trace.json"
+        ob.tracer.write(out)
+        n = len(ob.tracer.events())
+        if args.metrics_out:
+            ob.metrics.write_json(args.metrics_out)
+    print(f"{name}: {n} trace events -> {out}")
+    if args.metrics_out:
+        print(f"{name}: metrics snapshot -> {args.metrics_out}")
+    return 0
+
+
+def cmd_summary(args) -> int:
+    clock = obs.ManualClock(0.0) if args.manual_clock else None
+    with obs.enabled_session(clock=clock) as ob:
+        name, ck, result = _run(args, ob)
+        snap = ob.metrics.snapshot()
+    print(f"== {name} ==")
+    if result is not None:
+        print(result.describe())
+    print(render_digest(snap))
+    if ck is not None:
+        print(format_stall_report(ck))
+    return 0
+
+
+def cmd_diff(args) -> int:
+    before = json.loads(open(args.before).read())
+    after = json.loads(open(args.after).read())
+    rows = obs.diff_snapshots(before, after)
+    if not rows:
+        print("no metric changed")
+        return 0
+    w = max(len(r["metric"]) for r in rows)
+    for r in rows:
+        labels = ",".join(f"{k}={v}" for k, v in sorted(r["labels"].items()))
+        print(f"{r['metric']:<{w}} {{{labels}}} "
+              f"{r['before']} -> {r['after']}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__.split("\n\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("trace", help="run + export Chrome trace JSON")
+    _add_run_args(t)
+    t.add_argument("--out", help="trace path (default <name>.trace.json)")
+    t.add_argument("--metrics-out", help="also write the metrics snapshot")
+    t.set_defaults(fn=cmd_trace)
+
+    s = sub.add_parser("summary", help="run + print the metrics digest")
+    _add_run_args(s)
+    s.set_defaults(fn=cmd_summary)
+
+    d = sub.add_parser("diff", help="diff two metrics snapshot JSONs")
+    d.add_argument("before")
+    d.add_argument("after")
+    d.set_defaults(fn=cmd_diff)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

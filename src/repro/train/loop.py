@@ -21,6 +21,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.configs.base import ModelConfig
 from repro.core.buckets import layout_for_tree
 from repro.core.channel import GradientChannel, StepEvent
@@ -117,6 +118,7 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
     ema_iter = None
     step = int(state.step)
 
+    ob = _obs.get()
     while step < steps:
         batch_np = stream.batch_at(step)
         dbatch = device_batch(batch_np, rules)
@@ -126,16 +128,23 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
                 # fail mid-iteration: device state for this step is lost
                 stats.failures += 1
                 raise TrainingFailure(f"injected failure at step {step + 1}")
-            state, metrics, grads = step_fn(state, dbatch)
-            jax.block_until_ready(metrics["loss"])
+            with ob.tracer.span("step.compute", args={"step": step + 1}):
+                state, metrics, grads = step_fn(state, dbatch)
+                jax.block_until_ready(metrics["loss"])
         except TrainingFailure:
-            restored = checkpointer.restore()
+            with ob.tracer.span("recovery.restore", track="recovery",
+                                args={"failed_step": step + 1}):
+                restored = checkpointer.restore()
             if restored is None:
                 raise
             state = state_from_checkpoint(restored, cfg, rules)
             step = int(restored["step"])
             stats.recoveries += 1
             stats.recovered_at.append(step)
+            ob.tracer.instant("recovery.resume", track="recovery",
+                              args={"resumed_step": step})
+            ob.metrics.counter("train_recoveries_total",
+                               "Recoveries from injected failures").inc(1)
             continue
         iter_time = time.perf_counter() - t0
         step += 1
@@ -162,12 +171,14 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
             # the capture's device->host DMA; the channel packs these host
             # leaves straight into the wire buffer (one further pass).
             # Copy-persist baselines never read grads, so they don't pay it.
-            host_grads = {k: np.asarray(v) for k, v in grads.items()}
+            with ob.tracer.span("capture.d2h", args={"step": step}):
+                host_grads = {k: np.asarray(v) for k, v in grads.items()}
         stall = checkpointer.on_step(StepEvent(
             step=step, grads=host_grads, lr=lr, grad_scale=scale,
             iter_time=iter_time,
             state_fn=lambda: checkpoint_from_state(state)))
         stats.stall_times.append(stall)
+        ob.metrics.counter("train_steps_total", "Completed iterations").inc(1)
         if step_hook is not None:
             step_hook(step, state, stats)
 

@@ -9,6 +9,7 @@
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Callable, Optional
 
@@ -16,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from repro import obs as _obs
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist.sharding import ShardingRules
 from repro.models import registry
@@ -106,6 +108,18 @@ def build_train_step(cfg: ModelConfig, mesh, rules: ShardingRules,
             return new_state, metrics, grads
         return new_state, metrics
 
+    ob = _obs.get()
+    if ob.enabled:
+        # the capture payload: f32 reduced gradients, one per param leaf
+        nbytes = sum(4 * math.prod(a.shape)
+                     for a in jax.tree.leaves(aspecs))
+        ob.metrics.gauge("capture_bytes",
+                         "Per-step reduced-gradient capture size").set(
+            nbytes, arch=cfg.name)
+        ob.tracer.instant("train_step.build",
+                          args={"arch": cfg.name,
+                                "microbatches": cfg.microbatches,
+                                "return_grads": return_grads})
     return train_step
 
 

@@ -84,8 +84,15 @@ def test_violation_emits_minimal_bundle_that_replays(tmp_path):
     assert not result.passed
     assert result.failing_step == 1
     d = json.loads(result.bundle_path.read_text())
-    # minimal repro: seed + scenario JSON + failing step (+ what failed)
-    assert set(d) == {"seed", "scenario", "failing_step", "violations"}
+    # minimal repro: seed + scenario JSON + failing step (+ what failed),
+    # plus the trailing trace window for triage (on-disk only — the
+    # in-memory bundle() stays wall-clock-free for bit-identical replays)
+    assert set(d) == {"seed", "scenario", "failing_step", "violations",
+                      "trace_tail"}
+    assert d["trace_tail"] and all("ph" in e for e in d["trace_tail"])
+    assert result.bundle_path.with_suffix(".trace.json").exists() or \
+        (result.bundle_path.parent
+         / f"{result.scenario.name}.trace.json").exists()
     assert d["failing_step"] == 1
     assert Scenario.from_dict(d["scenario"]) == result.scenario
     _, identical = replay_bundle(result.bundle_path)

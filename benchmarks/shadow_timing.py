@@ -7,6 +7,15 @@ path at the gpt2_1_5b layout and writes ``BENCH_shadow.json`` with
 mean/max apply seconds for both. Exits nonzero if the flat path is not
 faster — the CI smoke gate for the shadow hot loop.
 
+``--json`` additionally plans and times the bucket-sharded frontier
+fleet: `repro.core.costmodel.shadow_plan_for_config` sizes arctic_480b
+(metadata only — nothing model-sized allocates) and must come back with a
+genuinely sharded fleet (>= 8 nodes) whose per-node resident state (the
+peak-RSS proxy) fits the budget; a dimension-scaled timing run then
+shards the gpt2 leaf tree across that many simulated shadow nodes and
+gates on the sharded critical path (slowest node's per-step apply) beating
+the single-node apply — the whole point of sharding the shadow plane.
+
 The json benchmark uses the paper's *per-layer* leaf structure for GPT-2
 1.5B (48 layers x 12 tensors + embeddings = 580 leaves, the shape a DDP
 bucketer actually sees on the capture side), dimension-scaled to fit a CPU
@@ -113,6 +122,89 @@ def _time_paths(layout, params, grad_steps, opt: OptimizerConfig):
     return out
 
 
+def _sharded_entry(params, grad_steps,
+                   opt: OptimizerConfig) -> tuple[dict, list[str]]:
+    """Plan the arctic_480b shadow fleet (metadata only) and time a
+    dimension-scaled stand-in sharded across that many nodes.
+
+    The sharded figure of merit is the CRITICAL PATH: nodes apply their
+    partitions concurrently in production, so a step costs the slowest
+    node's apply, not the sum. The timing layout is rebucketed at a 1 MB
+    cap so every node in the fleet actually owns shards (the stand-in is
+    ~12.5x dimension-scaled; arctic's real layout has 13k+ buckets), and
+    the single-node baseline runs on the SAME layout so per-bucket
+    overheads cancel. Returns the report entry plus gate failures (empty
+    == all gates pass)."""
+    import repro.configs as C
+    from repro.core.costmodel import ShadowBudget, shadow_plan_for_config
+
+    budget = ShadowBudget()
+    plan = shadow_plan_for_config(C.get("arctic-480b"), budget=budget)
+
+    layout = layout_for_tree(params, cap_bytes=1 << 20)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    clusters = {
+        "single": ShadowCluster(layout, opt, n_nodes=1,
+                                apply_times_maxlen=len(grad_steps) + 1),
+        "sharded": ShadowCluster(layout, opt, n_nodes=plan.n_nodes,
+                                 apply_times_maxlen=len(grad_steps) + 1),
+    }
+    chan = InProcessChannel()
+    chan.open(layout)
+    for c in clusters.values():
+        c.bootstrap(params, zeros, zeros, 0)
+    for step, grads in enumerate(grad_steps, start=1):
+        chan.send(StepEvent(step=step, grads=grads, lr=1e-3))
+        for d in chan.poll():
+            for c in clusters.values():
+                c.on_delivery(d)
+    chan.close()
+    # slowest owner per step == the distributed fleet's step time; the
+    # first (compile-heavy) apply is excluded, empty owners apply in ~0
+    per_node = [list(n.apply_times)[1:] for n in clusters["sharded"].nodes
+                if n.apply_times]
+    n_steps = min(len(t) for t in per_node)
+    critical = [max(t[s] for t in per_node) for s in range(n_steps)]
+    single_mean_s = float(np.mean(
+        list(clusters["single"].nodes[0].apply_times)[1:]))
+
+    entry = {
+        "arch": "arctic-480b",
+        "plan": {"n_nodes": plan.n_nodes, "ram_bound": plan.ram_bound,
+                 "nic_bound": plan.nic_bound, "n_buckets": plan.n_buckets,
+                 "grad_bytes": plan.grad_bytes,
+                 "state_bytes": plan.state_bytes,
+                 "bytes_per_node_max": plan.bytes_per_node_max,
+                 "gbps_per_node_max": plan.gbps_per_node_max,
+                 "usable_ram_per_node": budget.usable_ram},
+        "timing": {"workload": "gpt2-1.5b leaf tree (dim-scaled, "
+                               "1 MB buckets)",
+                   "n_nodes": plan.n_nodes,
+                   "n_timing_buckets": len(layout.buckets),
+                   "owners_with_shards": len(per_node),
+                   "critical_path_mean_s": float(np.mean(critical)),
+                   "critical_path_max_s": float(np.max(critical)),
+                   "single_node_mean_s": single_mean_s,
+                   "speedup_vs_single": single_mean_s
+                   / float(np.mean(critical)),
+                   "steps": n_steps},
+    }
+    fails = []
+    if plan.n_nodes < 8:
+        fails.append(f"arctic-480b plan is {plan.n_nodes} nodes; the "
+                     "frontier fleet must be genuinely sharded (>= 8)")
+    if plan.bytes_per_node_max > budget.usable_ram:
+        fails.append("per-node peak RSS proxy "
+                     f"({plan.bytes_per_node_max / 1e9:.1f} GB) exceeds "
+                     f"usable RAM ({budget.usable_ram / 1e9:.1f} GB)")
+    if float(np.mean(critical)) >= single_mean_s:
+        fails.append("sharded critical path "
+                     f"({np.mean(critical) * 1e3:.2f} ms) is not faster "
+                     f"than the single-node apply "
+                     f"({single_mean_s * 1e3:.2f} ms)")
+    return entry, fails
+
+
 def run_json(out_path: str = "BENCH_shadow.json", steps: int = 8) -> int:
     opt = OptimizerConfig(lr=1e-3)
     params = gpt2_1_5b_leaf_tree()
@@ -124,6 +216,7 @@ def run_json(out_path: str = "BENCH_shadow.json", steps: int = 8) -> int:
     timed = _time_paths(layout, params, grad_steps, opt)
     flat, legacy = timed["flat"], timed["legacy"]
     speedup = legacy["mean_apply_s"] / flat["mean_apply_s"]
+    sharded, shard_fails = _sharded_entry(params, grad_steps, opt)
     report = {
         "arch": "gpt2-1.5b (per-layer leaf structure, dim-scaled)",
         "n_buckets": len(layout.buckets),
@@ -132,15 +225,18 @@ def run_json(out_path: str = "BENCH_shadow.json", steps: int = 8) -> int:
         "flat": flat,
         "legacy": legacy,
         "speedup": speedup,
+        "sharded": sharded,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))
+    fails = list(shard_fails)
     if flat["mean_apply_s"] >= legacy["mean_apply_s"]:
-        print("FAIL: flat apply is not faster than the legacy per-leaf path",
-              file=sys.stderr)
-        return 1
-    return 0
+        fails.append("flat apply is not faster than the legacy per-leaf "
+                     "path")
+    for msg in fails:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if fails else 0
 
 
 if __name__ == "__main__":

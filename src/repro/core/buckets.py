@@ -151,6 +151,26 @@ def alloc_flat(size: int, dtype) -> np.ndarray:
     return raw[ofs:ofs + size * dtype.itemsize].view(dtype)
 
 
+def wire_spans(layout: BucketLayout, dtypes: tuple | None = None
+               ) -> tuple[list[tuple[int, int, int]], int]:
+    """Byte spans of each bucket inside the packed wire buffer.
+
+    Returns ``([(bucket_id, start, nbytes), ...], padded_total)`` where each
+    bucket starts on an ``XLA_ALIGN`` boundary (the geometry the packetized
+    channel puts on the wire). ``dtypes`` overrides the per-bucket dtype
+    (the compressed channel narrows buckets without rebuilding the layout).
+    """
+    if dtypes is None:
+        dtypes = tuple(bucket_dtype(b) for b in layout.buckets)
+    spans, cum = [], 0
+    for b, dt in zip(layout.buckets, dtypes):
+        nbytes = b.size * np.dtype(dt).itemsize
+        spans.append((b.bucket_id, cum, nbytes))
+        cum += nbytes
+        cum = -(-cum // XLA_ALIGN) * XLA_ALIGN
+    return spans, cum
+
+
 def bucket_dtype(bucket: Bucket) -> np.dtype:
     """The dtype of the bucket's contiguous wire buffer.
 

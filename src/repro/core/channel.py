@@ -41,6 +41,7 @@ orthogonal channel options, not bespoke checkpointer code paths.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -100,16 +101,28 @@ class Delivery:
     ``complete=False`` is a *gated* delivery: the transport could not
     reassemble the full capture (lost mirror frames, dead shadow NIC);
     ``flats``/``grads`` are None and the shadow must not apply it.
+
+    Bucket-sharded transports (``PacketizedChannel(sharded=True)``)
+    additionally report *per-owner* verdicts: ``node_complete`` maps each
+    shadow node id to whether every bucket it owns was fully reassembled,
+    and ``missing_buckets`` maps node id -> tuple of its bucket ids that
+    were not. On a partial capture (some owners dead, survivors whole)
+    ``complete`` is False but ``flats`` carries the surviving owners'
+    buckets, so the shadow can keep the live shard of the cluster current
+    (``ShadowCluster.on_delivery(d, nodes=...)``).
     """
 
     __slots__ = ("step", "lr", "grad_scale", "complete", "missing_captures",
-                 "wire_bytes", "fabric", "flats", "layout", "_grads")
+                 "wire_bytes", "fabric", "flats", "layout", "node_complete",
+                 "missing_buckets", "_grads")
 
     def __init__(self, step: int, lr: float, grad_scale: float,
                  grads: Optional[dict] = None, complete: bool = True,
                  missing_captures: int = 0, wire_bytes: int = 0,
                  fabric: object = None, flats: Optional[dict] = None,
-                 layout: Optional[BucketLayout] = None):
+                 layout: Optional[BucketLayout] = None,
+                 node_complete: Optional[dict] = None,
+                 missing_buckets: Optional[dict] = None):
         self.step = step
         self.lr = lr
         self.grad_scale = grad_scale
@@ -119,6 +132,8 @@ class Delivery:
         self.fabric = fabric           # FabricResult for packetized transports
         self.flats = flats
         self.layout = layout
+        self.node_complete = node_complete      # sharded: node -> bool
+        self.missing_buckets = missing_buckets  # sharded: node -> bucket ids
         self._grads = grads
 
     @property
@@ -309,6 +324,16 @@ class PacketizedChannel:
             post-recovery rerun). ``failures`` is a `FailureSpec` sequence,
             or the string ``"capture"`` — cut every shadow NIC at t=0, so
             the ring completes but that step's capture is lost.
+        sharded: bucket-sharded shadow plane — each shadow node owns the
+            byte-balanced bucket subset `repro.core.multicast
+            .assign_buckets` gives it (the same deterministic map a
+            default `ShadowCluster` uses), the fabric routes every
+            bucket's frames only to its owner (tagged frames split at
+            ownership cuts), and deliveries carry per-owner
+            ``node_complete`` / ``missing_buckets`` verdicts plus partial
+            flats for the surviving owners.
+        shadow_rails: shadow-rail leaf count (`repro.net.planner`); >1
+            spreads the sharded owners' incast over independent leaves.
     """
     name = "packetized"
 
@@ -319,7 +344,8 @@ class PacketizedChannel:
                  ranks_per_leaf: int = 32, n_spines: int = 2,
                  shadow_nics: int = 2, pfc=None,
                  frame_quantum: Optional[int] = None,
-                 failures_at: Optional[dict] = None):
+                 failures_at: Optional[dict] = None,
+                 sharded: bool = False, shadow_rails: int = 1):
         self.topology = _canon_topology(topology)
         self.n_dp_groups = n_dp_groups
         self.ranks_per_group = ranks_per_group
@@ -333,6 +359,13 @@ class PacketizedChannel:
         self.pfc = pfc
         self.frame_quantum = frame_quantum
         self.failures_at = dict(failures_at or {})
+        self.sharded = sharded
+        self.shadow_rails = shadow_rails
+        self.dead_shadow_nodes: set[int] = set()
+        self._owners: Optional[dict] = None   # bucket_id -> owner node
+        self._route_starts: list[int] = []    # owner step fn over total buf
+        self._route_owners: list[int] = []
+        self._bucket_spans: list[tuple] = []  # (bid, start, nbytes, owner)
         self._layout: Optional[BucketLayout] = None
         self._topo = None
         self._groups: Optional[list[MulticastGroup]] = None
@@ -350,11 +383,14 @@ class PacketizedChannel:
     def open(self, layout, multicast_groups=None):
         from repro.net.planner import build_topology
         self._layout = layout
+        if self.sharded:
+            from repro.core.multicast import assign_buckets
+            self._owners = assign_buckets(layout, self.n_shadow_nodes)
         self._topo = build_topology(
             self.n_dp_groups, self.ranks_per_group, self.n_shadow_nodes,
             topology=self.topology, ranks_per_leaf=self.ranks_per_leaf,
             link_gbps=self.link_gbps, shadow_nics=self.shadow_nics,
-            n_spines=self.n_spines)
+            n_spines=self.n_spines, shadow_rails=self.shadow_rails)
         self._groups = (multicast_groups if multicast_groups is not None
                         else _make_groups(self.n_dp_groups,
                                           self.ranks_per_group,
@@ -394,18 +430,103 @@ class PacketizedChannel:
         self._src_views = [
             np.frombuffer(self._src_buf, dtype=dt, count=size, offset=ofs)
             for dt, size, _, ofs in self._metas]
+        if self.sharded and self._owners is not None:
+            self._shard_geometry()
+
+    def _shard_geometry(self):
+        """Derive the owner step-function and per-bucket byte spans over
+        the total wire buffer (offsets move when wire dtypes change, so
+        this re-runs with ``_set_wire_geometry``)."""
+        starts: list[int] = []
+        owners: list[int] = []
+        spans: list[tuple] = []
+        for b, (_dt, _size, nbytes, ofs) in zip(self._layout.buckets,
+                                                self._metas):
+            o = self._owners[b.bucket_id]
+            spans.append((b.bucket_id, ofs, nbytes, o))
+            if not owners or o != owners[-1]:
+                starts.append(ofs)
+                owners.append(o)
+        # leading byte 0 and the trailing padding keep their neighbours'
+        # owner (padding has no data; its routing just needs to be total)
+        starts[0] = 0
+        self._route_starts = starts
+        self._route_owners = owners
+        self._bucket_spans = spans
+
+    def _owner_at(self, off: int) -> int:
+        """Shadow node owning total-buffer byte ``off`` (simulator's
+        ``shadow_route``)."""
+        return self._route_owners[
+            bisect.bisect_right(self._route_starts, off) - 1]
+
+    def _node_accounting(self, node_cov: dict, ring_done: bool):
+        """Per-owner capture verdicts from the per-node coverage maps.
+
+        ``node_cov``: ``(node_id, replica) -> {total_off: max bytes}`` of
+        mirror payloads that actually arrived. Clips every covered span to
+        the bucket data spans (wire padding doesn't count), then calls a
+        bucket complete when every replica covered all of its bytes.
+        """
+        starts = [s for _, s, _, _ in self._bucket_spans]
+        got: dict[tuple, int] = {}             # (bucket_id, replica) -> B
+        for (_nid, rep), seen in node_cov.items():
+            for off, ln in seen.items():
+                while ln > 0:
+                    i = bisect.bisect_right(starts, off) - 1
+                    if i < 0:
+                        break
+                    bid, s, nb, _o = self._bucket_spans[i]
+                    end = s + nb
+                    if off >= end:             # padding gap: skip ahead
+                        if i + 1 >= len(self._bucket_spans):
+                            break
+                        skip = min(ln, self._bucket_spans[i + 1][1] - off)
+                        off += skip
+                        ln -= skip
+                        continue
+                    take = min(ln, end - off)
+                    key = (bid, rep)
+                    got[key] = got.get(key, 0) + take
+                    off += take
+                    ln -= take
+        rf = self.replication_factor
+        missing: dict[int, list] = {n: [] for n in range(self.n_shadow_nodes)}
+        for bid, _s, nb, owner in self._bucket_spans:
+            if not all(got.get((bid, rep), 0) >= nb for rep in range(rf)):
+                missing[owner].append(bid)
+        node_complete = {n: ring_done and not missing[n]
+                         for n in range(self.n_shadow_nodes)}
+        return node_complete, {n: tuple(m) for n, m in missing.items()}
+
+    def kill_shadow_node(self, node_id: int):
+        """Persistently cut shadow node ``node_id``'s access NIC: every
+        subsequent send loses the frames routed to it, so its buckets stay
+        missing until ``revive_all`` (hardware replaced + resync)."""
+        if not 0 <= node_id < self.n_shadow_nodes:
+            raise ValueError(f"shadow node {node_id} out of range "
+                             f"[0, {self.n_shadow_nodes})")
+        self.dead_shadow_nodes.add(node_id)
+
+    def revive_all(self):
+        """Forget all shadow-node deaths (replacement hardware racked)."""
+        self.dead_shadow_nodes.clear()
 
     def _failures_for(self, step: int):
         from repro.net.simulator import FailureSpec
+        # dead shadow nodes stay dead: each send re-cuts their NICs at t=0
+        # (every send builds a fresh simulator over the static topology)
+        dead = tuple(FailureSpec(0.0, "shadow_nic", n)
+                     for n in sorted(self.dead_shadow_nodes))
         spec = self.failures_at.pop(step, None)      # each failure fires once
         if spec is None:
-            return ()
+            return dead
         if spec == "capture":
-            return tuple(FailureSpec(0.0, "shadow_nic", h)
-                         for h in self._topo.shadow_hosts)
+            return dead + tuple(FailureSpec(0.0, "shadow_nic", h)
+                                for h in self._topo.shadow_hosts)
         if isinstance(spec, FailureSpec):
-            return (spec,)
-        return tuple(spec)
+            return dead + (spec,)
+        return dead + tuple(spec)
 
     def send(self, event: StepEvent) -> float:
         from repro.net.pfc import PfcConfig
@@ -451,15 +572,22 @@ class PacketizedChannel:
             n_channels=self.n_channels,
             pfc=self.pfc if self.pfc is not None else PfcConfig(),
             failures=self._failures_for(event.step),
-            frame_quantum=self.frame_quantum)
+            frame_quantum=self.frame_quantum,
+            shadow_route=self._owner_at if self.sharded else None,
+            shadow_cuts=self._route_starts[1:] if self.sharded else ())
 
         def frame_tx(f):                     # injection: slice real bytes in
             off = f.dp_group * per + sim.wire_offset(f)
             f.payload = src[off:off + f.payload_len]
 
+        node_cov: dict = {}   # sharded: (node, replica) -> {total_off: B}
+
         def shadow_rx(node_id, f):           # extraction: reassemble capture
             off = f.dp_group * per + sim.wire_offset(f)
             rx[off:off + f.payload_len] = f.payload
+            if self.sharded:
+                seen = node_cov.setdefault((node_id, f.replica), {})
+                seen[off] = max(seen.get(off, 0), f.payload_len)
 
         sim.frame_tx_hook = frame_tx
         sim.shadow_rx_hook = shadow_rx
@@ -494,6 +622,11 @@ class PacketizedChannel:
         # once per run by publish_channel (avoids double counting)
         self.totals.absorb(result, total * self.replication_factor)
 
+        node_complete = missing_buckets = None
+        if self.sharded:
+            node_complete, missing_buckets = self._node_accounting(
+                node_cov, result.ring_completed)
+
         flats = None
         if result.reassembled_ok:
             # the delivery's flats ARE the rx buffer: zero-copy per-bucket
@@ -501,12 +634,19 @@ class PacketizedChannel:
             # view over the same bytes
             flats = {b.bucket_id: rx_np[ofs:ofs + nbytes].view(dt)
                      for b, (dt, _, nbytes, ofs) in zip(buckets, self._metas)}
+        elif node_complete is not None and any(node_complete.values()):
+            # partial capture: the surviving owners' buckets are whole —
+            # ship them so the live shard of the shadow can stay current
+            flats = {b.bucket_id: rx_np[ofs:ofs + nbytes].view(dt)
+                     for b, (dt, _, nbytes, ofs) in zip(buckets, self._metas)
+                     if node_complete[self._owners[b.bucket_id]]}
         self._pending.append(Delivery(
             step=event.step, lr=event.lr, grad_scale=event.grad_scale,
             flats=flats, layout=self._layout,
             complete=result.reassembled_ok,
             missing_captures=result.missing_captures,
-            wire_bytes=total * self.replication_factor, fabric=result))
+            wire_bytes=total * self.replication_factor, fabric=result,
+            node_complete=node_complete, missing_buckets=missing_buckets))
         send_span.__exit__(None, None, None)
         # Zero sender-visible stall (§4 zero-overhead claim): the gradient
         # frames ride the ring AllGather training performs anyway, and
@@ -597,6 +737,15 @@ class CompressedChannel:
         for d in out:
             d.wire_bytes = self._sent_bytes.pop(d.step, d.wire_bytes)
         return out
+
+    def kill_shadow_node(self, node_id: int):
+        """Forward a shadow-node death to the inner (sharded) transport."""
+        self.inner.kill_shadow_node(node_id)
+
+    def revive_all(self):
+        fn = getattr(self.inner, "revive_all", None)
+        if fn is not None:
+            fn()
 
     def close(self):
         self._sent_bytes.clear()

@@ -310,6 +310,30 @@ class CheckmateCheckpointer(BaseCheckpointer):
       like a sync checkpoint) and the stream resumes from it;
     * ``restore()`` — recovery rewinds training to exactly the shadow's
       state, so the resumed stream is contiguous again by construction.
+
+    Bucket-sharded transports (``PacketizedChannel(sharded=True)``) gate
+    *per owner node* instead: a delivery's ``node_complete`` verdicts mark
+    which owners captured their buckets, and the two failure classes are
+    distinguished by what the control plane knows:
+
+    * a DEAD owner (``shadow.dead_nodes`` — the cluster was told the node
+      died) loses exactly its shard. The surviving owners keep replaying
+      the stream (``ShadowCluster.on_delivery(d, nodes=live)``) so the
+      rest of the state stays current, and consolidation reports precisely
+      the dead buckets as missing (`ShadowNodeLoss`). Such partial applies
+      are NOT checkpoints — the step is booked as a skipped capture with
+      zero stall and recorded in both ``skipped_steps`` and
+      ``partial_steps`` — because the cluster as a whole cannot serve it.
+    * an ALIVE owner that missed capture spans desynchronizes the cluster
+      as a whole, exactly like the unsharded gate: letting the other
+      owners advance would tear the consolidated tree across steps (that
+      owner still serves its now-stale shard), so everyone freezes at the
+      last fully-captured step.
+
+    Either way the next ``state_fn`` resync makes the cluster whole: the
+    shadow is re-bootstrapped (reviving dead owners — replacement hardware
+    seeded by the full-state copy) and ``channel.revive_all()`` re-arms
+    the transport.
     """
     name = "checkmate"
     consumes_grads = True
@@ -322,43 +346,76 @@ class CheckmateCheckpointer(BaseCheckpointer):
                                          else InProcessChannel())
         self.channel.open(shadow.layout)
         self.skipped_steps: list[int] = []
+        self.partial_steps: list[int] = []   # sharded: survivors-only applies
         self.resyncs: list[int] = []
         self._desynced = False
+        self._dead_desynced = False      # dead shards seen: arm a resync
 
     def _apply_deliveries(self):
         for d in self.channel.poll():
-            if not d.complete:
-                self._desynced = True
+            nc = getattr(d, "node_complete", None)
+            if nc is None:               # unsharded transport: global gate
+                if not d.complete:
+                    self._desynced = True
+                    self.skipped_steps.append(d.step)
+                elif self._desynced:     # contiguity: refuse post-gap applies
+                    self.skipped_steps.append(d.step)
+                else:
+                    self.shadow.on_delivery(d)
+                continue
+            # sharded transport: per-owner verdicts (see class docstring).
+            # Holes confined to DEAD owners cost exactly those shards —
+            # the survivors keep replaying. A hole on an ALIVE owner
+            # desynchronizes the whole cluster: advancing the rest would
+            # tear the consolidated tree across steps.
+            dead = set(getattr(self.shadow, "dead_nodes", None) or ())
+            incomplete = {n for n, ok in nc.items() if not ok}
+            if incomplete - dead:
+                self._desynced = True    # an alive owner lost capture spans
+            elif incomplete:
+                self._dead_desynced = True
+            if self._desynced or incomplete:
                 self.skipped_steps.append(d.step)
-            elif self._desynced:         # contiguity: refuse post-gap applies
-                self.skipped_steps.append(d.step)
+                if not self._desynced:
+                    live = set(nc) - dead
+                    if live:
+                        self.shadow.on_delivery(d, nodes=live)
+                        self.partial_steps.append(d.step)
             else:
                 self.shadow.on_delivery(d)
 
     def _checkpoint(self, event: StepEvent):
         ob = _obs.get()
         t0 = time.perf_counter()
-        if self._desynced:
-            if event.state_fn is None:
+        if self._desynced or self._dead_desynced:
+            if event.state_fn is not None:
+                with ob.tracer.span("checkpoint.resync", track="checkpoint",
+                                    args={"step": event.step}):
+                    self.channel.poll()  # superseded by the full-state copy
+                    snap = event.state_fn()
+                    self.shadow.bootstrap(snap["params"], snap["mu"],
+                                          snap["nu"], int(snap["step"]))
+                revive = getattr(self.channel, "revive_all", None)
+                if revive is not None:
+                    revive()             # replacement shadow hardware racked
+                self._desynced = False
+                self._dead_desynced = False
+                self.resyncs.append(event.step)
+                dt = time.perf_counter() - t0
+                self._parts = {"resync": dt}
+                return dt
+            if self._desynced:
                 self.skipped_steps.append(event.step)
                 return False             # frozen until resync or recovery
-            with ob.tracer.span("checkpoint.resync", track="checkpoint",
-                                args={"step": event.step}):
-                self.channel.poll()      # superseded by the full-state copy
-                snap = event.state_fn()
-                self.shadow.bootstrap(snap["params"], snap["mu"], snap["nu"],
-                                      int(snap["step"]))
-            self._desynced = False
-            self.resyncs.append(event.step)
-            dt = time.perf_counter() - t0
-            self._parts = {"resync": dt}
-            return dt
+            # dead owners only: their shards are lost either way — keep
+            # the survivors replaying (consolidate reports the holes)
         assert event.grads is not None, "Checkmate consumes captured gradients"
+        n_skipped = len(self.skipped_steps)
         stall = float(self.channel.send(event) or 0.0)
         t1 = time.perf_counter()
         self._apply_deliveries()
-        if self._desynced:
-            return False
+        if self._desynced or len(self.skipped_steps) > n_skipped:
+            return False    # gated or partial: not a checkpoint, no stall
         # the sender-visible channel cost plus the inline hand-off/apply
         # (sync-mode shadows run the optimizer on this thread)
         inline = time.perf_counter() - t1
@@ -379,9 +436,14 @@ class CheckmateCheckpointer(BaseCheckpointer):
         # recovery genuinely stalls training while shadows drain
         self._book("consolidate-wait", time.perf_counter() - t0)
         self._desynced = False           # training rewinds to this state
+        self._dead_desynced = False
         return out
 
     def finalize(self):
+        from repro.core.shadow import ShadowNodeLoss
         self._apply_deliveries()
         self.channel.close()
-        self.shadow.consolidate()
+        try:
+            self.shadow.consolidate()
+        except ShadowNodeLoss:
+            pass        # dead shards at shutdown: the partial is all there is

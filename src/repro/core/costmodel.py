@@ -147,3 +147,158 @@ def sweep_overhead(p: CostParams, overheads_s, cluster_sizes
             rows.append((w, gpu_hours_saved_per_day(q)))
         out[n] = rows
     return out
+
+
+# ---------------------------------------------------------------------------
+# Shadow-plane budgets (§4.1.1, §6.3): how many shadow nodes does a given
+# capture layout need, and does it fit at all?
+# ---------------------------------------------------------------------------
+
+#: Resident optimizer-state streams per gradient element on a shadow node:
+#: params (wire dtype) + mu + nu (float32 each) — §4.2's functional replay.
+MOMENT_BYTES_PER_ELEM = 8          # mu + nu, float32 each
+
+
+@dataclass(frozen=True)
+class ShadowBudget:
+    """Per-node resources of one shadow box.
+
+    Defaults model the paper's dual-NIC CPU host (2x100 GbE, §4.1.1) with a
+    1.5 TB DRAM configuration; ``ram_headroom`` reserves a fraction for the
+    OS, rx buffers, and consolidation scratch.
+    """
+    ram_bytes_per_node: float = 1.5e12
+    nic_gbps_per_node: float = 200.0
+    max_nodes: int = 64
+    ram_headroom: float = 0.9
+
+    @property
+    def usable_ram(self) -> float:
+        return self.ram_bytes_per_node * self.ram_headroom
+
+
+class ShadowPlanError(ValueError):
+    """No shadow fleet within budget can absorb this layout (the planner's
+    loud refusal — the message says which resource failed and what to change)."""
+
+
+@dataclass(frozen=True)
+class ShadowPlan:
+    """Feasible sharding of a capture layout across shadow nodes."""
+    n_nodes: int               # minimum feasible node count
+    ram_bound: int             # nodes needed by aggregate resident state
+    nic_bound: int             # nodes needed by per-iteration wire bytes
+    grad_bytes: int            # wire bytes per iteration (all buckets)
+    state_bytes: int           # resident p+mu+nu bytes across the fleet
+    bytes_per_node_max: int    # largest per-node resident state (RSS proxy)
+    gbps_per_node_max: float   # hottest node's ingest rate
+    n_buckets: int
+
+
+def _bucket_state_bytes(bucket) -> int:
+    import numpy as np
+    from repro.core.buckets import bucket_dtype
+    return bucket.size * (np.dtype(bucket_dtype(bucket)).itemsize
+                          + MOMENT_BYTES_PER_ELEM)
+
+
+def plan_shadow_nodes(layout, *, iter_time_s: float = 4.58,
+                      budget: ShadowBudget = ShadowBudget()) -> ShadowPlan:
+    """Minimum shadow-node count for ``layout`` under ``budget``.
+
+    Two aggregate bounds (RAM: resident p+mu+nu must fit the fleet; NIC:
+    each node must ingest its buckets' wire bytes within one iteration)
+    plus a granularity pass: buckets are indivisible, so the byte-balanced
+    assignment at the candidate count must actually fit per node. Raises
+    :class:`ShadowPlanError` with an actionable message when nothing
+    within ``budget.max_nodes`` fits.
+    """
+    from repro.core.multicast import assign_buckets, node_partitions
+
+    if not layout.buckets:
+        raise ShadowPlanError("empty layout: nothing to shadow")
+    grad_bytes = layout.total_bytes
+    state_bytes = sum(_bucket_state_bytes(b) for b in layout.buckets)
+    nic_bytes_per_iter = budget.nic_gbps_per_node * 1e9 / 8.0 * iter_time_s
+
+    # Indivisible-bucket feasibility: the largest bucket must fit ONE node.
+    big = max(layout.buckets, key=_bucket_state_bytes)
+    if _bucket_state_bytes(big) > budget.usable_ram:
+        raise ShadowPlanError(
+            f"bucket {big.bucket_id} ({len(big.slots)} leaves) needs "
+            f"{_bucket_state_bytes(big) / 1e9:.1f} GB resident state but a "
+            f"node offers {budget.usable_ram / 1e9:.1f} GB usable; buckets "
+            "are indivisible — rebucket the capture with a smaller "
+            "cap_bytes or raise ShadowBudget.ram_bytes_per_node")
+    if big.nbytes > nic_bytes_per_iter:
+        raise ShadowPlanError(
+            f"bucket {big.bucket_id} carries {big.nbytes / 1e9:.1f} GB per "
+            f"iteration but a node's NIC absorbs "
+            f"{nic_bytes_per_iter / 1e9:.1f} GB in {iter_time_s:.2f} s; "
+            "rebucket with a smaller cap_bytes or raise "
+            "ShadowBudget.nic_gbps_per_node")
+
+    ram_bound = max(1, math.ceil(state_bytes / budget.usable_ram))
+    nic_bound = max(1, math.ceil(grad_bytes / nic_bytes_per_iter))
+    by_id = {b.bucket_id: b for b in layout.buckets}
+    n = max(ram_bound, nic_bound)
+    while n <= budget.max_nodes:
+        owners = assign_buckets(layout, n)
+        parts = node_partitions(layout, owners, n)
+        per_state = [sum(_bucket_state_bytes(by_id[i]) for i in bs)
+                     for bs in parts]
+        per_wire = [sum(by_id[i].nbytes for i in bs) for bs in parts]
+        if (max(per_state) <= budget.usable_ram
+                and max(per_wire) <= nic_bytes_per_iter):
+            return ShadowPlan(
+                n_nodes=n, ram_bound=ram_bound, nic_bound=nic_bound,
+                grad_bytes=grad_bytes, state_bytes=state_bytes,
+                bytes_per_node_max=max(per_state),
+                gbps_per_node_max=max(per_wire) * 8.0 / iter_time_s / 1e9,
+                n_buckets=len(layout.buckets))
+        n += 1
+    raise ShadowPlanError(
+        f"layout ({grad_bytes / 1e9:.1f} GB wire, {state_bytes / 1e9:.1f} GB "
+        f"resident) is infeasible within ShadowBudget.max_nodes="
+        f"{budget.max_nodes} (RAM bound {ram_bound}, NIC bound {nic_bound}); "
+        "raise max_nodes, add RAM/NIC per node, or lengthen iter_time_s")
+
+
+def capture_leaf_specs(cfg) -> list[tuple[str, tuple, str]]:
+    """``(name, shape, dtype)`` leaves as the DDP capture side sees them.
+
+    The repo's jax models scan-stack per-layer (and per-expert) weights
+    into mega-leaves; the capture-side bucketer sees them UNSTACKED — one
+    leaf per layer (per expert for MoE). Metadata only: nothing allocates,
+    so this scales to arctic_480b's ~480B params.
+    """
+    from repro.models.registry import param_specs
+
+    out: list[tuple[str, tuple, str]] = []
+    for name, spec in param_specs(cfg).items():
+        entries = [(name, tuple(spec.shape), tuple(spec.logical))]
+        while entries and entries[0][2] and \
+                entries[0][2][0] in ("layers", "expert"):
+            axis = entries[0][2][0]
+            entries = [(f"{nm}.{axis}{i}", shape[1:], logical[1:])
+                       for nm, shape, logical in entries
+                       for i in range(shape[0])]
+        out.extend((nm, shape, str(spec.dtype)) for nm, shape, _ in entries)
+    return out
+
+
+def capture_layout(cfg, cap_bytes: int | None = None):
+    """Metadata-only :class:`~repro.core.buckets.BucketLayout` of a config's
+    capture-side leaves (default DDP 25 MB cap)."""
+    from repro.core.buckets import DEFAULT_BUCKET_BYTES, build_buckets
+    return build_buckets(capture_leaf_specs(cfg),
+                         cap_bytes=cap_bytes or DEFAULT_BUCKET_BYTES)
+
+
+def shadow_plan_for_config(cfg, *, cap_bytes: int | None = None,
+                           iter_time_s: float = 4.58,
+                           budget: ShadowBudget = ShadowBudget()
+                           ) -> ShadowPlan:
+    """Budget-check one architecture config end to end (metadata only)."""
+    return plan_shadow_nodes(capture_layout(cfg, cap_bytes),
+                             iter_time_s=iter_time_s, budget=budget)

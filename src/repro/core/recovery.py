@@ -18,7 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.shadow import ShadowCluster
+from repro.core.shadow import ShadowCluster, ShadowNodeLoss
 from repro.dist.sharding import ShardingRules
 from repro.optim import TrainState
 from repro.train.step import state_shardings
@@ -69,13 +69,28 @@ def checkpoint_from_state(state: TrainState) -> dict:
 
 
 def recover(shadow: ShadowCluster, cfg, rules: ShardingRules,
-            timeout: Optional[float] = None) -> tuple[TrainState, int]:
+            timeout: Optional[float] = None,
+            allow_partial: bool = False) -> tuple[TrainState, int]:
     """Consolidate the shadow cluster and rebuild training state.
 
-    Returns (state, resume_step). All shadow nodes serve the consolidated
-    checkpoint simultaneously in the paper; here consolidation is a merge of
-    node partitions.
+    Returns (state, resume_step). The paper's consolidation is a
+    distributed gather: every shadow node serves exactly the bucket
+    fragments it owns and the full tree is reassembled from them
+    (`ShadowCluster.consolidate`).
+
+    A dead shadow node surfaces as `repro.core.shadow.ShadowNodeLoss`
+    naming exactly the missing buckets. By default that propagates —
+    recovery must not silently hand back a checkpoint with holes. Pass
+    ``allow_partial=True`` to rebuild the surviving leaves anyway (e.g. to
+    warm-start everything the cluster still holds before refetching the
+    dead shard from durable storage); the returned state then contains
+    only the surviving nodes' leaves.
     """
-    ckpt = shadow.consolidate(timeout=timeout)
+    try:
+        ckpt = shadow.consolidate(timeout=timeout)
+    except ShadowNodeLoss as e:
+        if not allow_partial:
+            raise
+        ckpt = e.partial
     state = state_from_checkpoint(ckpt, cfg, rules)
     return state, int(ckpt["step"])

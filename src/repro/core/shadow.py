@@ -64,12 +64,37 @@ class ConsolidationTimeout(RuntimeError):
     only globally consistent once every node has reached that step — use
     the partial for diagnosis, retry consolidation for recovery."""
 
-    def __init__(self, lagging_nodes: list[int], partial: dict):
-        super().__init__(
-            f"shadow consolidation timed out; lagging nodes: "
-            f"{lagging_nodes} (partial checkpoint at step "
-            f"{partial.get('step')})")
+    def __init__(self, lagging_nodes: list[int], partial: dict,
+                 lagging_buckets: Optional[dict] = None):
+        msg = (f"shadow consolidation timed out; lagging nodes: "
+               f"{lagging_nodes} (partial checkpoint at step "
+               f"{partial.get('step')})")
+        if lagging_buckets:
+            msg += f"; lagging buckets: {lagging_buckets}"
+        super().__init__(msg)
         self.lagging_nodes = lagging_nodes
+        self.partial = partial
+        # per-node lagging-bucket report: node id -> its owned bucket ids
+        self.lagging_buckets = dict(lagging_buckets or {})
+
+
+class ShadowNodeLoss(RuntimeError):
+    """Consolidation found dead shadow nodes: their partitions are gone.
+
+    Unlike :class:`ConsolidationTimeout` (transient — retry), a dead node's
+    buckets cannot be gathered until a resync re-seeds a replacement.
+    ``missing_buckets`` reports EXACTLY the dead nodes' bucket ids;
+    ``partial`` is the surviving nodes' assembled fragments (each
+    apply-atomic, at the survivors' current step)."""
+
+    def __init__(self, dead_nodes: list[int], missing_buckets: dict,
+                 partial: dict):
+        super().__init__(
+            f"shadow node(s) {dead_nodes} lost; missing buckets: "
+            f"{missing_buckets} (partial checkpoint at step "
+            f"{partial.get('step')})")
+        self.dead_nodes = list(dead_nodes)
+        self.missing_buckets = dict(missing_buckets)
         self.partial = partial
 
 
@@ -272,12 +297,17 @@ class ShadowCluster:
     def __init__(self, layout: BucketLayout, opt: OptimizerConfig,
                  n_nodes: int = 1, async_mode: bool = False,
                  flat: bool = True,
-                 apply_times_maxlen: int = APPLY_TIMES_MAXLEN):
+                 apply_times_maxlen: int = APPLY_TIMES_MAXLEN,
+                 assignment: Optional[dict] = None):
         self.layout = layout
         self.opt = opt
         self.n_nodes = n_nodes
         self.flat = flat
-        self.assignment = assign_buckets(layout, n_nodes)
+        # bucket_id -> owner node; the default byte-balanced greedy mapping
+        # is the one training nodes, switch, and channel all derive, but a
+        # custom assignment may be injected (tests sweep random mappings)
+        self.assignment = dict(assignment) if assignment is not None \
+            else assign_buckets(layout, n_nodes)
         self.nodes = [
             ShadowNode(i, opt, layout,
                        [b for b, n in self.assignment.items() if n == i],
@@ -287,6 +317,7 @@ class ShadowCluster:
         self.async_mode = async_mode
         self.train_step_seen = 0
         self.max_queue_depth = 0
+        self.dead_nodes: set[int] = set()
         self._queues: list[queue.Queue] = []
         self._drained: list[threading.Event] = []
         self._workers: list[threading.Thread] = []
@@ -316,6 +347,14 @@ class ShadowCluster:
                 drained.set()
                 return
             step, lr, scale, grads, flats = item
+            if node.node_id in self.dead_nodes:
+                # killed after this item was enqueued: its state is gone,
+                # applying would read a cleared partition
+                q.task_done()
+                with q.mutex:
+                    if q.unfinished_tasks == 0:
+                        drained.set()
+                continue
             if flats is None:
                 # legacy leaf-tree hand-off: bucket packing happens HERE, on
                 # the shadow node — the caller only enqueued a reference
@@ -331,32 +370,84 @@ class ShadowCluster:
 
     # -- API -------------------------------------------------------------------
     def bootstrap(self, params, mu, nu, step: int = 0):
-        """Install the initial replica (paper: shadow starts from a copy)."""
+        """Install the initial replica (paper: shadow starts from a copy).
+
+        Also the node-replacement path: re-seeding revives any nodes
+        previously lost to :meth:`kill_node` (the resync that follows a
+        shadow-node death hands every node a fresh partition).
+        """
         params = {k: np.asarray(v) for k, v in params.items()}
         mu = {k: np.asarray(v) for k, v in mu.items()}
         nu = {k: np.asarray(v) for k, v in nu.items()}
+        self.dead_nodes.clear()
         for node in self.nodes:
             node.bootstrap(params, mu, nu, step)
         self.train_step_seen = int(step)
 
-    def on_delivery(self, delivery: Delivery):
+    def kill_node(self, node_id: int):
+        """Simulated shadow-node death: the node's partition (params + both
+        moments) is gone, as lost DRAM is. Pending queued work for the node
+        is discarded; a later :meth:`bootstrap` re-seeds a replacement.
+        """
+        if node_id in self.dead_nodes:
+            return
+        if not 0 <= node_id < self.n_nodes:
+            raise ValueError(f"no shadow node {node_id} "
+                             f"(cluster has {self.n_nodes})")
+        self.dead_nodes.add(node_id)
+        node = self.nodes[node_id]
+        if self.async_mode:
+            q, ev = self._queues[node_id], self._drained[node_id]
+            try:
+                while True:
+                    q.get_nowait()
+                    q.task_done()
+            except queue.Empty:
+                pass
+            with q.mutex:
+                if q.unfinished_tasks == 0:
+                    ev.set()
+        with node.state_lock:     # an in-flight apply finishes first
+            node._pf, node._mf, node._vf = {}, {}, {}
+            node.params, node.mu, node.nu = {}, {}, {}
+        _obs.get().metrics.counter(
+            "shadow_node_deaths_total",
+            "Shadow nodes lost (partition dropped)").inc(1, node=node_id)
+
+    def on_delivery(self, delivery: Delivery, nodes: Optional[set] = None):
         """Consume one channel delivery (the ONLY gradient ingress).
 
         The delivery's ``flats`` (wire layout) feed the fused per-bucket
         apply directly — no unpack, no repack. Gated deliveries
         (``complete=False``) must be filtered by the caller — the shadow
         refuses a partial apply.
+
+        ``nodes`` restricts the apply to a subset of node ids (the sharded
+        transport's per-node gating: a delivery may be complete for some
+        owners and not others — see ``Delivery.node_complete``). Every
+        requested node must be complete; without ``nodes`` the delivery
+        must be globally complete.
         """
-        if not delivery.complete:
+        if nodes is not None:
+            nc = getattr(delivery, "node_complete", None)
+            bad = sorted(n for n in nodes
+                         if not (delivery.complete if nc is None
+                                 else nc.get(n, False)))
+            if bad:
+                raise ValueError(
+                    f"refusing sharded delivery for step {delivery.step}: "
+                    f"capture incomplete for nodes {bad}")
+        elif not delivery.complete:
             raise ValueError(
                 f"refusing gated delivery for step {delivery.step}: "
                 f"capture incomplete ({delivery.missing_captures} missing)")
         if delivery.flats is not None:
             self._ingest(delivery.step, delivery.lr, None,
-                         delivery.grad_scale, flats=delivery.flats)
+                         delivery.grad_scale, flats=delivery.flats,
+                         nodes=nodes)
         else:
             self._ingest(delivery.step, delivery.lr, delivery.grads,
-                         delivery.grad_scale)
+                         delivery.grad_scale, nodes=nodes)
 
     def on_gradients(self, step: int, lr: float, grads: dict,
                      grad_scale: float = 1.0):
@@ -371,27 +462,41 @@ class ShadowCluster:
 
     def _ingest(self, step: int, lr: float, grads: Optional[dict],
                 grad_scale: float = 1.0,
-                flats: Optional[dict] = None):
-        """Apply one iteration's reduced gradients to every node.
+                flats: Optional[dict] = None,
+                nodes: Optional[set] = None):
+        """Apply one iteration's reduced gradients, each node its partition.
 
         ``flats`` (the wire-layout delivery payload) is handed to nodes as
-        is — zero copies between the channel rx buffer and the fused apply.
-        Async mode enqueues a REFERENCE only — any (legacy) packing and the
-        optimizer replay run on the shadow workers, off the training
-        critical path.
+        is — zero copies between the channel rx buffer and the fused apply
+        — and each node sees ONLY its owned buckets (the sharded transport
+        may not even have the others). Async mode enqueues a REFERENCE only
+        — any (legacy) packing and the optimizer replay run on the shadow
+        workers, off the training critical path.
         """
         self.train_step_seen = step
+        targets = [n for n in self.nodes
+                   if n.node_id not in self.dead_nodes
+                   and (nodes is None or n.node_id in nodes)]
         if self.async_mode:
-            for node, q, ev in zip(self.nodes, self._queues, self._drained):
-                ev.clear()
-                q.put((step, lr, grad_scale, grads, flats))
-                self.max_queue_depth = max(self.max_queue_depth, q.qsize())
+            for node in targets:
+                q = self._queues[node.node_id]
+                self._drained[node.node_id].clear()
+                sub = None if flats is None else \
+                    {bid: flats[bid] for bid in node.bucket_ids}
+                q.put((step, lr, grad_scale, grads, sub))
+                # mutex-based depth (queue.qsize() is racy and unimplemented
+                # on some platforms); put() precedes, so depth >= 1 here
+                self.max_queue_depth = max(self.max_queue_depth,
+                                           self._pending(q))
             return
         if flats is None:
+            need = {bid for node in targets for bid in node.bucket_ids}
             flats = {b.bucket_id: pack_bucket(b, grads, xp=np)
-                     for b in self.layout.buckets}
-        for node in self.nodes:
-            node.apply(step, lr, flats, grad_scale)
+                     for b in self.layout.buckets if b.bucket_id in need}
+        for node in targets:
+            node.apply(step, lr,
+                       {bid: flats[bid] for bid in node.bucket_ids},
+                       grad_scale)
 
     @staticmethod
     def _pending(q: queue.Queue) -> int:
@@ -399,15 +504,19 @@ class ShadowCluster:
             return q.unfinished_tasks
 
     def consolidate(self, timeout: Optional[float] = None) -> dict:
-        """Assemble a complete checkpoint for recovery (§4.2.4).
+        """Distributed gather: reassemble a full checkpoint from per-node
+        fragments (§4.2.4; Universal-Checkpointing shape).
 
         Waits up to ``timeout`` seconds (default 60) for in-flight updates
         — end to end, including the apply currently executing, so a wedged
-        worker cannot hang recovery — then merges node partitions into full
+        worker cannot hang recovery — then pulls each live node's fragment
+        (concurrently; each apply-atomic) and assembles the full
         params/mu/nu trees. The wait is event-based (each worker signals
         when its queue drains), not a sleep-poll. Raises
-        `ConsolidationTimeout` (carrying the lagging node ids and the
-        partial checkpoint) if any node is still behind at the deadline.
+        `ConsolidationTimeout` (lagging node ids, their owned buckets, and
+        the partial checkpoint) if a live node is still behind at the
+        deadline, and `ShadowNodeLoss` (dead node ids and EXACTLY their
+        buckets as missing) if any node has been killed.
         """
         with _obs.get().tracer.span("shadow.consolidate", track="shadow"):
             return self._consolidate(timeout)
@@ -416,7 +525,9 @@ class ShadowCluster:
         if self.async_mode:
             deadline = time.monotonic() + (60.0 if timeout is None else
                                            timeout)
-            for q, ev in zip(self._queues, self._drained):
+            for i, (q, ev) in enumerate(zip(self._queues, self._drained)):
+                if i in self.dead_nodes:
+                    continue
                 while self._pending(q):
                     remaining = deadline - time.monotonic()
                     if remaining <= 0 or not ev.wait(remaining):
@@ -426,18 +537,53 @@ class ShadowCluster:
                         # drained): re-arm and wait for the next drain
                         ev.clear()
             lagging = [i for i, q in enumerate(self._queues)
-                       if self._pending(q)]
+                       if i not in self.dead_nodes and self._pending(q)]
             if lagging:
-                raise ConsolidationTimeout(lagging, self._merge())
-        return self._merge()
+                raise ConsolidationTimeout(
+                    lagging, self._gather(),
+                    lagging_buckets={i: tuple(self.nodes[i].bucket_ids)
+                                     for i in lagging})
+        if self.dead_nodes:
+            dead = sorted(self.dead_nodes)
+            _obs.get().metrics.counter(
+                "shadow_consolidate_missing_buckets_total",
+                "Buckets unreachable at consolidate (dead owners)").inc(
+                sum(len(self.nodes[n].bucket_ids) for n in dead))
+            raise ShadowNodeLoss(
+                dead, {n: tuple(self.nodes[n].bucket_ids) for n in dead},
+                self._gather())
+        return self._gather()
 
-    def _merge(self) -> dict:
+    def _gather(self) -> dict:
+        """Pull per-node fragments (concurrently — each node unpacks its own
+        flat buffers, the distributed part of the gather) and assemble the
+        tree from whatever nodes are alive."""
+        live = [n for n in self.nodes if n.node_id not in self.dead_nodes]
+        frags: dict[int, tuple] = {}
+
+        def pull(node):
+            frags[node.node_id] = node.snapshot()       # apply-atomic
+
+        # one span from the calling thread (concurrent pulls would race on
+        # the clock and break byte-identical ManualClock trace exports)
+        with _obs.get().tracer.span("shadow.gather", track="shadow",
+                                    args={"nodes": len(live)}):
+            if len(live) > 1:
+                threads = [threading.Thread(target=pull, args=(n,),
+                                            daemon=True) for n in live]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+            else:
+                for n in live:
+                    pull(n)
         params: dict = {}
         mu: dict = {}
         nu: dict = {}
         steps = []
-        for node in self.nodes:
-            p, m, v, step = node.snapshot()    # apply-atomic per partition
+        for nid in sorted(frags):
+            p, m, v, step = frags[nid]
             params.update(p)
             mu.update(m)
             nu.update(v)
@@ -445,14 +591,18 @@ class ShadowCluster:
         return {"params": params, "mu": mu, "nu": nu,
                 "step": min(steps, default=0)}
 
+    # backwards-compatible alias (pre-sharding name)
+    _merge = _gather
+
     def stats(self) -> ShadowStats:
         count = sum(n.apply_count for n in self.nodes)
         total = sum(n.apply_total_s for n in self.nodes)
         per_node = [n.apply_total_s / n.apply_count if n.apply_count else 0.0
                     for n in self.nodes]
+        live = [n for n in self.nodes if n.node_id not in self.dead_nodes]
         return ShadowStats(
-            steps_applied=min((n.step for n in self.nodes), default=0),
-            lag=self.train_step_seen - min((n.step for n in self.nodes),
+            steps_applied=min((n.step for n in live), default=0),
+            lag=self.train_step_seen - min((n.step for n in live),
                                            default=0),
             max_queue_depth=self.max_queue_depth,
             mean_apply_s=total / count if count else 0.0,

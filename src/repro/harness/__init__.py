@@ -20,5 +20,5 @@ from repro.harness.runner import (InstrumentedChannel,           # noqa: F401
                                   replay_bundle, run_scenario, write_bundle)
 from repro.harness.scenario import (ChannelSpec, FabricFailure,  # noqa: F401
                                     FailureSchedule, Scenario,
-                                    repro_seed, sample_scenario,
-                                    scenario_strategy)
+                                    ShadowDeath, repro_seed,
+                                    sample_scenario, scenario_strategy)

@@ -1,7 +1,8 @@
 """The golden scenario corpus: named chaos drills spanning the scenario
 space — single / rail-optimized / strided topologies x all three channel
 stacks x every failure class (link, switch, shadow-NIC, gated-capture
-bursts, worker wedge, training-node failures, multi-failure sequences).
+bursts, shadow-node deaths on sharded clusters, worker wedge, training-node
+failures, multi-failure sequences).
 
 Every golden scenario must pass every applicable invariant;
 ``python -m repro.harness run --corpus golden`` is the CI chaos gate.
@@ -11,9 +12,11 @@ on a synthetic stream (fast); full-level ones run the real training loop.
 from __future__ import annotations
 
 from repro.harness.scenario import (ChannelSpec, FabricFailure,
-                                    FailureSchedule, Scenario)
+                                    FailureSchedule, Scenario, ShadowDeath)
 
 _RAIL = dict(kind="packetized", topology="rail-optimized")
+# bucket-sharded owner routing; small buckets so 3 owners all hold shards
+_SHARD = dict(kind="packetized", topology="rail-optimized", sharded=True)
 
 
 def _sc(name: str, **kw) -> Scenario:
@@ -100,6 +103,46 @@ GOLDEN: dict[str, Scenario] = {s.name: s for s in [
                             topology="single"),
         schedule=FailureSchedule(fabric=(
             FabricFailure(step=3, kind="capture"),))),
+
+    # -- bucket-sharded shadow cluster: owner routing + node deaths ---------
+    _sc("sharded-rail-clean", seed=81, steps=5, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD, shadow_rails=2)),
+    _sc("sharded-two-groups-clean", seed=82, steps=4, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD, n_dp_groups=2, ranks_per_group=4)),
+    _sc("shadow-death-midstep", seed=83, steps=5, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256, resync=False,
+        channel=ChannelSpec(**_SHARD),
+        schedule=FailureSchedule(shadow_death=(
+            ShadowDeath(step=3, node=1, phase="step"),))),
+    _sc("shadow-death-consolidate", seed=84, steps=5, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256, resync=False,
+        channel=ChannelSpec(**_SHARD),
+        schedule=FailureSchedule(shadow_death=(
+            ShadowDeath(step=3, node=0, phase="consolidate"),))),
+    # death at 2, resync heals at 3, then a link + alive-NIC kill burst at
+    # 4 desyncs the revived cluster as a whole (alive owners lose spans)
+    _sc("shadow-death-link-burst", seed=85, steps=6, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD),
+        schedule=FailureSchedule(
+            shadow_death=(ShadowDeath(step=2, node=2, phase="step"),),
+            fabric=(FabricFailure(step=4, kind="link",
+                                  target=("leaf0", "spine0")),
+                    FabricFailure(step=4, kind="shadow_nic",
+                                  target="s0")))),
+    _sc("shadow-death-resync", seed=86, steps=6, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD, shadow_rails=3),
+        schedule=FailureSchedule(shadow_death=(
+            ShadowDeath(step=2, node=0, phase="step"),))),
+    _sc("shadow-death-async", seed=87, steps=5, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256, shadow_async=True, resync=False,
+        channel=ChannelSpec(**_SHARD),
+        schedule=FailureSchedule(shadow_death=(
+            ShadowDeath(step=2, node=1, phase="step"),
+            ShadowDeath(step=4, node=2, phase="consolidate")))),
 
     # -- consolidation under a wedged worker --------------------------------
     _sc("wedge-consolidate", seed=61, steps=4, shadow_async=True,

@@ -228,7 +228,10 @@ class CheckpointContiguity(Invariant):
     """The shadow replays a contiguous gradient stream: its consolidated
     step only ever advances one applied step at a time, never across a
     gated gap, and only jumps at an explicit resync or a recovery rewind.
-    While desynced it stays frozen at the last fully-captured step."""
+    While desynced it stays frozen at the last fully-captured step. A
+    sharded partial apply (survivors replaying past dead owners) advances
+    the stream the same single step — every serving node moves in
+    lockstep, so the consolidated tree is never torn across steps."""
     name = "contiguity"
 
     def __init__(self):
@@ -248,7 +251,7 @@ class CheckpointContiguity(Invariant):
                 self.expected = rec.restored_step
         if rec.resync:
             self.expected = rec.step
-        elif rec.applied:
+        elif rec.applied or rec.partial_applied:
             if rec.step != self.expected + 1:
                 yield self._v(rec.step, f"applied step {rec.step} onto a "
                                         f"shadow at {self.expected} — the "
@@ -274,6 +277,8 @@ class ShadowTrainerBitIdentity(Invariant):
     def check_step(self, trace, rec):
         if rec.shadow_ckpt is None or rec.shadow_step is None:
             return
+        if rec.shadow_missing:               # partial tree (dead owners):
+            return                           # shadow-node-death checks it
         ref = trace.states.get(rec.shadow_step)
         if ref is None:                      # e.g. the bootstrap step
             return
@@ -281,6 +286,69 @@ class ShadowTrainerBitIdentity(Invariant):
         if bad:
             yield self._v(rec.step, f"shadow@{rec.shadow_step} != "
                                     f"trainer@{rec.shadow_step}: {bad}")
+
+
+@register
+class ShadowNodeDeath(Invariant):
+    """Killing a sharded shadow owner loses exactly that owner's shard and
+    nothing else: consolidation raises `ShadowNodeLoss` naming precisely
+    the dead owners and their buckets, the dead owners' leaves are absent
+    from the partial checkpoint, every surviving owner's leaf stays
+    bit-identical to the trainer at the consolidated step, and a resync
+    (full-state copy onto replacement hardware) makes the cluster whole
+    again. Stateful: models the dead set across steps, honoring the
+    kill phase ("step" kills land before that step's capture,
+    "consolidate" kills after its apply) and resync revivals."""
+    name = "shadow-node-death"
+
+    def __init__(self):
+        self.dead: set[int] = set()
+
+    def applies(self, trace) -> bool:
+        return bool(trace.scenario.schedule.shadow_death)
+
+    def check_step(self, trace, rec):
+        deaths = [d for d in trace.scenario.schedule.shadow_death
+                  if d.step == rec.step]
+        for d in deaths:
+            if d.phase == "step":
+                self.dead.add(d.node)
+        if rec.resync:          # replacement racked + full-state copy
+            self.dead.clear()
+        for d in deaths:
+            if d.phase == "consolidate":
+                self.dead.add(d.node)
+        part = trace.shadow_partition or {}
+        expected = {n: tuple(part[n]["buckets"]) for n in sorted(self.dead)}
+        got = {int(n): tuple(b)
+               for n, b in (rec.shadow_missing or {}).items()}
+        if got != expected:
+            yield self._v(rec.step,
+                          f"consolidate reported missing buckets {got} but "
+                          f"dead owners {sorted(self.dead)} own {expected}")
+        if tuple(rec.dead_nodes or ()) != tuple(sorted(self.dead)):
+            yield self._v(rec.step,
+                          f"consolidate named dead nodes "
+                          f"{list(rec.dead_nodes)}, killed: "
+                          f"{sorted(self.dead)}")
+        if rec.shadow_ckpt is None or rec.shadow_step is None:
+            return
+        dead_leaves = {lf for n in self.dead for lf in part[n]["leaves"]}
+        still_there = sorted(dead_leaves & set(rec.shadow_ckpt["params"]))
+        if still_there:
+            yield self._v(rec.step,
+                          f"dead owners' leaves {still_there} still served "
+                          f"by the consolidated tree")
+        ref = trace.states.get(rec.shadow_step)
+        if ref is None:                      # e.g. the bootstrap step
+            return
+        for part_name in ("params", "mu", "nu"):
+            for k in sorted(rec.shadow_ckpt[part_name]):
+                a = np.asarray(rec.shadow_ckpt[part_name][k])
+                if not np.array_equal(a, np.asarray(ref[part_name][k])):
+                    yield self._v(rec.step,
+                                  f"surviving shard leaf {part_name}[{k}] "
+                                  f"diverged from trainer@{rec.shadow_step}")
 
 
 @register

@@ -54,6 +54,7 @@ class PollRecord:
     complete: bool
     missing_captures: int
     fabric: object          # FabricResult for packetized transports
+    node_complete: Optional[dict] = None   # sharded: per-owner verdicts
 
 
 class InstrumentedChannel:
@@ -87,8 +88,17 @@ class InstrumentedChannel:
         out = self.inner.poll()
         self._polls.extend(
             PollRecord(d.step, d.complete, d.missing_captures,
-                       getattr(d, "fabric", None)) for d in out)
+                       getattr(d, "fabric", None),
+                       getattr(d, "node_complete", None)) for d in out)
         return out
+
+    def kill_shadow_node(self, node_id: int):
+        self.inner.kill_shadow_node(node_id)
+
+    def revive_all(self):
+        fn = getattr(self.inner, "revive_all", None)
+        if fn is not None:
+            fn()
 
     def close(self):
         self.inner.close()
@@ -111,6 +121,9 @@ class StepRecord:
     shadow_step: Optional[int] = None    # consolidated shadow step after
     gated: bool = False                  # skipped_steps grew this on_step
     applied: bool = False                # a delivery advanced the shadow
+    partial_applied: bool = False        # sharded: survivors-only apply
+    shadow_missing: Optional[dict] = None  # node -> buckets lost with it
+    dead_nodes: tuple = ()               # dead owners at this consolidate
     resync: bool = False                 # healed via full-state copy
     restored_step: Optional[int] = None  # a restore() ran just before this
     first_seen: bool = True              # False = replay after a recovery
@@ -136,9 +149,19 @@ class Trace:
         self.channel: Optional[InstrumentedChannel] = None
         self.compressor = None
         self.wedge: Optional[dict] = None
+        self.shadow_partition: Optional[dict] = None  # node -> buckets/leaves
         self.stats = None
         self.violations: list[inv.Violation] = []
-        self.fabric_steps = scenario.schedule.fabric_steps
+        # steps where injected failures make fabric-level loss legitimate.
+        # A shadow-node death keeps losing that owner's mirrors on every
+        # later send, so every step from the death onward counts (an
+        # over-approximation once a resync revives the transport — the
+        # death invariant checks those steps precisely).
+        fs = set(scenario.schedule.fabric_steps)
+        for d in scenario.schedule.shadow_death:
+            first = d.step if d.phase == "step" else d.step + 1
+            fs.update(range(first, scenario.steps + 1))
+        self.fabric_steps = frozenset(fs)
 
 
 class _Engine:
@@ -267,7 +290,8 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
     from repro.core.buckets import layout_for_tree
     from repro.core.channel import StepEvent
     from repro.core.checkpoint import CheckmateCheckpointer
-    from repro.core.shadow import ConsolidationTimeout, ShadowCluster
+    from repro.core.shadow import (ConsolidationTimeout, ShadowCluster,
+                                   ShadowNodeLoss)
     from repro.optim.functional import TrainState, apply_updates
 
     rng = np.random.default_rng(np.uint64(sc.seed))
@@ -281,6 +305,9 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
     shadow = ShadowCluster(layout, opt, n_nodes=sc.shadow_nodes,
                            async_mode=sc.shadow_async)
     shadow.bootstrap(params, zeros, zeros, 0)
+    trace.shadow_partition = {
+        n.node_id: {"buckets": list(n.bucket_ids),
+                    "leaves": list(n._leaves)} for n in shadow.nodes}
     chan = InstrumentedChannel(sc.channel.build(
         sc.schedule.failures_at(), n_shadow_nodes=sc.shadow_nodes))
     ck = CheckmateCheckpointer(shadow, channel=chan)
@@ -315,6 +342,11 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                 pending_restore = int(restored["step"])
                 step = int(restored["step"])
                 continue
+            deaths = [d for d in sc.schedule.shadow_death if d.step == nxt]
+            for d in deaths:            # phase "step": dies before the send
+                if d.phase == "step":
+                    chan.kill_shadow_node(d.node)
+                    shadow.kill_node(d.node)
             grads = _grads_at(sc, params, nxt)
             state = apply_fn(state, grads)
             ckpt = {"params": {k: np.asarray(v)
@@ -327,7 +359,7 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                 _install_wedge(shadow, sc.schedule.wedge_node,
                                sc.schedule.wedge_release_s)
             before = (ck.n_checkpoints, len(ck.skipped_steps),
-                      len(ck.resyncs))
+                      len(ck.resyncs), len(ck.partial_steps))
             stall = ck.on_step(StepEvent(
                 step=nxt, grads=grads, lr=sc.lr,
                 state_fn=(lambda c=ckpt: c) if sc.resync else None))
@@ -336,8 +368,13 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
             rec.resync = len(ck.resyncs) > before[2]
             rec.gated = len(ck.skipped_steps) > before[1]
             rec.applied = ck.n_checkpoints > before[0] and not rec.resync
+            rec.partial_applied = len(ck.partial_steps) > before[3]
             rec.restored_step, pending_restore = pending_restore, None
             rec.sends, rec.polls = chan.take_sends(), chan.take_polls()
+            for d in deaths:            # phase "consolidate": dies between
+                if d.phase == "consolidate":    # the apply and the gather
+                    chan.kill_shadow_node(d.node)
+                    shadow.kill_node(d.node)
             if wedged:
                 # the deadline drill replaces this step's consolidate
                 try:
@@ -351,7 +388,16 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                                "partial_step": partial,
                                "final_step": int(shadow_ck["step"])}
             else:
-                shadow_ck = shadow.consolidate()
+                try:
+                    shadow_ck = shadow.consolidate()
+                except ShadowNodeLoss as e:
+                    # dead owners: the gather serves the survivors' shards
+                    # and names exactly the dead buckets as missing
+                    shadow_ck = e.partial
+                    rec.shadow_missing = {
+                        int(n): tuple(int(b) for b in bids)
+                        for n, bids in e.missing_buckets.items()}
+                    rec.dead_nodes = tuple(sorted(e.dead_nodes))
             rec.shadow_step = int(shadow_ck["step"])
             rec.shadow_ckpt = shadow_ck
             trace.final_shadow = shadow_ck

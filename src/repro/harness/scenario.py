@@ -34,7 +34,11 @@ class ChannelSpec:
 
     ``kind`` picks the `repro.core.channel` implementation; ``inner`` is
     the transport a ``compressed`` channel wraps. The remaining fields are
-    forwarded to `PacketizedChannel` (fabric shape).
+    forwarded to `PacketizedChannel` (fabric shape). ``sharded`` turns on
+    bucket-sharded mirror routing: each shadow node receives only the
+    buckets it owns, deliveries carry per-owner ``node_complete``
+    verdicts, and ``shadow_rails`` spreads the owners across that many
+    shadow leaf switches.
     """
     kind: str = "inprocess"            # inprocess | packetized | compressed
     inner: str = "inprocess"           # compressed only: inner transport
@@ -46,6 +50,8 @@ class ChannelSpec:
     shadow_nics: int = 2
     n_channels: int = 1
     replication_factor: int = 1
+    sharded: bool = False              # packetized only: bucket->owner routing
+    shadow_rails: int = 1
 
     @property
     def has_fabric(self) -> bool:
@@ -70,6 +76,7 @@ class ChannelSpec:
                 ranks_per_leaf=self.ranks_per_leaf, n_spines=self.n_spines,
                 shadow_nics=self.shadow_nics, n_channels=self.n_channels,
                 replication_factor=self.replication_factor,
+                sharded=self.sharded, shadow_rails=self.shadow_rails,
                 failures_at=failures_at)
 
         if self.kind == "inprocess":
@@ -106,6 +113,22 @@ class FabricFailure:
 
 
 @dataclass(frozen=True)
+class ShadowDeath:
+    """Kill one shadow node of a bucket-sharded cluster at a step.
+
+    ``phase`` places the death inside the iteration: ``"step"`` kills the
+    node before that step's capture is sent (the delivery arrives with the
+    dead owner's buckets missing), ``"consolidate"`` kills it after the
+    step applied but before that step's consolidation (the gather itself
+    discovers the loss). The node stays dead — every later capture keeps
+    losing its shard — until a resync re-seeds replacement hardware.
+    """
+    step: int
+    node: int
+    phase: str = "step"                # step | consolidate
+
+
+@dataclass(frozen=True)
 class FailureSchedule:
     """Everything that goes wrong during one scenario.
 
@@ -114,6 +137,8 @@ class FailureSchedule:
       each (`repro.core.recovery.FailurePlan`).
     * ``fabric`` — `FabricFailure` events injected into the channel's
       fabric simulator, one-shot per step.
+    * ``shadow_death`` — `ShadowDeath` kills of sharded shadow owners
+      (persistent, unlike one-shot fabric failures).
     * ``wedge_node`` — wedge this shadow node's apply before the final
       step so consolidation hits its deadline (`ConsolidationTimeout`
       drill); requires an async shadow cluster. ``wedge_release_s`` is how
@@ -121,6 +146,7 @@ class FailureSchedule:
     """
     train_fail_steps: tuple[int, ...] = ()
     fabric: tuple[FabricFailure, ...] = ()
+    shadow_death: tuple[ShadowDeath, ...] = ()
     wedge_node: int | None = None
     wedge_release_s: float = 1.5
 
@@ -222,6 +248,42 @@ class Scenario:
             if self.level != "channel":
                 raise ValueError(f"{self.name}: wedge drills are "
                                  f"channel-level scenarios")
+        if self.channel.sharded and self.channel.kind != "packetized":
+            raise ValueError(f"{self.name}: sharded delivery is a "
+                             f"packetized-transport feature")
+        if self.channel.shadow_rails > max(1, self.shadow_nodes):
+            raise ValueError(f"{self.name}: {self.channel.shadow_rails} "
+                             f"shadow rails but only {self.shadow_nodes} "
+                             f"shadow nodes to spread over them")
+        if self.schedule.shadow_death:
+            if not self.channel.sharded:
+                raise ValueError(f"{self.name}: shadow_death needs a "
+                                 f"sharded channel (per-owner delivery)")
+            if self.level != "channel":
+                raise ValueError(f"{self.name}: shadow_death drills are "
+                                 f"channel-level scenarios")
+            if self.schedule.wedge_node is not None:
+                raise ValueError(f"{self.name}: shadow_death cannot "
+                                 f"combine with a wedge drill")
+            if self.schedule.train_fail_steps:
+                raise ValueError(
+                    f"{self.name}: shadow_death cannot combine with "
+                    f"train_fail_steps — a dead shard makes shadow-only "
+                    f"recovery partial (see recover(allow_partial=True))")
+            for d in self.schedule.shadow_death:
+                if d.phase not in ("step", "consolidate"):
+                    raise ValueError(f"{self.name}: unknown death phase "
+                                     f"{d.phase!r}")
+                if not 0 <= d.node < self.shadow_nodes:
+                    raise ValueError(f"{self.name}: shadow_death node "
+                                     f"{d.node} out of range "
+                                     f"0..{self.shadow_nodes - 1}")
+                if not 1 <= d.step <= self.steps:
+                    raise ValueError(f"{self.name}: shadow_death step "
+                                     f"{d.step} outside 1..{self.steps}")
+            if self.shadow_nodes < 2:
+                raise ValueError(f"{self.name}: shadow_death needs >= 2 "
+                                 f"shadow nodes (someone must survive)")
         if self.checkpointer != "checkmate" and self.level == "channel":
             raise ValueError(f"{self.name}: channel-level scenarios drive "
                              f"a CheckmateCheckpointer")
@@ -256,6 +318,8 @@ class Scenario:
                              if isinstance(f.get("target"), list)
                              else f.get("target")})
             for f in sched.get("fabric", ()))
+        sched["shadow_death"] = tuple(
+            ShadowDeath(**s) for s in sched.get("shadow_death", ()))
         d["schedule"] = FailureSchedule(**sched)
         d["invariants"] = tuple(d.get("invariants", ()))
         return cls(**d)
@@ -271,11 +335,11 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
     """Deterministically expand one integer into a valid random scenario.
 
     The whole scenario space the golden corpus spans is sampled here:
-    channel kind x topology x DP shape x optimizer x failure classes
-    (captures, bursts, hardware kills, training failures, multi-failure
-    sequences). Every sampled scenario must PASS all auto-selected
-    invariants — a violation is a real bug, and the CLI writes its repro
-    bundle.
+    channel kind x topology x DP shape x optimizer x sharded shadow
+    routing x failure classes (captures, bursts, hardware kills,
+    shadow-node deaths, training failures, multi-failure sequences).
+    Every sampled scenario must PASS all auto-selected invariants — a
+    violation is a real bug, and the CLI writes its repro bundle.
     """
     seed = int(seed) & 0xFFFFFFFFFFFFFFFF      # negative CLI seeds wrap
     rng = np.random.default_rng(seed)
@@ -331,6 +395,19 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
     if rng.random() < 0.4:
         train_fails = (int(rng.integers(2, steps + 1)),)
 
+    shadow_nodes = int(rng.integers(1, 4))
+    deaths: tuple[ShadowDeath, ...] = ()
+    if kind == "packetized" and rng.random() < 0.3:   # bucket-sharded owners
+        spec = dataclasses.replace(
+            spec, sharded=True,
+            shadow_rails=int(rng.integers(1, min(shadow_nodes, 2) + 1)))
+        if (level == "channel" and shadow_nodes >= 2 and not train_fails
+                and rng.random() < 0.5):
+            deaths = (ShadowDeath(
+                step=int(rng.integers(2, steps + 1)),
+                node=int(rng.integers(0, shadow_nodes)),
+                phase=str(rng.choice(["step", "consolidate"]))),)
+
     return Scenario(
         name=f"sampled-{seed}", level=level, seed=int(seed) & 0x7FFFFFFF,
         steps=steps,
@@ -338,11 +415,12 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
         cap_bytes=int(rng.choice([1024, 4096, 1 << 16])),
         resync=bool(rng.random() < 0.5),
         optimizer=optimizer, momentum=momentum,
-        shadow_nodes=int(rng.integers(1, 4)),
+        shadow_nodes=shadow_nodes,
         shadow_async=bool(level == "channel" and rng.random() < 0.25),
         channel=spec,
         schedule=FailureSchedule(train_fail_steps=train_fails,
-                                 fabric=tuple(fabric)),
+                                 fabric=tuple(fabric),
+                                 shadow_death=deaths),
     ).validate()
 
 

@@ -140,7 +140,7 @@ def build_topology(n_dp_groups: int, ranks_per_group: int, n_shadow: int = 1,
                    *, topology: str = "rail", ranks_per_leaf: int = 32,
                    link_gbps: float = 100.0, spine_gbps: float | None = None,
                    shadow_nics: int = 2, n_spines: int = 2,
-                   prop_s: float = 1e-6) -> Topology:
+                   shadow_rails: int = 1, prop_s: float = 1e-6) -> Topology:
     """Build a fabric for the event-driven simulator.
 
     Args:
@@ -152,6 +152,10 @@ def build_topology(n_dp_groups: int, ranks_per_group: int, n_shadow: int = 1,
             round-0 double-rate incast does not pause the fabric).
         n_spines: spine count; leaf->spine selection is deterministic ECMP
             with failover in the simulator.
+        shadow_rails: shadow-rail leaf count; a bucket-sharded shadow
+            cluster spreads its owner nodes round-robin across rails so
+            mirror incast splits over independent leaves. ``1`` keeps the
+            legacy single ``leafS`` rail (name included).
     """
     n_ranks = n_dp_groups * ranks_per_group
     hosts = [f"h{r}" for r in range(n_ranks)]
@@ -188,10 +192,14 @@ def build_topology(n_dp_groups: int, ranks_per_group: int, n_shadow: int = 1,
             leaf = leaves[r % n_leaves]                 # strided (pessimal)
         attach[h] = leaf
         _duplex(links, h, leaf, link_gbps, prop_s)
-    # shadow rail: shadow hosts share a dedicated leaf reachable via spines
-    shadow_leaf = "leafS"
-    leaves = leaves + [shadow_leaf]
-    for s in shadow_hosts:
+    # shadow rail(s): shadow hosts share dedicated leaves reachable via
+    # spines; multiple rails spread a sharded cluster's incast round-robin
+    rails = max(1, shadow_rails)
+    shadow_leaves = (["leafS"] if rails == 1
+                     else [f"leafS{r}" for r in range(rails)])
+    leaves = leaves + shadow_leaves
+    for i, s in enumerate(shadow_hosts):
+        shadow_leaf = shadow_leaves[i % rails]
         attach[s] = shadow_leaf
         _duplex(links, s, shadow_leaf, link_gbps * shadow_nics, prop_s,
                 nics=shadow_nics)

@@ -35,6 +35,8 @@ Fig 10 example, and docs/ARCHITECTURE.md for where this sits in the system.
 from __future__ import annotations
 
 import argparse
+import bisect
+import dataclasses
 import heapq
 from collections import deque
 from dataclasses import dataclass, field
@@ -167,6 +169,14 @@ class FabricSimulator:
         shadow_rx_hook: extraction point — called as ``hook(node_id,
             frame)`` when a (mirrored) frame is finally delivered to a
             shadow host; channels use it to reassemble the capture.
+        shadow_route: bucket-sharded shadow plane — maps a frame byte's
+            *total-buffer* offset (``total_offset``) to the shadow node
+            that owns it, overriding the round-robin tag schedule. The
+            sender packetizes the shadow stream (§4.2.4 — it encodes the
+            shadow node id per packet), so tagged frames are split at
+            ``shadow_cuts`` and every piece is stamped with its owner.
+        shadow_cuts: sorted total-buffer offsets where bucket ownership
+            changes; tagged frames straddling a cut are split there.
     """
 
     def __init__(self, topo: Topology, *, grad_bytes_per_group: int,
@@ -175,9 +185,12 @@ class FabricSimulator:
                  frame_quantum: int | None = None,
                  retx_timeout_s: float = 100e-6, max_retx: int = 10,
                  max_time_s: float = 30.0,
-                 frame_tx_hook=None, shadow_rx_hook=None):
+                 frame_tx_hook=None, shadow_rx_hook=None,
+                 shadow_route=None, shadow_cuts=()):
         self.topo = topo
         self.pfc = pfc
+        self.shadow_route = shadow_route
+        self.shadow_cuts = sorted(shadow_cuts)
         self.rf = max(1, replication_factor)
         self.n_channels = max(1, n_channels)
         self.retx_timeout = retx_timeout_s
@@ -484,6 +497,45 @@ class FabricSimulator:
         return (f.chunk * self.chunk_bytes
                 + sum(self.split[:f.channel]) + f.payload_off)
 
+    def total_offset(self, f: Frame) -> int:
+        """Byte offset of ``f``'s payload inside the concatenated
+        all-groups wire buffer (group-major) — the coordinate system the
+        sharded shadow plane's owner map (``shadow_route``) speaks."""
+        return (f.dp_group * self.chunk_bytes * self.topo.ranks_per_group
+                + self.wire_offset(f))
+
+    def _owner_split(self, f: Frame):
+        """Route a tagged frame to its bucket-owner shadow node(s).
+
+        The sender packetizes the shadow stream (§4.2.4: it encodes the
+        shadow node id per packet), so it aligns frame boundaries to
+        bucket-ownership cuts: a frame straddling a cut is split into
+        per-owner pieces, each a self-consistent frame (offsets, TCP and
+        shadow sequence numbers advanced; wire-frame count re-derived).
+        """
+        route = self.shadow_route
+        if route is None or not f.tagged:
+            return (f,)
+        w0 = self.total_offset(f)
+        w1 = w0 + f.payload_len
+        cuts = self.shadow_cuts
+        i = bisect.bisect_right(cuts, w0)
+        j = bisect.bisect_left(cuts, w1, i)
+        if i == j:                          # one owner: stamp in place
+            f.shadow_node = route(w0)
+            return (f,)
+        out = []
+        bounds = [w0, *cuts[i:j], w1]
+        for a, b in zip(bounds, bounds[1:]):
+            d = a - w0
+            out.append(dataclasses.replace(
+                f, payload_off=f.payload_off + d, payload_len=b - a,
+                tcp_seq=f.tcp_seq + d,
+                shadow_seq=(f.shadow_seq + d) if f.shadow_seq >= 0 else -1,
+                shadow_node=route(a),
+                n_frames=(b - a + MTU - 1) // MTU))
+        return out
+
     def _shadow_recv(self, node: str, f: Frame):
         nid = self._shadow_id[node]
         self.shadow_bytes[nid] += f.payload_len
@@ -516,10 +568,11 @@ class FabricSimulator:
                     shadow_seq0=(ev.seq * self.split[ch]) if ev else -1,
                     shadow_node=ev.shadow_node if ev else -1,
                     dp_group=g, quantum=self.quantum):
-                f.t_send = self.now
-                if self.frame_tx_hook is not None:
-                    self.frame_tx_hook(f)
-                self._enqueue(lk, f)
+                for sf in self._owner_split(f):
+                    sf.t_send = self.now
+                    if self.frame_tx_hook is not None:
+                        self.frame_tx_hook(sf)
+                    self._enqueue(lk, sf)
             off += self.split[ch]
 
     # -- run ---------------------------------------------------------------

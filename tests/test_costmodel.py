@@ -89,3 +89,77 @@ def test_scaling_with_cluster_size():
     s4 = cm.gpu_hours_saved_per_day(cm.CostParams(n_gpus=4096))
     s16 = cm.gpu_hours_saved_per_day(cm.CostParams(n_gpus=16384))
     assert 6.5 < s16 / s4 < 9.5                # N^1.5 vs tuned baseline
+
+
+# -- shadow fleet planning (§4.2.4): budgets, feasibility, refusal -----------
+
+def _layout(n_leaves=6, elems=64, cap=4):
+    """Tiny metadata-only layout: ``n_leaves`` float32 leaves, ``cap``
+    leaves' bytes per bucket."""
+    from repro.core.buckets import build_buckets
+    return build_buckets([(f"w{i}", (elems,), "float32")
+                          for i in range(n_leaves)],
+                         cap_bytes=cap * elems * 4)
+
+
+def test_plan_shadow_nodes_minimal_when_roomy():
+    plan = cm.plan_shadow_nodes(_layout())
+    assert plan.n_nodes == 1
+    assert plan.ram_bound == plan.nic_bound == 1
+    assert plan.bytes_per_node_max <= cm.ShadowBudget().usable_ram
+    assert plan.n_buckets == len(_layout().buckets)
+
+
+def test_plan_shadow_nodes_ram_bound_scales_fleet():
+    """Shrink per-node RAM until the aggregate state needs several nodes;
+    the plan must honor the bound AND the indivisible-bucket granularity."""
+    lo = _layout(n_leaves=8, elems=1024, cap=2)
+    state = sum(b.size * (4 + cm.MOMENT_BYTES_PER_ELEM) for b in lo.buckets)
+    budget = cm.ShadowBudget(ram_bytes_per_node=state / 3 / 0.9,
+                             nic_gbps_per_node=1e6)
+    plan = cm.plan_shadow_nodes(lo, budget=budget)
+    assert plan.n_nodes >= plan.ram_bound >= 3
+    assert plan.bytes_per_node_max <= budget.usable_ram
+
+
+def test_plan_shadow_nodes_nic_bound_scales_fleet():
+    lo = _layout(n_leaves=8, elems=1024, cap=2)
+    # NIC absorbs ~1/3 of the wire bytes per iteration -> >= 3 nodes
+    gbps = lo.total_bytes * 8.0 / 4.58 / 1e9 / 3
+    plan = cm.plan_shadow_nodes(
+        lo, budget=cm.ShadowBudget(nic_gbps_per_node=gbps * 1.01))
+    assert plan.n_nodes >= plan.nic_bound >= 3
+    assert plan.gbps_per_node_max <= gbps * 1.01 + 1e-9
+
+
+def test_plan_refuses_indivisible_bucket_loudly():
+    lo = _layout(n_leaves=2, elems=1024, cap=2)      # one fat bucket
+    tiny = cm.ShadowBudget(ram_bytes_per_node=1024)  # < one bucket's state
+    with pytest.raises(cm.ShadowPlanError, match="rebucket"):
+        cm.plan_shadow_nodes(lo, budget=tiny)
+
+
+def test_plan_refuses_exhausted_fleet_loudly():
+    lo = _layout(n_leaves=8, elems=1024, cap=1)
+    per_bucket = lo.buckets[0].size * (4 + cm.MOMENT_BYTES_PER_ELEM)
+    budget = cm.ShadowBudget(ram_bytes_per_node=per_bucket / 0.9 * 1.1,
+                             max_nodes=3)            # needs 8 single-bucket nodes
+    with pytest.raises(cm.ShadowPlanError, match="max_nodes"):
+        cm.plan_shadow_nodes(lo, budget=budget)
+
+
+def test_every_config_is_shadowable_within_default_budget():
+    """Acceptance: EVERY architecture in repro.configs — including
+    arctic_480b and dbrx_132b — gets a feasible plan from the default
+    paper-hardware budget, and the headline frontier config needs a
+    genuinely sharded fleet (>= 8 nodes)."""
+    import repro.configs as C
+    plans = {}
+    for name in C.all_archs():
+        plans[name] = cm.shadow_plan_for_config(C.get(name))
+        assert 1 <= plans[name].n_nodes <= cm.ShadowBudget().max_nodes, name
+    assert plans["arctic-480b"].n_nodes >= 8
+    assert plans["dbrx-132b"].n_nodes >= 2
+    # the plan's per-node RSS proxy respects the budget everywhere
+    for name, p in plans.items():
+        assert p.bytes_per_node_max <= cm.ShadowBudget().usable_ram, name

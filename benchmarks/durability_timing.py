@@ -1,0 +1,186 @@
+"""Durability plane cost: delta bytes and trainer stall at gpt2-1.5b.
+
+The tiered persistence layer (`repro.durability`, docs/durability.md)
+claims two numbers and this benchmark gates both:
+
+* **delta bytes << full-state bytes** — an int8 compressed flush epoch
+  moves a fraction of the f32 base sweep (the paper-scale argument for
+  flushing every step instead of snapshotting);
+* **flush adds 0.0 trainer stall** — flushing runs entirely on the
+  per-node `FlushWorker` threads, so the checkpointer's stall ledger
+  (`stall_stages`) contains no flush/durability/tier stage and the
+  per-step stall with flushing attached matches the vocabulary of the
+  run without it.
+
+``--json`` writes ``BENCH_durability.json`` and exits nonzero if a gate
+fails; the default mode prints the harness CSV rows. A raw-policy
+restore is also checked bit-identical against ``consolidate()`` — a
+benchmark that persists the wrong bytes fast would gate green otherwise.
+
+The workload is the same dimension-scaled GPT-2 1.5B per-layer leaf
+tree the shadow benchmark uses (580 leaves, default DDP 25 MB cap).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.shadow_timing import gpt2_1_5b_leaf_tree
+from repro.core.buckets import layout_for_tree
+from repro.core.checkpoint import CheckmateCheckpointer
+from repro.core.channel import StepEvent
+from repro.core.shadow import ShadowCluster
+from repro.durability import (DurableShadow, FlushPolicy, LocalDiskTier,
+                              restore_from_tiers)
+from repro.obs.stalls import KNOWN_STAGES
+from repro.optim import OptimizerConfig
+
+FLUSH_STAGE_WORDS = ("flush", "durability", "tier")
+
+
+def _drive(params, layout, grad_steps, opt, policy, root, n_nodes=2):
+    """One checkpointered run with a durability plane attached.
+
+    Returns (stall_stages, tier, dur, consolidated, flush_wall_s)."""
+    shadow = ShadowCluster(layout, opt, n_nodes=n_nodes)
+    tier = LocalDiskTier(root)
+    dur = DurableShadow([tier], policy).attach(shadow)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    ck = CheckmateCheckpointer(shadow, durability=dur)
+    t_flush = 0.0
+    for step, grads in enumerate(grad_steps, start=1):
+        ck.on_step(StepEvent(step=step, grads=grads, lr=1e-3))
+        t0 = time.perf_counter()
+        dur.drain()                      # background worker time, measured
+        t_flush += time.perf_counter() - t0
+    ckpt = shadow.consolidate(timeout=120)
+    stages = dict(ck.stall_stages)
+    ck.finalize()
+    shadow.shutdown()
+    return stages, tier, dur, ckpt, t_flush
+
+
+def run_json(out_path: str = "BENCH_durability.json", steps: int = 6) -> int:
+    opt = OptimizerConfig(lr=1e-3)
+    params = gpt2_1_5b_leaf_tree()
+    layout = layout_for_tree(params)         # default DDP 25 MB cap
+    state_bytes = 3 * layout.total_bytes     # params + mu + nu, f32
+    rng = np.random.default_rng(7)
+    grad_steps = [{k: rng.standard_normal(v.shape).astype(np.float32) * 0.01
+                   for k, v in params.items()} for _ in range(steps)]
+    fails: list[str] = []
+
+    with tempfile.TemporaryDirectory(prefix="bench-dur-raw-") as root:
+        raw_stages, raw_tier, raw_dur, ckpt, raw_flush_s = _drive(
+            params, layout, grad_steps, opt, FlushPolicy(), root)
+        raw_epoch_bytes = raw_tier.put_bytes_total / max(
+            1, raw_dur.epochs_started)
+        restored = restore_from_tiers([raw_tier], layout, n_nodes=2)
+        if restored["step"] != steps:
+            fails.append(f"raw restore landed at {restored['step']}, "
+                         f"trainer is at {steps}")
+        for part in ("params", "mu", "nu"):
+            for k in ckpt[part]:
+                if not np.array_equal(restored[part][k], ckpt[part][k]):
+                    fails.append(f"raw restore differs from consolidate "
+                                 f"at {part}[{k}]")
+                    break
+
+    with tempfile.TemporaryDirectory(prefix="bench-dur-q-") as root:
+        # one f32 base epoch, then int8 diff deltas all the way
+        q_stages, q_tier, q_dur, _, q_flush_s = _drive(
+            params, layout, grad_steps, opt,
+            FlushPolicy(compress=True, rebase_every=steps + 1), root)
+        ents = q_tier.entries()
+        base_bytes = sum(e.nbytes for e in ents if e.kind == "base")
+        delta_epochs = sorted({e.epoch for e in ents if e.kind == "delta"})
+        epoch_delta = [sum(e.nbytes for e in ents
+                           if e.kind == "delta" and e.epoch == ep)
+                       for ep in delta_epochs]
+        delta_mean = float(np.mean(epoch_delta)) if epoch_delta else 0.0
+
+    # -- gates ---------------------------------------------------------------
+    if not delta_epochs:
+        fails.append("compressed run produced no delta epochs")
+    if delta_mean >= state_bytes / 3:
+        fails.append(f"compressed delta epoch moves {delta_mean / 1e6:.2f} "
+                     f"MB, not << the {state_bytes / 1e6:.2f} MB full "
+                     "state (int8 diffs should be ~4x smaller)")
+    for label, stages in (("raw", raw_stages), ("compressed", q_stages)):
+        flushy = [s for s in stages
+                  if any(w in s.lower() for w in FLUSH_STAGE_WORDS)]
+        if flushy:
+            fails.append(f"{label} run booked trainer stall on flush "
+                         f"stages {flushy}: flushing must be free")
+        unknown = [s for s in stages if s not in KNOWN_STAGES]
+        if unknown:
+            fails.append(f"{label} run booked stall on stages {unknown} "
+                         f"outside the ledger vocabulary {KNOWN_STAGES}")
+
+    report = {
+        "arch": "gpt2-1.5b (per-layer leaf structure, dim-scaled)",
+        "steps": steps,
+        "n_buckets": len(layout.buckets),
+        "state_bytes": state_bytes,
+        "raw": {
+            "epoch_bytes_mean": raw_epoch_bytes,
+            "flush_wall_s_total": raw_flush_s,
+            "stall_stages": raw_stages,
+        },
+        "compressed": {
+            "base_bytes": base_bytes,
+            "delta_epoch_bytes_mean": delta_mean,
+            "delta_vs_state": delta_mean / state_bytes,
+            "flush_wall_s_total": q_flush_s,
+            "stall_stages": q_stages,
+        },
+        "flush_stall_s": 0.0 if not fails else None,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    for msg in fails:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if fails else 0
+
+
+def run():
+    """CSV rows for the benchmark harness (model-free, seconds-scale)."""
+    opt = OptimizerConfig(lr=1e-3)
+    params = gpt2_1_5b_leaf_tree(n_layers=8)     # trimmed for the sweep
+    layout = layout_for_tree(params)
+    state_bytes = 3 * layout.total_bytes
+    rng = np.random.default_rng(7)
+    grad_steps = [{k: rng.standard_normal(v.shape).astype(np.float32) * 0.01
+                   for k, v in params.items()} for _ in range(4)]
+    for label, policy in (("raw", FlushPolicy()),
+                          ("int8", FlushPolicy(compress=True,
+                                               rebase_every=5))):
+        with tempfile.TemporaryDirectory(prefix="bench-dur-") as root:
+            stages, tier, dur, _, flush_s = _drive(
+                params, layout, grad_steps, opt, policy, root)
+            epoch_bytes = tier.put_bytes_total / max(1, dur.epochs_started)
+            csv_row(f"durability.{label}", flush_s / len(grad_steps) * 1e6,
+                    f"epoch_bytes={epoch_bytes:.0f} "
+                    f"state_bytes={state_bytes} "
+                    f"stall_stages={sorted(stages)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="delta-size + zero-flush-stall gates; write "
+                         "BENCH_durability.json")
+    ap.add_argument("--out", default="BENCH_durability.json")
+    ap.add_argument("--steps", type=int, default=6)
+    args = ap.parse_args()
+    if args.json:
+        sys.exit(run_json(args.out, steps=args.steps))
+    run()

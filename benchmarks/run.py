@@ -13,6 +13,7 @@ Mapping to the paper:
   stalls             -> Fig 2 (per-iteration stalls per system)
   throughput         -> Fig 6 (throughput x checkpoint count, 4 model fams)
   shadow_timing      -> Fig 7 (shadow keeps up; min CPU nodes)
+  durability_timing  -> tiered flush cost: delta bytes + zero trainer stall
   optimizer_scaling  -> Fig 8 (opt-step scaling across shadow partitions)
   correctness        -> Fig 9 (recovered == uninterrupted)
   multicast_overhead -> Fig 10 (replication factor sweep)
@@ -36,6 +37,7 @@ MODULES = [
     ("kernels", "benchmarks.kernels"),
     ("stalls", "benchmarks.stalls"),
     ("shadow_timing", "benchmarks.shadow_timing"),
+    ("durability_timing", "benchmarks.durability_timing"),
     ("correctness", "benchmarks.correctness"),
     ("throughput", "benchmarks.throughput"),
 ]

@@ -339,12 +339,22 @@ class CheckmateCheckpointer(BaseCheckpointer):
     consumes_grads = True
 
     def __init__(self, shadow: ShadowCluster,
-                 channel: Optional[GradientChannel] = None):
+                 channel: Optional[GradientChannel] = None,
+                 durability=None):
         super().__init__(freq=1)
         self.shadow = shadow
         self.channel: GradientChannel = (channel if channel is not None
                                          else InProcessChannel())
         self.channel.open(shadow.layout)
+        # optional repro.durability.DurableShadow: flush epochs ride the
+        # shadow's OWN ingest path (ShadowCluster._ingest -> notify), so
+        # a gated/skipped capture — which never reaches the shadow —
+        # opens no epoch and the tier lag simply grows until the next
+        # applied step; nothing here touches the stall ledger (duck-typed
+        # so core never imports the durability package)
+        self.durability = durability
+        if durability is not None and durability.cluster is not shadow:
+            durability.attach(shadow)
         self.skipped_steps: list[int] = []
         self.partial_steps: list[int] = []   # sharded: survivors-only applies
         self.resyncs: list[int] = []
@@ -447,3 +457,6 @@ class CheckmateCheckpointer(BaseCheckpointer):
             self.shadow.consolidate()
         except ShadowNodeLoss:
             pass        # dead shards at shutdown: the partial is all there is
+        if self.durability is not None:
+            self.durability.drain()      # everything applied is durable
+            self.durability.close()

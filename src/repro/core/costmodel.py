@@ -171,6 +171,11 @@ class ShadowBudget:
     nic_gbps_per_node: float = 200.0
     max_nodes: int = 64
     ram_headroom: float = 0.9
+    # durability tier behind the node (repro.durability): sustained local
+    # write bandwidth and capacity for the flushed base + delta chain.
+    # Defaults model a 4-NVMe RAID-0 scratch volume.
+    disk_gbps_per_node: float = 96.0
+    disk_bytes_per_node: float = 30e12
 
     @property
     def usable_ram(self) -> float:
@@ -193,6 +198,10 @@ class ShadowPlan:
     bytes_per_node_max: int    # largest per-node resident state (RSS proxy)
     gbps_per_node_max: float   # hottest node's ingest rate
     n_buckets: int
+    # durability flush budget terms (1/0.0 when no flush policy given):
+    flush_bound: int = 1       # nodes needed by sustained flush bandwidth
+    disk_bound: int = 1        # nodes needed by retained base+delta bytes
+    flush_gbps_per_node_max: float = 0.0   # hottest node's flush rate
 
 
 def _bucket_state_bytes(bucket) -> int:
@@ -202,8 +211,16 @@ def _bucket_state_bytes(bucket) -> int:
                           + MOMENT_BYTES_PER_ELEM)
 
 
+#: int8 payload + per-slot f32 scales vs the raw p+mu+nu streams — the
+#: planning-time shrink factor for a compressed delta flush.
+FLUSH_COMPRESS_FACTOR = 0.25
+
+
 def plan_shadow_nodes(layout, *, iter_time_s: float = 4.58,
-                      budget: ShadowBudget = ShadowBudget()) -> ShadowPlan:
+                      budget: ShadowBudget = ShadowBudget(),
+                      flush_every_steps: int | None = None,
+                      flush_compress: bool = False,
+                      retain_epochs: int = 8) -> ShadowPlan:
     """Minimum shadow-node count for ``layout`` under ``budget``.
 
     Two aggregate bounds (RAM: resident p+mu+nu must fit the fleet; NIC:
@@ -212,6 +229,15 @@ def plan_shadow_nodes(layout, *, iter_time_s: float = 4.58,
     assignment at the candidate count must actually fit per node. Raises
     :class:`ShadowPlanError` with an actionable message when nothing
     within ``budget.max_nodes`` fits.
+
+    ``flush_every_steps`` adds the durability budget (repro.durability):
+    each node must sustain flushing its partition's worst-case dirty
+    state (every bucket, p+mu+nu; times :data:`FLUSH_COMPRESS_FACTOR`
+    when ``flush_compress``) to its tier once per flush epoch within the
+    epoch's wall time, and retain one base plus ``retain_epochs`` deltas
+    on ``budget.disk_bytes_per_node``. ``None`` (default) skips the
+    durability terms entirely — plans are unchanged from a fleet with no
+    tiers attached.
     """
     from repro.core.multicast import assign_buckets, node_partitions
 
@@ -240,28 +266,76 @@ def plan_shadow_nodes(layout, *, iter_time_s: float = 4.58,
 
     ram_bound = max(1, math.ceil(state_bytes / budget.usable_ram))
     nic_bound = max(1, math.ceil(grad_bytes / nic_bytes_per_iter))
+
+    # durability terms: worst-case flush bytes per epoch + retained chain
+    flush_factor = FLUSH_COMPRESS_FACTOR if flush_compress else 1.0
+    flush_bound = disk_bound = 1
+    flush_bytes_per_epoch = retained_bytes = 0.0
+    disk_bytes_per_epoch = 0.0
+    if flush_every_steps is not None:
+        if flush_every_steps < 1:
+            raise ShadowPlanError(
+                f"flush_every_steps must be >= 1, got {flush_every_steps}")
+        epoch_s = flush_every_steps * iter_time_s
+        disk_bytes_per_epoch = budget.disk_gbps_per_node * 1e9 / 8.0 * epoch_s
+        flush_bytes_per_epoch = state_bytes * flush_factor
+        retained_bytes = state_bytes * (1.0 + retain_epochs * flush_factor)
+        big_flush = _bucket_state_bytes(big) * flush_factor
+        if big_flush > disk_bytes_per_epoch:
+            raise ShadowPlanError(
+                f"bucket {big.bucket_id} flushes {big_flush / 1e9:.1f} GB "
+                f"per epoch but a node's tier absorbs "
+                f"{disk_bytes_per_epoch / 1e9:.1f} GB in {epoch_s:.2f} s; "
+                "rebucket with a smaller cap_bytes, raise "
+                "ShadowBudget.disk_gbps_per_node, or flush less often "
+                "(FlushPolicy.every_steps)")
+        if _bucket_state_bytes(big) * (1.0 + retain_epochs * flush_factor) \
+                > budget.disk_bytes_per_node:
+            raise ShadowPlanError(
+                f"bucket {big.bucket_id}'s retained base+delta chain "
+                f"exceeds ShadowBudget.disk_bytes_per_node="
+                f"{budget.disk_bytes_per_node / 1e12:.1f} TB; lower "
+                "retain_epochs or add tier capacity")
+        flush_bound = max(1, math.ceil(
+            flush_bytes_per_epoch / disk_bytes_per_epoch))
+        disk_bound = max(1, math.ceil(
+            retained_bytes / budget.disk_bytes_per_node))
+
     by_id = {b.bucket_id: b for b in layout.buckets}
-    n = max(ram_bound, nic_bound)
+    n = max(ram_bound, nic_bound, flush_bound, disk_bound)
     while n <= budget.max_nodes:
         owners = assign_buckets(layout, n)
         parts = node_partitions(layout, owners, n)
         per_state = [sum(_bucket_state_bytes(by_id[i]) for i in bs)
                      for bs in parts]
         per_wire = [sum(by_id[i].nbytes for i in bs) for bs in parts]
-        if (max(per_state) <= budget.usable_ram
-                and max(per_wire) <= nic_bytes_per_iter):
+        fits = (max(per_state) <= budget.usable_ram
+                and max(per_wire) <= nic_bytes_per_iter)
+        flush_gbps_max = 0.0
+        if fits and flush_every_steps is not None:
+            per_flush = [s * flush_factor for s in per_state]
+            per_retained = [s * (1.0 + retain_epochs * flush_factor)
+                            for s in per_state]
+            fits = (max(per_flush) <= disk_bytes_per_epoch
+                    and max(per_retained) <= budget.disk_bytes_per_node)
+            flush_gbps_max = (max(per_flush) * 8.0
+                              / (flush_every_steps * iter_time_s) / 1e9)
+        if fits:
             return ShadowPlan(
                 n_nodes=n, ram_bound=ram_bound, nic_bound=nic_bound,
                 grad_bytes=grad_bytes, state_bytes=state_bytes,
                 bytes_per_node_max=max(per_state),
                 gbps_per_node_max=max(per_wire) * 8.0 / iter_time_s / 1e9,
-                n_buckets=len(layout.buckets))
+                n_buckets=len(layout.buckets),
+                flush_bound=flush_bound, disk_bound=disk_bound,
+                flush_gbps_per_node_max=flush_gbps_max)
         n += 1
     raise ShadowPlanError(
         f"layout ({grad_bytes / 1e9:.1f} GB wire, {state_bytes / 1e9:.1f} GB "
         f"resident) is infeasible within ShadowBudget.max_nodes="
-        f"{budget.max_nodes} (RAM bound {ram_bound}, NIC bound {nic_bound}); "
-        "raise max_nodes, add RAM/NIC per node, or lengthen iter_time_s")
+        f"{budget.max_nodes} (RAM bound {ram_bound}, NIC bound {nic_bound}, "
+        f"flush bound {flush_bound}, disk bound {disk_bound}); raise "
+        "max_nodes, add RAM/NIC/disk per node, or lengthen iter_time_s")
 
 
 def capture_leaf_specs(cfg) -> list[tuple[str, tuple, str]]:

@@ -70,7 +70,8 @@ def checkpoint_from_state(state: TrainState) -> dict:
 
 def recover(shadow: ShadowCluster, cfg, rules: ShardingRules,
             timeout: Optional[float] = None,
-            allow_partial: bool = False) -> tuple[TrainState, int]:
+            allow_partial: bool = False,
+            tiers=None) -> tuple[TrainState, int]:
     """Consolidate the shadow cluster and rebuild training state.
 
     Returns (state, resume_step). The paper's consolidation is a
@@ -85,12 +86,42 @@ def recover(shadow: ShadowCluster, cfg, rules: ShardingRules,
     warm-start everything the cluster still holds before refetching the
     dead shard from durable storage); the returned state then contains
     only the surviving nodes' leaves.
+
+    ``tiers`` (a list of `repro.durability` Tier objects) is the durable
+    fallback behind both cases. On a *partial* loss the dead owners'
+    shards are rebuilt from the tiers at exactly the survivors' step and
+    merged with the live partial — a full checkpoint with zero holes. On
+    a *total* plane loss (``ShadowNodeLoss.total``) the entire
+    checkpoint is reconstructed via
+    `repro.durability.restore_from_tiers`, landing at the newest flushed
+    step (the one `ShadowNodeLoss.durable_hint` names). Only if the
+    tiers cannot serve the exact step does ``allow_partial`` apply.
     """
     try:
         ckpt = shadow.consolidate(timeout=timeout)
     except ShadowNodeLoss as e:
-        if not allow_partial:
-            raise
-        ckpt = e.partial
+        ckpt = None
+        if tiers:
+            from repro.durability.restore import (TierRestoreError,
+                                                  restore_from_tiers,
+                                                  restore_shards_from_tiers)
+            try:
+                if e.total:
+                    ckpt = restore_from_tiers(tiers, shadow.layout,
+                                              n_nodes=shadow.n_nodes)
+                else:
+                    p, m, v = restore_shards_from_tiers(
+                        tiers, shadow.layout, e.dead_nodes,
+                        at_step=int(e.partial["step"]))
+                    ckpt = {"params": {**e.partial["params"], **p},
+                            "mu": {**e.partial["mu"], **m},
+                            "nu": {**e.partial["nu"], **v},
+                            "step": int(e.partial["step"])}
+            except TierRestoreError:
+                ckpt = None          # tiers can't serve: fall through
+        if ckpt is None:
+            if not allow_partial:
+                raise
+            ckpt = e.partial
     state = state_from_checkpoint(ckpt, cfg, rules)
     return state, int(ckpt["step"])

@@ -85,17 +85,41 @@ class ShadowNodeLoss(RuntimeError):
     buckets cannot be gathered until a resync re-seeds a replacement.
     ``missing_buckets`` reports EXACTLY the dead nodes' bucket ids;
     ``partial`` is the surviving nodes' assembled fragments (each
-    apply-atomic, at the survivors' current step)."""
+    apply-atomic, at the survivors' current step).
+
+    ``total`` distinguishes losing the ENTIRE plane (partial is empty —
+    there is nothing to merge, only the durability tiers can help) from
+    partial loss (survivors + durable shards compose). ``durable_hint``
+    is ``(tier name, step)`` of the newest full restore point when a
+    `repro.durability.DurableShadow` is attached — the message names it
+    as the actionable recovery path."""
 
     def __init__(self, dead_nodes: list[int], missing_buckets: dict,
-                 partial: dict):
-        super().__init__(
-            f"shadow node(s) {dead_nodes} lost; missing buckets: "
-            f"{missing_buckets} (partial checkpoint at step "
-            f"{partial.get('step')})")
+                 partial: dict, total: bool = False,
+                 durable_hint: Optional[tuple] = None):
+        msg = (f"shadow node(s) {dead_nodes} lost; missing buckets: "
+               f"{missing_buckets} (partial checkpoint at step "
+               f"{partial.get('step')})")
+        if total:
+            msg = (f"TOTAL shadow-plane loss: all {len(dead_nodes)} "
+                   f"node(s) {dead_nodes} dead, every bucket missing")
+            if durable_hint is not None:
+                tname, tstep = durable_hint
+                msg += (f"; recover via restore_from_tiers() — newest "
+                        f"durable tier '{tname}' holds step {tstep}")
+            else:
+                msg += ("; no durability tier attached: the checkpoint "
+                        "is unrecoverable")
+        elif durable_hint is not None:
+            tname, tstep = durable_hint
+            msg += (f"; tier '{tname}' holds the missing shards durably "
+                    f"up to step {tstep}")
+        super().__init__(msg)
         self.dead_nodes = list(dead_nodes)
         self.missing_buckets = dict(missing_buckets)
         self.partial = partial
+        self.total = bool(total)
+        self.durable_hint = durable_hint
 
 
 class ShadowNode:
@@ -128,6 +152,9 @@ class ShadowNode:
         self._pf: dict[int, jnp.ndarray] = {}
         self._mf: dict[int, jnp.ndarray] = {}
         self._vf: dict[int, jnp.ndarray] = {}
+        # bucket ids mutated since the last durability flush drained them;
+        # maintained under state_lock (repro.durability.FlushWorker)
+        self.dirty: set[int] = set()
         self.step = 0
         # bounded recent-apply window + exact running counters (long runs
         # must not grow memory; stats() stays exact via the counters)
@@ -179,6 +206,7 @@ class ShadowNode:
                     b, nu, alloc_flat(b.size, np.float32)))
             with self.state_lock:
                 self._pf, self._mf, self._vf = pf, mf, vf
+                self.dirty = set(self.bucket_ids)
                 self.step = int(step)
             return
         for name in self._leaves:
@@ -205,6 +233,28 @@ class ShadowNode:
             mu.update(unpack_bucket(b, mf[bid], xp=np))
             nu.update(unpack_bucket(b, vf[bid], xp=np))
         return params, mu, nu, step
+
+    def snapshot_dirty(self, force_all: bool = False
+                       ) -> tuple[dict, int]:
+        """Apply-atomic copy of the dirty bucket flats; drains ``dirty``.
+
+        Returns ``({bucket_id: (p, m, v) np copies}, step)`` in wire
+        layout — the durability flush payload, no repacking. The copy
+        runs under ``state_lock`` because the fused apply DONATES the
+        flat buffers; outside the lock a snapshot could read invalidated
+        pages. ``force_all`` snapshots every owned bucket (a base
+        record) regardless of dirtiness.
+        """
+        assert self.flat, "snapshot_dirty requires the flat wire layout"
+        with self.state_lock:
+            bids = self.bucket_ids if force_all else sorted(self.dirty)
+            bids = [b for b in bids if b in self._pf]   # killed: gone
+            snap = {bid: (np.array(self._pf[bid]),
+                          np.array(self._mf[bid]),
+                          np.array(self._vf[bid])) for bid in bids}
+            self.dirty.difference_update(bids)
+            step = self.step
+        return snap, step
 
     # -- update --------------------------------------------------------------
     def _update_fn(self, params, mu, nu, grads, step, lr, scale):
@@ -260,6 +310,7 @@ class ShadowNode:
                     self._mf[bid] = m
                     self._vf[bid] = v
                 jax.block_until_ready(self._pf)
+                self.dirty.update(self.bucket_ids)
                 self.step = step
             self._record(time.perf_counter() - t0)
             return
@@ -318,6 +369,9 @@ class ShadowCluster:
         self.train_step_seen = 0
         self.max_queue_depth = 0
         self.dead_nodes: set[int] = set()
+        # optional repro.durability.DurableShadow (set by its attach());
+        # duck-typed so core never imports the durability package
+        self.durability = None
         self._queues: list[queue.Queue] = []
         self._drained: list[threading.Event] = []
         self._workers: list[threading.Thread] = []
@@ -383,6 +437,10 @@ class ShadowCluster:
         for node in self.nodes:
             node.bootstrap(params, mu, nu, step)
         self.train_step_seen = int(step)
+        if self.durability is not None:
+            # cold path: force a base flush so a full restore point exists
+            # from the moment the replica is (re-)seeded
+            self.durability.on_bootstrap(int(step))
 
     def kill_node(self, node_id: int):
         """Simulated shadow-node death: the node's partition (params + both
@@ -488,6 +546,8 @@ class ShadowCluster:
                 # on some platforms); put() precedes, so depth >= 1 here
                 self.max_queue_depth = max(self.max_queue_depth,
                                            self._pending(q))
+            if self.durability is not None:
+                self.durability.notify(step)      # queue puts only
             return
         if flats is None:
             need = {bid for node in targets for bid in node.bucket_ids}
@@ -497,6 +557,8 @@ class ShadowCluster:
             node.apply(step, lr,
                        {bid: flats[bid] for bid in node.bucket_ids},
                        grad_scale)
+        if self.durability is not None:
+            self.durability.notify(step)          # queue puts only
 
     @staticmethod
     def _pending(q: queue.Queue) -> int:
@@ -551,7 +613,10 @@ class ShadowCluster:
                 sum(len(self.nodes[n].bucket_ids) for n in dead))
             raise ShadowNodeLoss(
                 dead, {n: tuple(self.nodes[n].bucket_ids) for n in dead},
-                self._gather())
+                self._gather(),
+                total=len(dead) == self.n_nodes,
+                durable_hint=(self.durability.newest_durable()
+                              if self.durability is not None else None))
         return self._gather()
 
     def _gather(self) -> dict:
@@ -610,6 +675,8 @@ class ShadowCluster:
             per_node_apply_s=per_node)
 
     def shutdown(self):
+        if self.durability is not None:
+            self.durability.close()
         if self.async_mode:
             for q in self._queues:
                 q.put(None)

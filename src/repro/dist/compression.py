@@ -46,6 +46,39 @@ def dequantize_leaf(q, scale):
     return q.astype(jnp.float32) * scale
 
 
+def quantize_flat_stateless(bucket, flat):
+    """Stateless (no-error-feedback) int8 quantization of one wire-layout
+    flat buffer (`repro.core.buckets`).
+
+    Per-slot symmetric quantization with the SAME rounding semantics as
+    the EF path (`quantize_leaf` with a zero residual), but no residual
+    is produced or carried: callers that quantize out-of-band copies —
+    `repro.durability`'s delta flush — must never perturb a channel
+    `Compressor`'s EF state, or the shadow/trainer bit-identity the EF
+    invariant proves would silently drift. Returns ``(q, scales)``:
+    int8 payload the length of the bucket and one f32 scale per slot.
+    """
+    src = np.asarray(flat, dtype=np.float32)
+    q = np.empty(bucket.size, np.int8)
+    scales = np.empty(len(bucket.slots), np.float32)
+    for i, s in enumerate(bucket.slots):
+        sl = slice(s.offset, s.offset + s.size)
+        qi, safe, _ = quantize_leaf(src[sl], 0.0)
+        q[sl] = np.asarray(qi)
+        scales[i] = float(safe)
+    return q, scales
+
+
+def dequantize_flat_stateless(bucket, q, scales):
+    """Inverse of `quantize_flat_stateless`: f32 flat buffer."""
+    out = np.empty(bucket.size, np.float32)
+    for i, s in enumerate(bucket.slots):
+        sl = slice(s.offset, s.offset + s.size)
+        out[sl] = np.asarray(dequantize_leaf(
+            jnp.asarray(q[sl]), jnp.float32(scales[i])))
+    return out
+
+
 def init_error_feedback(tree):
     """Zero residuals matching the gradient tree."""
     return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
@@ -135,6 +168,12 @@ class Compressor:
         self.wire_bytes_total += wire
         self.raw_bytes_total += raw
         return deq
+
+    # Stateless no-EF codec entry points: same rounding, NO residual
+    # read/write — safe for out-of-band consumers (durability flush)
+    # while this instance carries a live channel's EF state.
+    quantize_flat_stateless = staticmethod(quantize_flat_stateless)
+    dequantize_flat_stateless = staticmethod(dequantize_flat_stateless)
 
     @property
     def ef(self):

@@ -1,0 +1,26 @@
+"""repro.durability — tiered differential persistence behind the shadow.
+
+The shadow fleet turns every iteration into a checkpoint, but it is
+RAM: lose the whole plane (rack power, correlated NIC failure) and the
+checkpoint is gone. This package adds the third leg of the story —
+per-node background `FlushWorker`s snapshot dirty bucket flats into
+checksummed base/delta `FlushRecord`s, write them through pluggable
+`Tier`s (local disk with atomic rename + manifest, object-store stub),
+and `restore_from_tiers` rebuilds a full consolidated checkpoint from
+the base + delta chain — all without ever adding a microsecond to the
+trainer's stall ledger. See `docs/durability.md`.
+"""
+from repro.durability.flush import DurableShadow, FlushPolicy, FlushWorker
+from repro.durability.record import FlushRecord, TornRecordError
+from repro.durability.restore import (TierRestoreError, restore_from_tiers,
+                                      restore_shards_from_tiers)
+from repro.durability.tiers import (LocalDiskTier, ManifestEntry,
+                                    ObjectStoreTier, Tier, TierPutError)
+
+__all__ = [
+    "DurableShadow", "FlushPolicy", "FlushWorker",
+    "FlushRecord", "TornRecordError",
+    "TierRestoreError", "restore_from_tiers", "restore_shards_from_tiers",
+    "LocalDiskTier", "ManifestEntry", "ObjectStoreTier", "Tier",
+    "TierPutError",
+]

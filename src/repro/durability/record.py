@@ -1,0 +1,121 @@
+"""Checksummed flush records: the durability wire format.
+
+A `FlushRecord` is one shadow node's contribution to one flush *epoch*:
+a ``base`` (every owned bucket's full flat state), a ``delta`` (only the
+buckets dirtied since the previous flush), or a ``mark`` (the node had
+nothing dirty — still written, so the epoch is provably complete without
+a coordinator journal). Payloads are the bucket *wire format*
+(`repro.core.buckets` flats) verbatim — flushing never repacks; a
+compressed delta additionally carries per-slot int8 payloads + f32
+scales from the stateless codec in `repro.dist.compression`.
+
+Serialization is self-describing and torn-write detectable: a fixed
+magic, a length-prefixed JSON header (epoch/node/step/kind + an array
+table), then the concatenated array bytes, with the payload CRC32 in
+the header. ANY truncation — mid-magic, mid-header, mid-payload — and
+any bit flip in the payload raises `TornRecordError` on read; a torn
+record is skipped, never half-applied (`repro.durability.restore` then
+falls back to the previous consistent epoch).
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MAGIC = b"RDUR1\n"
+# payload field names: raw records carry p/m/v flats; compressed deltas
+# carry int8 p/m/v plus per-slot scale vectors ps/ms/vs
+RAW_FIELDS = ("p", "m", "v")
+KINDS = ("base", "delta", "mark")
+
+
+class TornRecordError(RuntimeError):
+    """A flush record failed structural or checksum validation.
+
+    Raised for any truncation (torn write at an arbitrary byte) or
+    payload corruption. Restore treats this as "the record does not
+    exist" and falls back — a torn delta must never be half-applied.
+    """
+
+
+@dataclass(frozen=True)
+class FlushRecord:
+    """One node's flush for one epoch, in bucket wire layout."""
+
+    epoch: int
+    node: int
+    step: int
+    kind: str                       # "base" | "delta" | "mark"
+    compressed: bool = False
+    # bucket_id -> {field name -> np.ndarray}
+    payload: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.kind in KINDS, f"unknown record kind {self.kind!r}"
+
+    @property
+    def payload_nbytes(self) -> int:
+        return sum(np.asarray(a).nbytes for fields in self.payload.values()
+                   for a in fields.values())
+
+    def to_bytes(self) -> bytes:
+        """MAGIC + u32 header length + JSON header + payload blob."""
+        blobs, arrays, off = [], [], 0
+        for bid in sorted(self.payload):
+            fields = self.payload[bid]
+            for name in sorted(fields):
+                a = np.ascontiguousarray(fields[name])
+                b = a.tobytes()
+                arrays.append({"bucket": int(bid), "field": name,
+                               "dtype": str(a.dtype),
+                               "shape": list(a.shape),
+                               "offset": off, "nbytes": len(b)})
+                blobs.append(b)
+                off += len(b)
+        payload = b"".join(blobs)
+        header = {"epoch": int(self.epoch), "node": int(self.node),
+                  "step": int(self.step), "kind": self.kind,
+                  "compressed": bool(self.compressed),
+                  "payload_nbytes": len(payload),
+                  "payload_crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+                  "arrays": arrays}
+        hb = json.dumps(header, sort_keys=True).encode()
+        return MAGIC + struct.pack("<I", len(hb)) + hb + payload
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "FlushRecord":
+        """Parse + validate; raises `TornRecordError` at ANY cut point."""
+        if len(buf) < len(MAGIC) + 4:
+            raise TornRecordError(
+                f"record truncated before header ({len(buf)} bytes)")
+        if buf[:len(MAGIC)] != MAGIC:
+            raise TornRecordError("bad record magic")
+        (hlen,) = struct.unpack_from("<I", buf, len(MAGIC))
+        hstart = len(MAGIC) + 4
+        if len(buf) < hstart + hlen:
+            raise TornRecordError("record truncated inside header")
+        try:
+            header = json.loads(buf[hstart:hstart + hlen])
+        except ValueError as e:
+            raise TornRecordError(f"unparseable record header: {e}") from e
+        payload = buf[hstart + hlen:]
+        want = header.get("payload_nbytes", -1)
+        if len(payload) != want:
+            raise TornRecordError(
+                f"record truncated inside payload "
+                f"({len(payload)} of {want} bytes)")
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != header.get("payload_crc32"):
+            raise TornRecordError("record payload checksum mismatch")
+        out: dict = {}
+        for a in header["arrays"]:
+            raw = payload[a["offset"]:a["offset"] + a["nbytes"]]
+            arr = np.frombuffer(raw, dtype=np.dtype(a["dtype"])).reshape(
+                tuple(a["shape"])).copy()
+            out.setdefault(int(a["bucket"]), {})[a["field"]] = arr
+        return cls(epoch=int(header["epoch"]), node=int(header["node"]),
+                   step=int(header["step"]), kind=header["kind"],
+                   compressed=bool(header["compressed"]), payload=out)

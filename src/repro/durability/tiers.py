@@ -1,0 +1,165 @@
+"""Pluggable persistence tiers behind the shadow plane.
+
+A `Tier` stores `FlushRecord` blobs and a manifest of what it holds.
+Two implementations:
+
+* `LocalDiskTier` — records AND the manifest are written tmp-file +
+  ``os.replace`` (atomic on POSIX), so a crash mid-flush leaves either
+  the previous manifest or the new one, never a half-written entry; a
+  crash mid-record leaves a torn blob the checksum rejects on read.
+* `ObjectStoreTier` — in-memory stub for a remote object store with
+  injectable put latency (served on the flush worker thread, never the
+  trainer's) and injectable per-step failures.
+
+Both expose ``fail_steps``: a `put` for a record at one of those steps
+raises `TierPutError` — the chaos harness `TierFailure` class drives
+this to prove restore falls back across tiers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Iterable, Protocol, runtime_checkable
+
+from repro.durability.record import FlushRecord, TornRecordError
+
+MANIFEST = "manifest.json"
+
+
+class TierPutError(RuntimeError):
+    """A tier refused or failed a record write (injected or real)."""
+
+
+@dataclass(frozen=True)
+class ManifestEntry:
+    """One durable record as the manifest advertises it."""
+
+    epoch: int
+    node: int
+    step: int
+    kind: str
+    compressed: bool
+    nbytes: int
+    key: str
+
+    @classmethod
+    def for_record(cls, rec: FlushRecord, key: str, nbytes: int
+                   ) -> "ManifestEntry":
+        return cls(epoch=rec.epoch, node=rec.node, step=rec.step,
+                   kind=rec.kind, compressed=rec.compressed,
+                   nbytes=nbytes, key=key)
+
+
+@runtime_checkable
+class Tier(Protocol):
+    name: str
+
+    def put(self, rec: FlushRecord) -> ManifestEntry: ...
+    def entries(self) -> list[ManifestEntry]: ...
+    def read(self, entry: ManifestEntry) -> FlushRecord: ...
+
+
+def _record_key(rec: FlushRecord) -> str:
+    return f"rec_e{rec.epoch:08d}_n{rec.node:03d}.bin"
+
+
+class LocalDiskTier:
+    """Records on local disk with atomic rename + an atomic manifest."""
+
+    name = "local-disk"
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.fail_steps: set[int] = set()
+        self.put_bytes_total = 0
+        # one FlushWorker per shadow node writes here concurrently; the
+        # manifest update is read-modify-write and must serialize
+        self._lock = threading.Lock()
+
+    def put(self, rec: FlushRecord) -> ManifestEntry:
+        if rec.step in self.fail_steps:
+            raise TierPutError(
+                f"{self.name}: injected put failure at step {rec.step}")
+        buf = rec.to_bytes()
+        key = _record_key(rec)
+        tmp = self.root / (key + ".tmp")
+        tmp.write_bytes(buf)
+        os.replace(tmp, self.root / key)        # atomic: blob visible whole
+        entry = ManifestEntry.for_record(rec, key, len(buf))
+        with self._lock:
+            ents = self.entries()
+            ents.append(entry)
+            mtmp = self.root / (MANIFEST + ".tmp")
+            mtmp.write_text(json.dumps(
+                {"entries": [asdict(e) for e in ents]}, sort_keys=True))
+            os.replace(mtmp, self.root / MANIFEST)  # atomic: old or new
+            self.put_bytes_total += len(buf)
+        return entry
+
+    def entries(self) -> list[ManifestEntry]:
+        path = self.root / MANIFEST
+        if not path.exists():
+            return []
+        data = json.loads(path.read_text())
+        return [ManifestEntry(**e) for e in data["entries"]]
+
+    def read(self, entry: ManifestEntry) -> FlushRecord:
+        path = self.root / entry.key
+        if not path.exists():
+            raise TornRecordError(f"{self.name}: missing blob {entry.key}")
+        return FlushRecord.from_bytes(path.read_bytes())
+
+
+class ObjectStoreTier:
+    """In-memory object-store stub: injectable latency + failures.
+
+    Latency is paid on the *flush worker* thread — the trainer never
+    blocks on it, which is exactly the property the `zero-flush-stall`
+    invariant checks.
+    """
+
+    name = "object-store"
+
+    def __init__(self, latency_s: float = 0.0):
+        self.latency_s = float(latency_s)
+        self.fail_steps: set[int] = set()
+        self.put_bytes_total = 0
+        self._blobs: dict[str, bytes] = {}
+        self._entries: list[ManifestEntry] = []
+        self._lock = threading.Lock()          # concurrent worker puts
+
+    def put(self, rec: FlushRecord) -> ManifestEntry:
+        if rec.step in self.fail_steps:
+            raise TierPutError(
+                f"{self.name}: injected put failure at step {rec.step}")
+        if self.latency_s > 0:
+            time.sleep(self.latency_s)
+        buf = rec.to_bytes()
+        key = _record_key(rec)
+        entry = ManifestEntry.for_record(rec, key, len(buf))
+        with self._lock:
+            self._blobs[key] = buf
+            self._entries.append(entry)
+            self.put_bytes_total += len(buf)
+        return entry
+
+    def entries(self) -> list[ManifestEntry]:
+        with self._lock:
+            return list(self._entries)
+
+    def read(self, entry: ManifestEntry) -> FlushRecord:
+        try:
+            buf = self._blobs[entry.key]
+        except KeyError:
+            raise TornRecordError(
+                f"{self.name}: missing blob {entry.key}") from None
+        return FlushRecord.from_bytes(buf)
+
+
+def tier_names(tiers: Iterable[Tier]) -> list[str]:
+    return [t.name for t in tiers]

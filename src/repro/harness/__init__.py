@@ -18,7 +18,9 @@ from repro.harness.invariants import (REGISTRY, Invariant,       # noqa: F401
 from repro.harness.runner import (InstrumentedChannel,           # noqa: F401
                                   ScenarioResult, StepRecord, Trace,
                                   replay_bundle, run_scenario, write_bundle)
-from repro.harness.scenario import (ChannelSpec, FabricFailure,  # noqa: F401
-                                    FailureSchedule, Scenario,
-                                    ShadowDeath, repro_seed,
-                                    sample_scenario, scenario_strategy)
+from repro.harness.scenario import (ChannelSpec, DurabilitySpec,  # noqa: F401
+                                    FabricFailure, FailureSchedule,
+                                    Scenario, ShadowDeath,
+                                    ShadowPlaneLoss, TierFailure,
+                                    repro_seed, sample_scenario,
+                                    scenario_strategy)

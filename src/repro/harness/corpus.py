@@ -11,8 +11,10 @@ on a synthetic stream (fast); full-level ones run the real training loop.
 """
 from __future__ import annotations
 
-from repro.harness.scenario import (ChannelSpec, FabricFailure,
-                                    FailureSchedule, Scenario, ShadowDeath)
+from repro.harness.scenario import (ChannelSpec, DurabilitySpec,
+                                    FabricFailure, FailureSchedule,
+                                    Scenario, ShadowDeath, ShadowPlaneLoss,
+                                    TierFailure)
 
 _RAIL = dict(kind="packetized", topology="rail-optimized")
 # bucket-sharded owner routing; small buckets so 3 owners all hold shards
@@ -143,6 +145,41 @@ GOLDEN: dict[str, Scenario] = {s.name: s for s in [
         schedule=FailureSchedule(shadow_death=(
             ShadowDeath(step=2, node=1, phase="step"),
             ShadowDeath(step=4, node=2, phase="consolidate")))),
+
+    # -- durability tiers behind the shadow plane ---------------------------
+    _sc("durability-clean", seed=91, steps=5, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD),
+        durability=DurabilitySpec(enabled=True)),
+    # kill the ENTIRE shadow plane after step 4; the only way back is
+    # restore_from_tiers, and the run must still end bit-identical
+    _sc("shadow-plane-loss", seed=92, steps=6, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD),
+        durability=DurabilitySpec(enabled=True),
+        schedule=FailureSchedule(plane_loss=(ShadowPlaneLoss(step=4),))),
+    # flush cadence 2: the tiers trail the stream by one step when the
+    # plane dies at step 5, so recovery rewinds to 4 and replays
+    _sc("flush-lag", seed=93, steps=6, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD),
+        durability=DurabilitySpec(enabled=True, every_steps=2),
+        schedule=FailureSchedule(plane_loss=(ShadowPlaneLoss(step=5),))),
+    # local-disk refuses step 3's records; the object store still holds a
+    # complete epoch there and restore serves the newest point ANY tier has
+    _sc("tier-failure-fallback", seed=94, steps=5, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD),
+        durability=DurabilitySpec(enabled=True, object_store=True),
+        schedule=FailureSchedule(tier_fail=(
+            TierFailure(step=3, tier="local-disk"),))),
+    # int8 delta flushing (stateless no-EF codec) + async applies; the
+    # zero-flush-stall claim must hold on the compressed path too
+    _sc("compressed-flush", seed=95, steps=5, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256, shadow_async=True,
+        channel=ChannelSpec(**_SHARD),
+        durability=DurabilitySpec(enabled=True, compress=True,
+                                  rebase_every=2)),
 
     # -- consolidation under a wedged worker --------------------------------
     _sc("wedge-consolidate", seed=61, steps=4, shadow_async=True,

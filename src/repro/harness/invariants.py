@@ -244,7 +244,17 @@ class CheckpointContiguity(Invariant):
         if self.expected is None:
             self.expected = trace.bootstrap_step
         if rec.restored_step is not None:
-            if rec.restored_step != self.expected:
+            if rec.plane_restore:
+                # a total plane loss rewinds BOTH planes onto the tiers'
+                # newest durable step — at or behind the live stream by
+                # exactly the flush lag, never ahead of it
+                if rec.restored_step > self.expected:
+                    yield self._v(rec.step,
+                                  f"tier restore landed at "
+                                  f"{rec.restored_step}, AHEAD of the "
+                                  f"stream at {self.expected}")
+                self.expected = rec.restored_step
+            elif rec.restored_step != self.expected:
                 yield self._v(rec.step, f"restore() returned step "
                                         f"{rec.restored_step}, shadow "
                                         f"should be at {self.expected}")
@@ -467,6 +477,200 @@ class ConsolidateTimeout(Invariant):
             yield self._v(None, f"partial checkpoint at {w['partial_step']} "
                                 f"not older than the completed one at "
                                 f"{w['final_step']}")
+
+
+@register
+class ZeroFlushStall(Invariant):
+    """Durability flushing adds ZERO training stall: the flush plane runs
+    entirely on background worker threads, so no flush-named stage ever
+    appears in a send's stall decomposition or in the checkpointer's
+    stage ledger — the paper's zero-overhead claim extended through the
+    durability tiers (`repro.durability.flush`)."""
+    name = "zero-flush-stall"
+
+    FORBIDDEN = ("flush", "durability", "tier")
+
+    def applies(self, trace) -> bool:
+        return trace.scenario.durability.enabled
+
+    def _bad(self, names) -> list:
+        return sorted(n for n in names
+                      if any(f in n for f in self.FORBIDDEN))
+
+    def check_step(self, trace, rec):
+        for s in rec.sends:
+            bad = self._bad(s.parts)
+            if bad:
+                yield self._v(s.step, f"flush stage(s) {bad} booked on the "
+                                      f"training critical path")
+
+    def check_end(self, trace):
+        stages = getattr(trace.checkpointer, "stall_stages", None) or {}
+        bad = self._bad(stages)
+        if bad:
+            yield self._v(None, f"flush stage(s) {bad} in the "
+                                f"checkpointer's stall ledger")
+        dur = trace.durability
+        if dur is None or dur.epochs_started == 0:
+            yield self._v(None, "durability enabled but no flush epoch "
+                                "ever started — the claim was never "
+                                "exercised")
+
+
+@register
+class TierRestore(Invariant):
+    """Every durability tier rebuilds a full checkpoint bit-identical to
+    the trainer at that tier's newest complete epoch (its recorded lag),
+    and a total plane loss recovers through the tiers to the newest
+    flushed step, with `ShadowNodeLoss` naming the serving tier."""
+    name = "tier-restore"
+
+    def applies(self, trace) -> bool:
+        sc = trace.scenario
+        # compressed flush (or a compressed channel stream) restores are
+        # intentionally approximate — bit-identity is out of scope there
+        return (sc.durability.enabled and not sc.durability.compress
+                and sc.channel.kind != "compressed")
+
+    def check_end(self, trace):
+        from repro.durability.restore import (TierRestoreError,
+                                              restore_from_tiers)
+        dur = trace.durability
+        if dur is None:
+            yield self._v(None, "durability enabled but the runner "
+                                "attached no DurableShadow")
+            return
+        n_nodes = trace.scenario.shadow_nodes
+        for tier in trace.tiers:
+            want = dur.last_complete_step(tier.name)
+            try:
+                ckpt = restore_from_tiers([tier], trace.layout,
+                                          n_nodes=n_nodes)
+            except TierRestoreError:
+                if want is None:
+                    continue       # tier never completed an epoch: fine
+                yield self._v(None, f"tier '{tier.name}' books a complete "
+                                    f"epoch at step {want} but restore "
+                                    f"found no usable point")
+                continue
+            got = int(ckpt["step"])
+            if got != want:
+                yield self._v(None, f"tier '{tier.name}' restored step "
+                                    f"{got}, its newest complete epoch "
+                                    f"is at step {want}")
+            ref = trace.states.get(got)
+            if ref is None:
+                yield self._v(None, f"tier '{tier.name}' restored step "
+                                    f"{got}, a step the trainer never "
+                                    f"executed")
+                continue
+            bad = tree_mismatch(ckpt, ref)
+            if bad:
+                yield self._v(None, f"tier '{tier.name}' restore@{got} != "
+                                    f"trainer@{got}: {bad}")
+        ev = trace.scenario.durability.every_steps
+        for pl in trace.plane_losses:
+            if not pl["total"]:
+                yield self._v(pl["step"], "whole-plane kill did not "
+                                          "surface as a total "
+                                          "ShadowNodeLoss")
+            hint = pl["durable_hint"]
+            if hint is None:
+                yield self._v(pl["step"], "total loss carried no durable "
+                                          "hint despite attached tiers")
+            elif pl["restored_step"] != hint[1]:
+                yield self._v(pl["step"],
+                              f"restore landed at {pl['restored_step']} "
+                              f"but the loss named tier '{hint[0]}' at "
+                              f"step {hint[1]}")
+            # the drill drains flushes before the kill, so the durable
+            # point trails the kill step by exactly the cadence remainder
+            if pl["restored_step"] != (pl["step"] // ev) * ev:
+                yield self._v(pl["step"],
+                              f"restored step {pl['restored_step']} != "
+                              f"newest flushed step "
+                              f"{(pl['step'] // ev) * ev} "
+                              f"(cadence every_steps={ev})")
+
+
+class _TornTier:
+    """Read-through tier proxy serving ONE record as a torn write (its
+    byte stream cut mid-payload) — the torn-delta invariant's probe."""
+
+    def __init__(self, inner, torn_key: str):
+        self.inner = inner
+        self.torn_key = torn_key
+        self.name = inner.name
+
+    def entries(self):
+        return self.inner.entries()
+
+    def read(self, entry):
+        from repro.durability.record import FlushRecord
+        rec = self.inner.read(entry)
+        if entry.key != self.torn_key:
+            return rec
+        raw = rec.to_bytes()
+        return FlushRecord.from_bytes(raw[:len(raw) // 2])  # raises Torn...
+
+
+@register
+class TornDeltaDetection(Invariant):
+    """A flush record cut anywhere mid-write is rejected by its checksum
+    — never silently half-applied — and restore falls back past it to an
+    older complete epoch that is still bit-identical to the trainer."""
+    name = "torn-delta"
+
+    def applies(self, trace) -> bool:
+        sc = trace.scenario
+        return (sc.durability.enabled and not sc.durability.compress
+                and sc.channel.kind != "compressed")
+
+    def check_end(self, trace):
+        from repro.durability.record import FlushRecord, TornRecordError
+        from repro.durability.restore import (TierRestoreError,
+                                              restore_from_tiers)
+        dur = trace.durability
+        if dur is None or not trace.tiers:
+            return
+        tier = trace.tiers[0]            # the local-disk tier
+        target = None                    # newest payload-carrying record
+        for e in sorted(tier.entries(), key=lambda e: (e.epoch, e.node)):
+            if e.kind in ("base", "delta"):
+                target = e
+        if target is None:
+            return
+        raw = tier.read(target).to_bytes()
+        try:
+            FlushRecord.from_bytes(raw[:len(raw) // 2])
+            yield self._v(None, f"record {target.key} truncated to half "
+                                f"parsed cleanly — torn write undetected")
+            return
+        except TornRecordError:
+            pass
+        try:
+            ckpt = restore_from_tiers([_TornTier(tier, target.key)],
+                                      trace.layout,
+                                      n_nodes=trace.scenario.shadow_nodes)
+        except TierRestoreError:
+            if target.kind == "delta":
+                # a torn DELTA must only cost its own epoch — an older
+                # complete one (the base, at minimum) must still serve
+                yield self._v(None, f"torn delta {target.key} made the "
+                                    f"whole tier unrestorable instead of "
+                                    f"falling back one epoch")
+            return
+        got = int(ckpt["step"])
+        ref = trace.states.get(got)
+        if ref is None:
+            yield self._v(None, f"fallback restore past torn "
+                                f"{target.key} landed at step {got}, a "
+                                f"step the trainer never executed")
+            return
+        bad = tree_mismatch(ckpt, ref)
+        if bad:
+            yield self._v(None, f"fallback restore past torn "
+                                f"{target.key} diverged: {bad}")
 
 
 def select(trace) -> list[Invariant]:

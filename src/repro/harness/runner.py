@@ -21,6 +21,7 @@ bit-identically (tests/test_harness.py replays bundles as pytest cases).
 from __future__ import annotations
 
 import json
+import tempfile
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -126,6 +127,7 @@ class StepRecord:
     dead_nodes: tuple = ()               # dead owners at this consolidate
     resync: bool = False                 # healed via full-state copy
     restored_step: Optional[int] = None  # a restore() ran just before this
+    plane_restore: bool = False          # ...and it came from the tiers
     first_seen: bool = True              # False = replay after a recovery
     sends: list = field(default_factory=list)
     polls: list = field(default_factory=list)
@@ -150,6 +152,13 @@ class Trace:
         self.compressor = None
         self.wedge: Optional[dict] = None
         self.shadow_partition: Optional[dict] = None  # node -> buckets/leaves
+        self.layout = None                   # the run's BucketLayout
+        self.durability = None               # DurableShadow when enabled
+        self.tiers: list = []                # its Tier objects
+        self.plane_losses: list[dict] = []   # total-loss drills, as observed
+        self.dur_tmpdir = None               # local-disk tier root; cleaned
+        #                                      by run_scenario AFTER end-of-
+        #                                      run invariants read the tier
         self.stats = None
         self.violations: list[inv.Violation] = []
         # steps where injected failures make fabric-level loss legitimate.
@@ -304,7 +313,31 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
 
     shadow = ShadowCluster(layout, opt, n_nodes=sc.shadow_nodes,
                            async_mode=sc.shadow_async)
+    trace.layout = layout
+    dur = None
+    if sc.durability.enabled:
+        from repro.durability import (DurableShadow, FlushPolicy,
+                                      LocalDiskTier, ObjectStoreTier)
+
+        # attach BEFORE bootstrap so the seed replica gets its base epoch
+        trace.dur_tmpdir = tempfile.TemporaryDirectory(prefix="repro-dur-")
+        tiers = [LocalDiskTier(trace.dur_tmpdir.name)]
+        if sc.durability.object_store:
+            tiers.append(ObjectStoreTier(
+                latency_s=sc.durability.object_latency_s))
+        for tf in sc.schedule.tier_fail:
+            for t in tiers:
+                if t.name == tf.tier:
+                    t.fail_steps.add(tf.step)
+        dur = DurableShadow(tiers, FlushPolicy(
+            every_steps=sc.durability.every_steps,
+            compress=sc.durability.compress,
+            rebase_every=sc.durability.rebase_every)).attach(shadow)
+        trace.durability, trace.tiers = dur, tiers
     shadow.bootstrap(params, zeros, zeros, 0)
+    # the seed replica is a state too: a tier restore may land on it
+    trace.states.setdefault(
+        0, {"params": params, "mu": zeros, "nu": zeros, "step": 0})
     trace.shadow_partition = {
         n.node_id: {"buckets": list(n.bucket_ids),
                     "leaves": list(n._leaves)} for n in shadow.nodes}
@@ -325,7 +358,9 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
     state = as_state(params, zeros, zeros, 0)
     apply_fn = jax.jit(lambda s, g: apply_updates(s, g, opt, sc.lr))
     pending_restore: Optional[int] = None
+    pending_plane = False
     fails = set(sc.schedule.train_fail_steps)
+    planes = {p.step for p in sc.schedule.plane_loss}
     last_ckpt = None
     step, executed = 0, 0
     try:
@@ -363,6 +398,10 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
             stall = ck.on_step(StepEvent(
                 step=nxt, grads=grads, lr=sc.lr,
                 state_fn=(lambda c=ckpt: c) if sc.resync else None))
+            if dur is not None:
+                # settle this step's flush epoch (harness time, never the
+                # trainer's) so the invariants see the tiers as of step nxt
+                dur.drain()
 
             rec = StepRecord(step=nxt, stall=stall)
             rec.resync = len(ck.resyncs) > before[2]
@@ -370,6 +409,7 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
             rec.applied = ck.n_checkpoints > before[0] and not rec.resync
             rec.partial_applied = len(ck.partial_steps) > before[3]
             rec.restored_step, pending_restore = pending_restore, None
+            rec.plane_restore, pending_plane = pending_plane, False
             rec.sends, rec.polls = chan.take_sends(), chan.take_polls()
             for d in deaths:            # phase "consolidate": dies between
                 if d.phase == "consolidate":    # the apply and the gather
@@ -412,9 +452,43 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                 rec.state = None            # already kept in trace.states
             last_ckpt = ckpt
             step = nxt
+            if nxt in planes:       # total shadow-plane loss AFTER the step
+                planes.discard(nxt)
+                from repro.durability.restore import restore_from_tiers
+                dur.drain()         # everything notified so far is durable
+                for n in shadow.nodes:
+                    chan.kill_shadow_node(n.node_id)
+                    shadow.kill_node(n.node_id)
+                try:
+                    shadow.consolidate()
+                    raise RuntimeError(f"{sc.name}: the whole plane is dead "
+                                       f"but consolidate served a checkpoint")
+                except ShadowNodeLoss as e:
+                    trace.plane_losses.append({
+                        "step": nxt, "total": bool(e.total),
+                        "durable_hint": e.durable_hint,
+                        "dead_nodes": sorted(e.dead_nodes)})
+                restored = restore_from_tiers(dur.tiers, layout,
+                                              n_nodes=sc.shadow_nodes)
+                trace.plane_losses[-1]["restored_step"] = int(restored["step"])
+                # both planes rewind to the newest durable step: the trainer
+                # resumes there and the shadow re-seeds from the same state
+                # (bootstrap revives the dead nodes and cuts a fresh base)
+                state = as_state(restored["params"], restored["mu"],
+                                 restored["nu"], restored["step"])
+                shadow.bootstrap(restored["params"], restored["mu"],
+                                 restored["nu"], int(restored["step"]))
+                chan.revive_all()
+                ck._desynced = ck._dead_desynced = False
+                pending_restore = int(restored["step"])
+                pending_plane = True
+                step = int(restored["step"])
         trace.final = last_ckpt
     finally:
         chan.close()
+        if dur is not None:
+            dur.drain()
+            dur.close()             # idempotent vs shutdown()'s own close
         if sc.shadow_async:
             shadow.shutdown()
 
@@ -533,8 +607,8 @@ def run_scenario(scenario: Scenario, *, bundle_dir=None) -> ScenarioResult:
         prev = _obs.install(Observability(
             MetricsRegistry(enabled=False),
             Tracer(maxlen=512)))
+    trace = Trace(scenario)
     try:
-        trace = Trace(scenario)
         engine = _Engine(trace)
         if scenario.level == "channel":
             _run_channel(scenario, trace, engine)
@@ -546,6 +620,10 @@ def run_scenario(scenario: Scenario, *, bundle_dir=None) -> ScenarioResult:
                                 trace=trace)
         result.trace_export = _obs.get().tracer.export()
     finally:
+        # the end-of-run invariants read the disk tier — drop it only now
+        if trace.dur_tmpdir is not None:
+            trace.dur_tmpdir.cleanup()
+            trace.dur_tmpdir = None
         if own_session:
             _obs.install(prev)
     if bundle_dir is not None and result.violations:

@@ -129,6 +129,50 @@ class ShadowDeath:
 
 
 @dataclass(frozen=True)
+class ShadowPlaneLoss:
+    """Kill the ENTIRE shadow plane after ``step`` applied (rack power
+    loss, correlated shadow-NIC failure, operator error).
+
+    Every node dies at once — consolidation raises
+    `ShadowNodeLoss(total=True)`, there is no surviving partial to merge,
+    and the ONLY way back is `repro.durability.restore_from_tiers`: the
+    runner restores from the newest flushed epoch, rewinds the trainer
+    onto it, re-seeds a replacement fleet, and replays. Requires
+    ``Scenario.durability.enabled``.
+    """
+    step: int
+
+
+@dataclass(frozen=True)
+class TierFailure:
+    """Injected durability-tier write failure: every flush record for
+    ``step`` raises `TierPutError` on the named tier (the record is still
+    written to the OTHER tiers — restore falls back across tiers).
+    """
+    step: int
+    tier: str = "local-disk"           # local-disk | object-store
+
+
+@dataclass(frozen=True)
+class DurabilitySpec:
+    """The persistence tiers behind the scenario's shadow plane.
+
+    ``enabled`` attaches a `repro.durability.DurableShadow` (a
+    `LocalDiskTier` in a run-scoped tempdir, plus an `ObjectStoreTier`
+    stub when ``object_store``) with a
+    `FlushPolicy(every_steps, compress, rebase_every)`. The runner drains
+    flushes between steps so tier lag is deterministic:
+    ``every_steps - 1`` at worst.
+    """
+    enabled: bool = False
+    every_steps: int = 1
+    compress: bool = False
+    rebase_every: int = 4
+    object_store: bool = False
+    object_latency_s: float = 0.0
+
+
+@dataclass(frozen=True)
 class FailureSchedule:
     """Everything that goes wrong during one scenario.
 
@@ -143,12 +187,18 @@ class FailureSchedule:
       step so consolidation hits its deadline (`ConsolidationTimeout`
       drill); requires an async shadow cluster. ``wedge_release_s`` is how
       long the worker stays wedged.
+    * ``plane_loss`` — `ShadowPlaneLoss`: the whole shadow plane dies at
+      once; recovery goes through the durability tiers.
+    * ``tier_fail`` — `TierFailure`: a tier refuses one step's flush
+      records (restore must fall back to another tier).
     """
     train_fail_steps: tuple[int, ...] = ()
     fabric: tuple[FabricFailure, ...] = ()
     shadow_death: tuple[ShadowDeath, ...] = ()
     wedge_node: int | None = None
     wedge_release_s: float = 1.5
+    plane_loss: tuple[ShadowPlaneLoss, ...] = ()
+    tier_fail: tuple[TierFailure, ...] = ()
 
     def failures_at(self) -> dict:
         """The fabric schedule in `PacketizedChannel(failures_at=...)`
@@ -222,6 +272,7 @@ class Scenario:
     ckpt_freq: int = 1
     channel: ChannelSpec = field(default_factory=ChannelSpec)
     schedule: FailureSchedule = field(default_factory=FailureSchedule)
+    durability: DurabilitySpec = field(default_factory=DurabilitySpec)
     invariants: tuple[str, ...] = ()
 
     # -- construction helpers -------------------------------------------------
@@ -284,6 +335,51 @@ class Scenario:
             if self.shadow_nodes < 2:
                 raise ValueError(f"{self.name}: shadow_death needs >= 2 "
                                  f"shadow nodes (someone must survive)")
+        if self.durability.enabled:
+            if self.level != "channel":
+                raise ValueError(f"{self.name}: durability tiers are "
+                                 f"channel-level scenarios")
+            if self.durability.every_steps < 1:
+                raise ValueError(f"{self.name}: durability.every_steps "
+                                 f"must be >= 1")
+        if self.schedule.plane_loss:
+            if not self.durability.enabled:
+                raise ValueError(
+                    f"{self.name}: plane_loss without durability tiers is "
+                    f"unrecoverable — enable Scenario.durability")
+            if not self.channel.sharded:
+                raise ValueError(f"{self.name}: plane_loss drills drive a "
+                                 f"sharded channel (per-owner routing)")
+            if self.schedule.shadow_death or self.schedule.wedge_node \
+                    is not None or self.schedule.train_fail_steps:
+                raise ValueError(
+                    f"{self.name}: plane_loss cannot combine with "
+                    f"shadow_death / wedge / train_fail drills")
+            if self.durability.compress:
+                raise ValueError(
+                    f"{self.name}: plane_loss needs raw (compress=False) "
+                    f"flushes — a lossy restore cannot resume the trainer "
+                    f"bit-identically")
+            for p in self.schedule.plane_loss:
+                if not 1 <= p.step <= self.steps:
+                    raise ValueError(f"{self.name}: plane_loss step "
+                                     f"{p.step} outside 1..{self.steps}")
+        if self.schedule.tier_fail:
+            if not self.durability.enabled:
+                raise ValueError(f"{self.name}: tier_fail needs "
+                                 f"durability tiers enabled")
+            for t in self.schedule.tier_fail:
+                if t.tier not in ("local-disk", "object-store"):
+                    raise ValueError(f"{self.name}: unknown tier "
+                                     f"{t.tier!r}")
+                if t.tier == "object-store" \
+                        and not self.durability.object_store:
+                    raise ValueError(
+                        f"{self.name}: tier_fail targets object-store but "
+                        f"durability.object_store is off")
+                if not 1 <= t.step <= self.steps:
+                    raise ValueError(f"{self.name}: tier_fail step "
+                                     f"{t.step} outside 1..{self.steps}")
         if self.checkpointer != "checkmate" and self.level == "channel":
             raise ValueError(f"{self.name}: channel-level scenarios drive "
                              f"a CheckmateCheckpointer")
@@ -320,7 +416,12 @@ class Scenario:
             for f in sched.get("fabric", ()))
         sched["shadow_death"] = tuple(
             ShadowDeath(**s) for s in sched.get("shadow_death", ()))
+        sched["plane_loss"] = tuple(
+            ShadowPlaneLoss(**p) for p in sched.get("plane_loss", ()))
+        sched["tier_fail"] = tuple(
+            TierFailure(**t) for t in sched.get("tier_fail", ()))
         d["schedule"] = FailureSchedule(**sched)
+        d["durability"] = DurabilitySpec(**d.get("durability", {}))
         d["invariants"] = tuple(d.get("invariants", ()))
         return cls(**d)
 
@@ -408,19 +509,52 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
                 node=int(rng.integers(0, shadow_nodes)),
                 phase=str(rng.choice(["step", "consolidate"]))),)
 
+    # draw order matters: these were the Scenario(...) argument draws
+    # before durability existed — new draws must append strictly AFTER
+    # them so every pre-existing seed expands to the same scenario fields
+    n_leaves = int(rng.integers(2, 5))
+    cap_bytes = int(rng.choice([1024, 4096, 1 << 16]))
+    resync = bool(rng.random() < 0.5)
+    shadow_async = bool(level == "channel" and rng.random() < 0.25)
+
+    durability = DurabilitySpec()
+    plane_loss: tuple[ShadowPlaneLoss, ...] = ()
+    tier_fail: tuple[TierFailure, ...] = ()
+    if level == "channel" and spec.sharded and rng.random() < 0.5:
+        obj = bool(rng.random() < 0.5)
+        durability = DurabilitySpec(
+            enabled=True,
+            every_steps=int(rng.choice([1, 1, 2])),
+            compress=bool(rng.random() < 0.25),
+            rebase_every=int(rng.choice([2, 4])),
+            object_store=obj)
+        if (not fabric and not deaths and not train_fails
+                and steps >= 2 and rng.random() < 0.5):
+            plane_loss = (ShadowPlaneLoss(
+                step=int(rng.integers(2, steps + 1))),)
+            if durability.compress:       # lossy restore can't resume
+                durability = dataclasses.replace(durability,
+                                                 compress=False)
+        if obj and rng.random() < 0.3:
+            tier_fail = (TierFailure(step=int(rng.integers(1, steps + 1)),
+                                     tier="local-disk"),)
+
     return Scenario(
         name=f"sampled-{seed}", level=level, seed=int(seed) & 0x7FFFFFFF,
         steps=steps,
-        n_leaves=int(rng.integers(2, 5)),
-        cap_bytes=int(rng.choice([1024, 4096, 1 << 16])),
-        resync=bool(rng.random() < 0.5),
+        n_leaves=n_leaves,
+        cap_bytes=cap_bytes,
+        resync=resync,
         optimizer=optimizer, momentum=momentum,
         shadow_nodes=shadow_nodes,
-        shadow_async=bool(level == "channel" and rng.random() < 0.25),
+        shadow_async=shadow_async,
         channel=spec,
         schedule=FailureSchedule(train_fail_steps=train_fails,
                                  fabric=tuple(fabric),
-                                 shadow_death=deaths),
+                                 shadow_death=deaths,
+                                 plane_loss=plane_loss,
+                                 tier_fail=tier_fail),
+        durability=durability,
     ).validate()
 
 

@@ -1,0 +1,501 @@
+"""repro.durability: tiered differential persistence behind the shadow plane.
+
+Pins the subsystem's load-bearing claims:
+
+* `FlushRecord` round-trips bit-exactly and EVERY truncation or payload
+  corruption raises `TornRecordError` (checksummed wire format);
+* tiers serialize concurrent worker puts (manifest never drops entries);
+* background flushing + `restore_from_tiers` rebuild a checkpoint
+  BIT-identical to `consolidate()` across optimizers x sharded
+  assignments x sync/async mode (property test);
+* a crash mid-flush (record cut at a random byte) is detected and
+  restore falls back to the previous durable epoch, still bit-identical;
+* the stateless no-EF codec never perturbs a channel `Compressor`'s
+  error-feedback state (flushing is invisible to the gradient stream);
+* `ShadowNodeLoss.total` names the newest durable tier;
+* `recover(tiers=...)` survives both partial and total plane loss;
+* the costmodel's flush/disk budget terms size the fleet.
+"""
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core.buckets import layout_for_tree
+from repro.core.channel import (CompressedChannel, InProcessChannel,
+                                StepEvent)
+from repro.core.shadow import ShadowCluster, ShadowNodeLoss
+from repro.dist.compression import (Compressor, dequantize_flat_stateless,
+                                    quantize_flat_stateless)
+from repro.durability import (DurableShadow, FlushPolicy, FlushRecord,
+                              LocalDiskTier, ManifestEntry, ObjectStoreTier,
+                              Tier, TierPutError, TierRestoreError,
+                              TornRecordError, restore_from_tiers,
+                              restore_shards_from_tiers)
+from repro.optim import UPDATE_FNS, OptimizerConfig
+
+
+def _tree(n_leaves=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"leaf{k}": rng.standard_normal((6 + 2 * k, 5))
+            .astype(np.float32) for k in range(n_leaves)}
+
+
+def _grads(params, step, seed=0):
+    rng = np.random.default_rng(1_000_003 * (seed + 1) + step)
+    return {k: (rng.standard_normal(v.shape) * 0.01).astype(np.float32)
+            for k, v in params.items()}
+
+
+def _drive(root, *, opt_name="adamw", n_nodes=2, async_mode=False,
+           every=1, compress=False, rebase=3, steps=5, seed=0,
+           object_store=False, fail_steps=(), assignment=None):
+    """Drive a durable shadow cluster over a synthetic stream.
+
+    Returns ``(shadow, dur, tiers, layout, states)`` with ``states`` the
+    per-step consolidated checkpoints (the bit-identity references).
+    The caller owns shutdown.
+    """
+    params = _tree(seed=seed)
+    layout = layout_for_tree(params, cap_bytes=600)
+    opt = OptimizerConfig(name=opt_name, lr=1e-3)
+    shadow = ShadowCluster(layout, opt, n_nodes=n_nodes,
+                           async_mode=async_mode, assignment=assignment)
+    tiers = [LocalDiskTier(root)]
+    if object_store:
+        tiers.append(ObjectStoreTier())
+    for s in fail_steps:
+        tiers[0].fail_steps.add(s)
+    dur = DurableShadow(tiers, FlushPolicy(
+        every_steps=every, compress=compress,
+        rebase_every=rebase)).attach(shadow)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    chan = InProcessChannel()
+    chan.open(layout)
+    states = {}
+    for step in range(1, steps + 1):
+        chan.send(StepEvent(step=step, grads=_grads(params, step, seed),
+                            lr=1e-3))
+        for d in chan.poll():
+            shadow.on_delivery(d)
+        dur.drain()
+        states[step] = shadow.consolidate(timeout=60)
+    chan.close()
+    return shadow, dur, tiers, layout, states
+
+
+def _payload_entries(tier):
+    return [e for e in sorted(tier.entries(), key=lambda e: (e.epoch, e.node))
+            if e.kind in ("base", "delta")]
+
+
+# -- record wire format -------------------------------------------------------
+
+def _record():
+    rng = np.random.default_rng(7)
+    return FlushRecord(
+        epoch=3, node=1, step=12, kind="delta", compressed=False,
+        payload={0: {"p": rng.standard_normal(40).astype(np.float32),
+                     "m": rng.standard_normal(40).astype(np.float32),
+                     "v": rng.standard_normal(40).astype(np.float32)},
+                 2: {"p": rng.standard_normal(9).astype(np.float32),
+                     "m": rng.standard_normal(9).astype(np.float32),
+                     "v": rng.standard_normal(9).astype(np.float32)}})
+
+
+def test_record_round_trips_bit_exactly():
+    rec = _record()
+    out = FlushRecord.from_bytes(rec.to_bytes())
+    assert (out.epoch, out.node, out.step, out.kind, out.compressed) == \
+        (rec.epoch, rec.node, rec.step, rec.kind, rec.compressed)
+    assert set(out.payload) == set(rec.payload)
+    for bid in rec.payload:
+        for f in ("p", "m", "v"):
+            a, b = rec.payload[bid][f], out.payload[bid][f]
+            assert a.dtype == b.dtype and np.array_equal(a, b)
+
+
+def test_every_truncation_is_torn():
+    """ANY strict prefix of a record — cut in the magic, the header, or
+    the payload — fails validation; no cut point parses as a shorter but
+    valid record."""
+    raw = _record().to_bytes()
+    for cut in range(len(raw)):
+        with pytest.raises(TornRecordError):
+            FlushRecord.from_bytes(raw[:cut])
+
+
+def test_payload_corruption_is_torn():
+    raw = bytearray(_record().to_bytes())
+    raw[-3] ^= 0xFF                         # flip a payload byte: crc32
+    with pytest.raises(TornRecordError):
+        FlushRecord.from_bytes(bytes(raw))
+
+
+def test_mark_record_has_no_payload_bytes():
+    rec = FlushRecord(epoch=0, node=0, step=4, kind="mark")
+    assert rec.payload_nbytes == 0
+    out = FlushRecord.from_bytes(rec.to_bytes())
+    assert out.kind == "mark" and out.payload == {}
+
+
+# -- tiers --------------------------------------------------------------------
+
+def test_local_disk_tier_put_read_manifest(tmp_path):
+    tier = LocalDiskTier(tmp_path)
+    rec = _record()
+    entry = tier.put(rec)
+    assert isinstance(entry, ManifestEntry)
+    assert tier.entries() == [entry]
+    out = tier.read(entry)
+    assert out.step == rec.step
+    assert isinstance(tier, Tier)           # structural protocol
+    assert isinstance(ObjectStoreTier(), Tier)
+
+
+def test_tier_injected_failure(tmp_path):
+    tier = LocalDiskTier(tmp_path)
+    tier.fail_steps.add(12)
+    with pytest.raises(TierPutError):
+        tier.put(_record())                 # _record() is at step 12
+    assert tier.entries() == []
+
+
+def test_concurrent_puts_never_drop_manifest_entries(tmp_path):
+    """Regression: per-node flush workers put concurrently; the manifest
+    read-modify-write must serialize or entries vanish."""
+    tier = LocalDiskTier(tmp_path)
+    n_threads, n_each = 4, 12
+
+    def work(node):
+        for i in range(n_each):
+            tier.put(FlushRecord(epoch=i, node=node, step=i, kind="mark"))
+
+    ts = [threading.Thread(target=work, args=(n,)) for n in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(tier.entries()) == n_threads * n_each
+
+
+def test_torn_blob_on_disk_is_rejected(tmp_path):
+    tier = LocalDiskTier(tmp_path)
+    entry = tier.put(_record())
+    path = tmp_path / entry.key
+    raw = path.read_bytes()
+    path.write_bytes(raw[:len(raw) // 2])   # crash mid-write
+    with pytest.raises(TornRecordError):
+        tier.read(entry)
+
+
+# -- flush + restore bit-identity (the tentpole property) ---------------------
+
+@given(st.sampled_from(sorted(UPDATE_FNS)), st.sampled_from([1, 3]),
+       st.sampled_from([False, True]), st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_restore_bit_identical_to_consolidate(opt_name, n_nodes, async_mode,
+                                              aseed):
+    """Raw-policy restore == consolidate() bit for bit, across optimizers
+    x random sharded bucket assignments x sync/async apply."""
+    root = tempfile.mkdtemp(prefix="repro-dur-")  # fallback @given: no fixtures
+    params = _tree()
+    layout = layout_for_tree(params, cap_bytes=600)
+    rng = np.random.default_rng(aseed)
+    assignment = {b.bucket_id: int(rng.integers(0, n_nodes))
+                  for b in layout.buckets}
+    shadow, dur, tiers, layout, states = _drive(
+        root, opt_name=opt_name, n_nodes=n_nodes, async_mode=async_mode,
+        assignment=assignment, steps=4)
+    try:
+        assert dur.last_complete_step("local-disk") == 4
+        ckpt = restore_from_tiers(tiers, layout, n_nodes=n_nodes)
+        assert ckpt["step"] == 4
+        ref = states[4]
+        for part in ("params", "mu", "nu"):
+            assert set(ckpt[part]) == set(ref[part])
+            for k in ckpt[part]:
+                assert np.array_equal(ckpt[part][k], ref[part][k]), \
+                    (part, k, opt_name)
+    finally:
+        shadow.shutdown()
+
+
+def test_flush_cadence_bounds_tier_lag(tmp_path):
+    """every_steps=2: only even steps open epochs, so the durable point
+    trails the stream by the cadence remainder."""
+    shadow, dur, tiers, layout, states = _drive(tmp_path, every=2, steps=5)
+    try:
+        assert dur.last_complete_step("local-disk") == 4
+        assert dur.newest_durable() == ("local-disk", 4)
+        ckpt = restore_from_tiers(tiers, layout, n_nodes=2)
+        assert ckpt["step"] == 4
+        for k, v in ckpt["params"].items():
+            assert np.array_equal(v, states[4]["params"][k])
+    finally:
+        shadow.shutdown()
+
+
+def test_tier_failure_falls_back_to_other_tier(tmp_path):
+    """local-disk refuses step 3; the object store still holds it, and
+    restore serves the newest point ANY tier has."""
+    shadow, dur, tiers, layout, states = _drive(
+        tmp_path, object_store=True, fail_steps=(5,), steps=5)
+    try:
+        assert dur.put_failures > 0
+        assert dur.last_complete_step("local-disk") == 4
+        assert dur.last_complete_step("object-store") == 5
+        assert dur.newest_durable() == ("object-store", 5)
+        ckpt = restore_from_tiers(tiers, layout, n_nodes=2)
+        assert ckpt["step"] == 5            # newest across ALL tiers
+        for k, v in ckpt["params"].items():
+            assert np.array_equal(v, states[5]["params"][k])
+    finally:
+        shadow.shutdown()
+
+
+def test_restore_raises_when_no_tier_serves(tmp_path):
+    layout = layout_for_tree(_tree(), cap_bytes=600)
+    with pytest.raises(TierRestoreError):
+        restore_from_tiers([LocalDiskTier(tmp_path)], layout)
+
+
+def test_compressed_deltas_shrink_and_stay_close(tmp_path):
+    """int8 delta flushing: far fewer bytes than raw, and the restore
+    tracks the live state within the quantization budget (bases re-anchor
+    exactly every rebase_every cycles)."""
+    shadow, dur, tiers, layout, states = _drive(
+        tmp_path, compress=True, rebase=10, steps=4)
+    try:
+        ents = tiers[0].entries()
+        base_total = sum(e.nbytes for e in ents if e.kind == "base")
+        epochs = {e.epoch for e in ents if e.kind == "delta"}
+        assert epochs
+        for ep in epochs:                   # int8 epoch < one f32 base sweep
+            delta_total = sum(e.nbytes for e in ents
+                              if e.kind == "delta" and e.epoch == ep)
+            assert 0 < delta_total < base_total
+        ckpt = restore_from_tiers(tiers, layout, n_nodes=2)
+        assert ckpt["step"] == 4
+        for k, v in ckpt["params"].items():
+            ref = states[4]["params"][k]
+            assert np.allclose(v, ref, atol=1e-2), k
+    finally:
+        shadow.shutdown()
+
+
+# -- crash mid-flush (satellite: torn-delta property) -------------------------
+
+@given(st.sampled_from(sorted(UPDATE_FNS)), st.sampled_from([False, True]),
+       st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_crash_mid_flush_falls_back_bit_identical(opt_name, async_mode,
+                                                  cut_seed):
+    """Cut the newest on-disk record at a random byte (a crash mid-write,
+    bypassing the atomic rename). The checksum rejects the torn blob and
+    restore falls back to the previous epoch — bit-identical to the
+    trainer at that older step. The property holds across optimizers and
+    sync/async apply."""
+    root = tempfile.mkdtemp(prefix="repro-dur-")  # fallback @given: no fixtures
+    shadow, dur, tiers, layout, states = _drive(
+        root, opt_name=opt_name, async_mode=async_mode, steps=4,
+        rebase=100)                          # no rebase: deltas all the way
+    try:
+        tier = tiers[0]
+        newest = _payload_entries(tier)[-1]
+        assert newest.kind == "delta" and newest.step == 4
+        path = tier.root / newest.key
+        raw = path.read_bytes()
+        cut = int(np.random.default_rng(cut_seed).integers(0, len(raw)))
+        path.write_bytes(raw[:cut])
+        ckpt = restore_from_tiers(tiers, layout, n_nodes=2)
+        assert ckpt["step"] == 3             # previous durable epoch
+        ref = states[3]
+        for part in ("params", "mu", "nu"):
+            for k in ckpt[part]:
+                assert np.array_equal(ckpt[part][k], ref[part][k]), (part, k)
+    finally:
+        shadow.shutdown()
+
+
+# -- the stateless no-EF codec (satellite) ------------------------------------
+
+def test_stateless_codec_error_bounded_per_slot():
+    params = _tree()
+    layout = layout_for_tree(params, cap_bytes=600)
+    b = layout.buckets[0]
+    rng = np.random.default_rng(0)
+    flat = rng.standard_normal(b.size).astype(np.float32)
+    q, scales = quantize_flat_stateless(b, flat)
+    assert q.dtype == np.int8 and q.shape == (b.size,)
+    assert scales.dtype == np.float32 and len(scales) == len(b.slots)
+    deq = dequantize_flat_stateless(b, q, scales)
+    for i, sl in enumerate(b.slots):
+        s = slice(sl.offset, sl.offset + sl.size)
+        assert np.max(np.abs(deq[s] - flat[s])) <= scales[i] / 2 + 1e-7
+    assert Compressor.quantize_flat_stateless is not None  # exposed on API
+
+
+def test_flushing_never_perturbs_channel_error_feedback(tmp_path):
+    """Satellite regression: the SAME compressed-channel stream, with and
+    without compressed flushing attached, leaves the channel Compressor's
+    EF residuals and the shadow state bit-identical — the flush plane is
+    invisible to the gradient stream."""
+    def run(flush: bool, root):
+        params = _tree()
+        layout = layout_for_tree(params, cap_bytes=600)
+        shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2)
+        if flush:
+            DurableShadow([LocalDiskTier(root)],
+                          FlushPolicy(compress=True,
+                                      rebase_every=3)).attach(shadow)
+        zeros = {k: np.zeros_like(v) for k, v in params.items()}
+        shadow.bootstrap(params, zeros, zeros, 0)
+        chan = CompressedChannel(InProcessChannel())
+        chan.open(layout)
+        for step in range(1, 5):
+            chan.send(StepEvent(step=step, grads=_grads(params, step),
+                                lr=1e-3))
+            for d in chan.poll():
+                shadow.on_delivery(d)
+        if flush:
+            shadow.durability.drain()
+        ckpt = shadow.consolidate(timeout=60)
+        ef = {k: np.asarray(v) for k, v in chan.compressor.ef.items()}
+        chan.close()
+        shadow.shutdown()
+        return ckpt, ef
+
+    ck_a, ef_a = run(False, tmp_path / "a")
+    ck_b, ef_b = run(True, tmp_path / "b")
+    assert set(ef_a) == set(ef_b)
+    for k in ef_a:
+        assert np.array_equal(ef_a[k], ef_b[k]), f"EF[{k}] perturbed"
+    for part in ("params", "mu", "nu"):
+        for k in ck_a[part]:
+            assert np.array_equal(ck_a[part][k], ck_b[part][k]), (part, k)
+
+
+# -- ShadowNodeLoss names the durable tier (satellite) ------------------------
+
+def test_total_loss_names_newest_durable_tier(tmp_path):
+    shadow, dur, tiers, layout, states = _drive(tmp_path, steps=3)
+    try:
+        for n in range(shadow.n_nodes):
+            shadow.kill_node(n)
+        with pytest.raises(ShadowNodeLoss) as ei:
+            shadow.consolidate()
+        e = ei.value
+        assert e.total and e.durable_hint == ("local-disk", 3)
+        msg = str(e)
+        assert "TOTAL shadow-plane loss" in msg
+        assert "local-disk" in msg and "step 3" in msg
+        assert "restore_from_tiers" in msg
+    finally:
+        shadow.shutdown()
+
+
+def test_total_loss_without_tiers_says_unrecoverable():
+    params = _tree()
+    layout = layout_for_tree(params, cap_bytes=600)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    shadow.kill_node(0)
+    shadow.kill_node(1)
+    with pytest.raises(ShadowNodeLoss) as ei:
+        shadow.consolidate()
+    assert ei.value.total and ei.value.durable_hint is None
+    assert "unrecoverable" in str(ei.value)
+
+
+def test_partial_loss_hint_names_missing_shards(tmp_path):
+    shadow, dur, tiers, layout, states = _drive(tmp_path, steps=3)
+    try:
+        shadow.kill_node(0)
+        with pytest.raises(ShadowNodeLoss) as ei:
+            shadow.consolidate()
+        e = ei.value
+        assert not e.total and e.durable_hint == ("local-disk", 3)
+        assert "holds the missing shards durably up to step 3" in str(e)
+        # the composition path: dead shards rebuilt at the survivors' step
+        p, m, v = restore_shards_from_tiers(
+            tiers, layout, e.dead_nodes, at_step=int(e.partial["step"]))
+        merged = set(e.partial["params"]) | set(p)
+        assert merged == set(states[3]["params"])
+        for k in p:
+            assert np.array_equal(p[k], states[3]["params"][k])
+            assert np.array_equal(m[k], states[3]["mu"][k])
+            assert np.array_equal(v[k], states[3]["nu"][k])
+    finally:
+        shadow.shutdown()
+
+
+# -- costmodel: flush + disk budget terms -------------------------------------
+
+def _layout():
+    return layout_for_tree(_tree(6, seed=1), cap_bytes=600)
+
+
+def test_plan_without_flush_policy_unchanged():
+    a = cm.plan_shadow_nodes(_layout())
+    b = cm.plan_shadow_nodes(_layout(), flush_every_steps=None)
+    assert a.n_nodes == b.n_nodes
+    assert b.flush_bound == 1 and b.disk_bound == 1
+    assert b.flush_gbps_per_node_max == 0.0
+
+
+def _tight_budget(lo, slack=1.05, **kw):
+    """A budget whose per-node tier barely absorbs the LARGEST bucket per
+    epoch (the per-bucket feasibility floor), so the aggregate state must
+    spread across several nodes."""
+    big = max(cm._bucket_state_bytes(b) for b in lo.buckets)
+    absorb = big * slack
+    return absorb, cm.ShadowBudget(
+        disk_gbps_per_node=absorb * 8.0 / 1e9 / 4.58, **kw)
+
+
+def test_flush_bandwidth_bound_scales_fleet():
+    lo = _layout()
+    state = sum(cm._bucket_state_bytes(b) for b in lo.buckets)
+    absorb, budget = _tight_budget(lo)
+    plan = cm.plan_shadow_nodes(lo, budget=budget, flush_every_steps=1)
+    assert plan.flush_bound >= 2
+    assert plan.flush_bound >= -(-state // int(absorb))   # ceil(state/absorb)
+    assert plan.n_nodes >= plan.flush_bound
+    assert plan.flush_gbps_per_node_max > 0.0
+
+
+def test_disk_capacity_bound_scales_fleet():
+    lo = _layout()
+    state = sum(cm._bucket_state_bytes(b) for b in lo.buckets)
+    big = max(cm._bucket_state_bytes(b) for b in lo.buckets)
+    retain = 8
+    budget = cm.ShadowBudget(disk_bytes_per_node=big * (1 + retain) * 1.05)
+    plan = cm.plan_shadow_nodes(lo, budget=budget, flush_every_steps=1,
+                                retain_epochs=retain)
+    assert plan.disk_bound >= 2
+    assert plan.n_nodes >= plan.disk_bound
+
+
+def test_compressed_flush_relaxes_the_bandwidth_bound():
+    lo = _layout()
+    _, budget = _tight_budget(lo)
+    raw = cm.plan_shadow_nodes(lo, budget=budget, flush_every_steps=1)
+    packed = cm.plan_shadow_nodes(lo, budget=budget, flush_every_steps=1,
+                                  flush_compress=True)
+    assert packed.flush_bound < raw.flush_bound
+
+
+def test_infeasible_flush_epoch_is_actionable():
+    lo = _layout()
+    with pytest.raises(cm.ShadowPlanError) as ei:
+        cm.plan_shadow_nodes(
+            lo, budget=cm.ShadowBudget(disk_gbps_per_node=1e-9),
+            flush_every_steps=1)
+    assert "disk_gbps_per_node" in str(ei.value)

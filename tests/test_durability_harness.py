@@ -1,0 +1,111 @@
+"""Durability through the chaos harness (docs/harness.md).
+
+The golden corpus carries five durability scenarios; this file pins the
+acceptance drill on top of the parametrized golden pass in
+test_harness.py: a scenario that kills the ENTIRE shadow plane mid-run
+recovers via `restore_from_tiers()` to the newest flushed step,
+bit-identical to the reference trainer, and the zero-flush-stall
+invariant holds everywhere flushing is on.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.harness import (GOLDEN, REGISTRY, DurabilitySpec, Scenario,
+                           ShadowPlaneLoss, TierFailure, run_scenario,
+                           sample_scenario)
+
+
+def test_durability_invariants_registered():
+    for name in ("zero-flush-stall", "tier-restore", "torn-delta"):
+        assert name in REGISTRY, name
+
+
+def test_golden_corpus_has_durability_coverage():
+    dur = [n for n, s in GOLDEN.items() if s.durability.enabled]
+    assert set(dur) >= {"durability-clean", "shadow-plane-loss",
+                        "flush-lag", "tier-failure-fallback",
+                        "compressed-flush"}
+    assert any(s.schedule.plane_loss for s in GOLDEN.values())
+    assert any(s.schedule.tier_fail for s in GOLDEN.values())
+
+
+def test_shadow_plane_loss_recovers_from_tiers():
+    """Acceptance drill: every channel + shadow node dies at step 4; the
+    run survives on `restore_from_tiers()` alone and the restored replica
+    is bit-identical to the reference trainer at the flushed step."""
+    sc = GOLDEN["shadow-plane-loss"]
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+    (pl,) = res.trace.plane_losses
+    assert pl["total"] is True
+    assert pl["step"] == 4
+    assert pl["durable_hint"] == ("local-disk", 4)
+    assert pl["restored_step"] == 4           # every_steps=1: zero lag
+    assert sorted(pl["dead_nodes"]) == list(range(sc.shadow_nodes))
+    # the run CONTINUED past the loss: later steps exist and replayed
+    assert res.trace.records[-1].step == sc.steps
+
+
+def test_flush_lag_bounds_the_restore_point():
+    """every_steps=2 with the plane lost at step 5: the tier can only
+    hold step 4, and that is exactly where restore lands."""
+    sc = GOLDEN["flush-lag"]
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+    (pl,) = res.trace.plane_losses
+    assert pl["step"] == 5 and pl["restored_step"] == 4
+
+
+def test_tier_failure_falls_back_across_tiers():
+    sc = GOLDEN["tier-failure-fallback"]
+    assert any(tf.tier == "local-disk" for tf in sc.schedule.tier_fail)
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+
+
+def test_sampled_plane_loss_scenario_passes():
+    sc = sample_scenario(1057)
+    assert sc.durability.enabled and sc.schedule.plane_loss
+    res = run_scenario(sc)
+    assert res.passed, res.violations
+
+
+def test_scenario_json_round_trips_durability_fields():
+    sc = GOLDEN["tier-failure-fallback"]
+    back = Scenario.from_json(json.loads(json.dumps(sc.to_json())))
+    assert back == sc
+    assert back.durability.object_store
+    assert back.schedule.tier_fail == sc.schedule.tier_fail
+    sc2 = GOLDEN["shadow-plane-loss"]
+    back2 = Scenario.from_json(json.loads(json.dumps(sc2.to_json())))
+    assert back2 == sc2 and back2.schedule.plane_loss
+
+
+def _reject(sc, match):
+    with pytest.raises(ValueError, match=match):
+        sc.validate()
+
+
+def test_validation_rejects_incoherent_durability_specs():
+    base = GOLDEN["shadow-plane-loss"]
+    # plane loss without a durability plane: nothing to restore from
+    _reject(dataclasses.replace(base, durability=DurabilitySpec()),
+            "durability")
+    # plane loss with compressed flushing: restore is lossy, the
+    # bit-identity invariant cannot apply
+    _reject(dataclasses.replace(
+        base, durability=dataclasses.replace(base.durability,
+                                             compress=True)), "compress")
+    # plane loss out of step range
+    _reject(dataclasses.replace(
+        base, schedule=dataclasses.replace(
+            base.schedule, plane_loss=(ShadowPlaneLoss(step=99),))), "step")
+    # tier failure naming a tier the scenario doesn't run
+    clean = GOLDEN["durability-clean"]
+    _reject(dataclasses.replace(
+        clean, schedule=dataclasses.replace(
+            clean.schedule,
+            tier_fail=(TierFailure(step=2, tier="object-store"),))),
+        "object")

@@ -14,7 +14,9 @@ import jax
 import repro.configs as C
 from repro.core.buckets import layout_for_tree
 from repro.core.checkpoint import CheckmateCheckpointer
+from repro.core.recovery import recover
 from repro.core.shadow import ShadowCluster
+from repro.durability import DurableShadow, FlushPolicy, LocalDiskTier
 from repro.dist.sharding import ShardingRules, make_smoke_mesh
 from repro.harness import FailureSchedule, Scenario, run_scenario
 from repro.optim import OptimizerConfig
@@ -87,3 +89,35 @@ def test_elastic_restore_changes_shadow_partitioning(baseline):
         ckpt = shadow.consolidate()
         assert ckpt["step"] == 4
         assert set(ckpt["params"]) == set(s0.params)
+
+
+def test_recover_falls_back_to_tiers(baseline, tmp_path):
+    """`recover(tiers=...)`: a partial shadow loss merges the dead owners'
+    shards from the durable tier; a TOTAL plane loss rebuilds the whole
+    checkpoint from the tier — both land at the trainer's step with the
+    trainer's exact values."""
+    cfg, rules, opt, _, _ = baseline
+    s0 = make_train_state(jax.random.PRNGKey(SEED), cfg, rules)
+    shadow = ShadowCluster(layout_for_tree(s0.params), opt, n_nodes=3)
+    dur = DurableShadow([LocalDiskTier(tmp_path)],
+                        FlushPolicy()).attach(shadow)
+    shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
+    state, _ = train(cfg, rules, steps=3, batch=BATCH, seq=SEQ, opt=opt,
+                     seed=SEED, state=s0,
+                     checkpointer=CheckmateCheckpointer(shadow))
+    dur.drain()
+    ref = {k: np.asarray(v) for k, v in state.params.items()}
+
+    shadow.kill_node(0)                       # partial: merge from tier
+    st, step = recover(shadow, cfg, rules, tiers=dur.tiers)
+    assert step == 3
+    for k in ref:
+        assert np.array_equal(np.asarray(st.params[k]), ref[k]), k
+
+    shadow.kill_node(1)                       # total: whole plane gone
+    shadow.kill_node(2)
+    st, step = recover(shadow, cfg, rules, tiers=dur.tiers)
+    assert step == 3
+    for k in ref:
+        assert np.array_equal(np.asarray(st.params[k]), ref[k]), k
+    shadow.shutdown()

@@ -338,6 +338,139 @@ def plan_shadow_nodes(layout, *, iter_time_s: float = 4.58,
         "max_nodes, add RAM/NIC/disk per node, or lengthen iter_time_s")
 
 
+# ---------------------------------------------------------------------------
+# Elastic replanning: when N train ranks die with no hot spare, pick the
+# largest feasible parallelism layout the survivors can host (Universal
+# Checkpointing / Oobleck shape — the consolidated shadow checkpoint is
+# layout-agnostic, so restore re-partitions onto whatever this plans).
+# ---------------------------------------------------------------------------
+
+
+class ElasticPlanError(ValueError):
+    """No layout on the surviving ranks can host the job (the elastic
+    planner's loud refusal — the message says which constraint failed and
+    what to change)."""
+
+
+@dataclass(frozen=True)
+class ElasticMeshBudget:
+    """Per-rank resources + layout constraints for elastic replanning.
+
+    ``model_parallel`` and ``pipeline_stages`` are fixed by the lowered
+    program (tensor/pipeline splits can't change without recompiling the
+    whole partition strategy); only the DP width flexes. ``global_batch``
+    (sequences) constrains feasible DP widths to even divisors so the
+    re-split data stream preserves global batch order exactly.
+    ``allow_fsdp`` lets the planner flip ZeRO-3-style weight sharding on
+    when a full replica no longer fits a rank's HBM.
+    """
+    hbm_bytes_per_rank: float = 80e9      # one H100 SXM
+    model_parallel: int = 1
+    pipeline_stages: int = 1
+    min_dp: int = 1
+    global_batch: int | None = None
+    allow_fsdp: bool = True
+    hbm_headroom: float = 0.9             # activations, rx buffers, compiler
+
+    @property
+    def usable_hbm(self) -> float:
+        return self.hbm_bytes_per_rank * self.hbm_headroom
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    """Largest feasible layout on the survivors (see `plan_elastic_mesh`)."""
+    dp: int                        # new data-parallel width
+    model: int                     # tensor-parallel width (unchanged)
+    stages: int                    # pipeline depth (unchanged)
+    fsdp: bool                     # weight sharding flipped on to fit?
+    survivors: tuple[int, ...]     # rank ids the new mesh is built from
+    dropped: tuple[int, ...]       # surviving ranks the layout can't use
+    mesh_shape: tuple[int, ...]    # physical mesh extents, axis order below
+    axis_names: tuple[str, ...]    # ("data", "model") [+ "stage"]
+    state_bytes_per_rank: int      # resident p+mu+nu bytes per rank
+
+    @property
+    def n_ranks(self) -> int:
+        return self.dp * self.model * self.stages
+
+
+def plan_elastic_mesh(survivors, budget: ElasticMeshBudget = ElasticMeshBudget(),
+                      *, state_bytes: int | None = None,
+                      layout=None, fsdp: bool = False) -> ElasticPlan:
+    """Largest feasible layout from the surviving ranks.
+
+    ``survivors`` is the surviving rank ids (or a bare count). The planner
+    keeps the model/pipeline split fixed and walks the DP width DOWN from
+    the widest the survivors allow, taking the first width that (a) divides
+    ``budget.global_batch`` evenly when given — the re-split stream must
+    preserve global batch order — and (b) fits each rank's HBM: a pure-DP
+    replica holds the full ``state_bytes`` (p+mu+nu, computed from
+    ``layout`` when given) per model shard; if that overflows and
+    ``budget.allow_fsdp``, the planner flips FSDP on, sharding state across
+    the DP width. ``fsdp=True`` pins the incoming layout's flag (an FSDP
+    run never silently un-shards onto fewer ranks).
+
+    Deterministic: the lowest-numbered survivors fill the mesh; leftover
+    ranks are reported as ``dropped``. Raises :class:`ElasticPlanError`
+    with an actionable message when nothing fits.
+    """
+    if isinstance(survivors, int):
+        ids = tuple(range(survivors))
+    else:
+        ids = tuple(sorted(survivors))
+    if len(set(ids)) != len(ids):
+        raise ElasticPlanError(f"duplicate survivor rank ids: {ids}")
+    per_replica = budget.model_parallel * budget.pipeline_stages
+    if state_bytes is None and layout is not None:
+        state_bytes = sum(_bucket_state_bytes(b) for b in layout.buckets)
+    dp_max = len(ids) // per_replica
+    if dp_max < budget.min_dp:
+        raise ElasticPlanError(
+            f"{len(ids)} survivor(s) cannot host even min_dp="
+            f"{budget.min_dp} replicas of a {budget.model_parallel}-way "
+            f"model x {budget.pipeline_stages}-stage split "
+            f"({per_replica * budget.min_dp} ranks needed); the job cannot "
+            "shrink further — restore onto replacement hardware instead")
+    tried: list[str] = []
+    for dp in range(dp_max, budget.min_dp - 1, -1):
+        if budget.global_batch is not None and budget.global_batch % dp:
+            tried.append(f"dp={dp}: does not divide global_batch="
+                         f"{budget.global_batch}")
+            continue
+        for use_fsdp in ((True,) if fsdp else
+                         (False, True) if budget.allow_fsdp else (False,)):
+            per_rank = 0
+            if state_bytes is not None:
+                per_rank = math.ceil(state_bytes / budget.model_parallel
+                                     / budget.pipeline_stages
+                                     / (dp if use_fsdp else 1))
+                if per_rank > budget.usable_hbm:
+                    tried.append(
+                        f"dp={dp}{' fsdp' if use_fsdp else ''}: "
+                        f"{per_rank / 1e9:.1f} GB/rank > "
+                        f"{budget.usable_hbm / 1e9:.1f} GB usable")
+                    continue
+            n = dp * per_replica
+            shape: tuple[int, ...] = (dp, budget.model_parallel)
+            names: tuple[str, ...] = ("data", "model")
+            if budget.pipeline_stages > 1:
+                shape += (budget.pipeline_stages,)
+                names += ("stage",)
+            return ElasticPlan(
+                dp=dp, model=budget.model_parallel,
+                stages=budget.pipeline_stages, fsdp=use_fsdp,
+                survivors=ids[:n], dropped=ids[n:],
+                mesh_shape=shape, axis_names=names,
+                state_bytes_per_rank=int(per_rank))
+    detail = "; ".join(tried) if tried else "no DP width in range"
+    raise ElasticPlanError(
+        f"no feasible layout on {len(ids)} survivor(s) "
+        f"(model_parallel={budget.model_parallel}, "
+        f"stages={budget.pipeline_stages}, min_dp={budget.min_dp}): "
+        f"{detail}; relax min_dp, raise hbm_bytes_per_rank, or allow_fsdp")
+
+
 def capture_leaf_specs(cfg) -> list[tuple[str, tuple, str]]:
     """``(name, shape, dtype)`` leaves as the DDP capture side sees them.
 

@@ -71,7 +71,9 @@ def checkpoint_from_state(state: TrainState) -> dict:
 def recover(shadow: ShadowCluster, cfg, rules: ShardingRules,
             timeout: Optional[float] = None,
             allow_partial: bool = False,
-            tiers=None) -> tuple[TrainState, int]:
+            tiers=None,
+            new_rules: Optional[ShardingRules] = None
+            ) -> tuple[TrainState, int]:
     """Consolidate the shadow cluster and rebuild training state.
 
     Returns (state, resume_step). The paper's consolidation is a
@@ -96,6 +98,17 @@ def recover(shadow: ShadowCluster, cfg, rules: ShardingRules,
     `repro.durability.restore_from_tiers`, landing at the newest flushed
     step (the one `ShadowNodeLoss.durable_hint` names). Only if the
     tiers cannot serve the exact step does ``allow_partial`` apply.
+
+    ``new_rules`` is the elastic-restart path (`repro.core.elastic`):
+    the consolidated checkpoint — a full unsharded tree, whether it came
+    from the live plane or the tiers — is re-partitioned onto a
+    *different* mesh / FSDP split than the run that produced it. The
+    tiers are always read with the OLD capture layout (``shadow.layout``
+    and ``shadow.n_nodes`` wrote those records); only the final
+    ``device_put`` targets the new rules. The caller then rebuilds
+    everything the old layout derived (bucket layout, ownership map,
+    channel geometry) via `repro.core.elastic.rebuild_shadow` +
+    `CheckmateCheckpointer.reconfigure`.
     """
     try:
         ckpt = shadow.consolidate(timeout=timeout)
@@ -123,5 +136,6 @@ def recover(shadow: ShadowCluster, cfg, rules: ShardingRules,
             if not allow_partial:
                 raise
             ckpt = e.partial
-    state = state_from_checkpoint(ckpt, cfg, rules)
+    state = state_from_checkpoint(
+        ckpt, cfg, new_rules if new_rules is not None else rules)
     return state, int(ckpt["step"])

@@ -177,6 +177,10 @@ class DurableShadow:
         self._next_epoch = 0
         # epoch -> frozenset of node ids notified (the completeness bar)
         self._epoch_nodes: dict[int, frozenset] = {}
+        # epoch -> cluster size when the epoch opened; completeness is
+        # judged against THIS, not the current cluster, so epochs written
+        # before an elastic re-layout stay correctly classified
+        self._epoch_total: dict[int, int] = {}
         # epoch -> {node id -> step its record landed at}
         self._epoch_steps: dict[int, dict[int, int]] = {}
         # tier name -> epoch -> set of acked node ids
@@ -198,6 +202,24 @@ class DurableShadow:
                         for n in cluster.nodes}
         return self
 
+    def reattach(self, cluster) -> "DurableShadow":
+        """Migrate the flush plane to a re-laid-out cluster (elastic
+        restore). Drains and retires the old workers first (no queued
+        flush is silently dropped), keeps the tiers AND the epoch/ack
+        history — every durable epoch written under the old layout stays
+        restorable from the tiers, and epoch numbering continues
+        monotonically — then starts fresh workers for the new nodes. The
+        caller's subsequent ``cluster.bootstrap`` forces a full base, so
+        a complete restore point exists under the new layout immediately.
+        """
+        self.drain()
+        for w in self.workers.values():
+            w.close()
+        old = self.cluster
+        if old is not None and old.durability is self:
+            old.durability = None
+        return self.attach(cluster)
+
     # -- hot-path hook (called from ShadowCluster._ingest) --------------------
     def notify(self, step: int, force_base: bool = False):
         """Open a flush epoch for ``step`` if the cadence says so.
@@ -217,6 +239,7 @@ class DurableShadow:
             epoch = self._next_epoch
             self._next_epoch += 1
             self._epoch_nodes[epoch] = frozenset(live)
+            self._epoch_total[epoch] = cluster.n_nodes
             self._epoch_steps[epoch] = {}
             self.epochs_started += 1
         for nid in live:
@@ -260,12 +283,11 @@ class DurableShadow:
         """Newest step at which EVERY cluster node's record is durable on
         ``tier_name`` within one epoch — the step `restore_from_tiers`
         would recover to from that tier."""
-        cluster = self.cluster
-        n_total = cluster.n_nodes if cluster is not None else None
         best = None
         with self._lock:
             acks = self._acks.get(tier_name, {})
             for epoch, nodes in self._epoch_nodes.items():
+                n_total = self._epoch_total.get(epoch)
                 if n_total is not None and len(nodes) < n_total:
                     continue          # some nodes dead: not a full restore
                 if not nodes <= acks.get(epoch, set()):

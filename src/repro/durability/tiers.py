@@ -14,6 +14,18 @@ Two implementations:
 Both expose ``fail_steps``: a `put` for a record at one of those steps
 raises `TierPutError` — the chaos harness `TierFailure` class drives
 this to prove restore falls back across tiers.
+
+Retention (``retain_epochs``): with unbounded epochs a tier's footprint
+grows forever, so both tiers garbage-collect on every ``put``. The
+pruning rule is chain-aware, not a naive count: restore walks per-node
+delta chains back to each node's most recent base, so the collector
+keeps the newest ``retain_epochs`` epochs PLUS everything back to (and
+including) the newest *all-base anchor* epoch at or below that window —
+an epoch in which every present record is a raw base, behind which no
+chain can reach. If no anchor exists below the window (e.g. the bases
+are still ahead of the cutoff) nothing is pruned: the newest complete
+base+delta chain is never cut, and a torn record in a retained epoch can
+always fall back to the anchor.
 """
 from __future__ import annotations
 
@@ -67,16 +79,50 @@ def _record_key(rec: FlushRecord) -> str:
     return f"rec_e{rec.epoch:08d}_n{rec.node:03d}.bin"
 
 
+def _prune_plan(ents: list[ManifestEntry],
+                retain_epochs: "int | None") -> list[ManifestEntry]:
+    """Entries the retention policy says to DROP (possibly empty).
+
+    Keeps the newest ``retain_epochs`` distinct epochs, then walks down to
+    the newest epoch at or below that cutoff whose every record is a raw
+    base (the anchor) and drops only epochs strictly older — per-node
+    delta chains re-anchor at each base, so nothing restorable is lost.
+    Returns [] when no safe anchor exists.
+    """
+    if retain_epochs is None:
+        return []
+    epochs = sorted({e.epoch for e in ents}, reverse=True)
+    if len(epochs) <= retain_epochs:
+        return []
+    cutoff = epochs[retain_epochs - 1]
+    by_epoch: dict[int, list[ManifestEntry]] = {}
+    for e in ents:
+        by_epoch.setdefault(e.epoch, []).append(e)
+    anchor = None
+    for ep in sorted(by_epoch, reverse=True):
+        if ep > cutoff:
+            continue
+        if all(e.kind == "base" for e in by_epoch[ep]):
+            anchor = ep
+            break
+    if anchor is None:
+        return []            # no full-base anchor below the window: keep all
+    return [e for e in ents if e.epoch < anchor]
+
+
 class LocalDiskTier:
     """Records on local disk with atomic rename + an atomic manifest."""
 
     name = "local-disk"
 
-    def __init__(self, root):
+    def __init__(self, root, retain_epochs: "int | None" = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.fail_steps: set[int] = set()
+        self.retain_epochs = retain_epochs
         self.put_bytes_total = 0
+        self.gc_records_total = 0
+        self.gc_bytes_total = 0
         # one FlushWorker per shadow node writes here concurrently; the
         # manifest update is read-modify-write and must serialize
         self._lock = threading.Lock()
@@ -94,12 +140,30 @@ class LocalDiskTier:
         with self._lock:
             ents = self.entries()
             ents.append(entry)
+            drop = _prune_plan(ents, self.retain_epochs)
+            if drop:
+                gone = {d.key for d in drop}
+                ents = [e for e in ents if e.key not in gone]
             mtmp = self.root / (MANIFEST + ".tmp")
             mtmp.write_text(json.dumps(
                 {"entries": [asdict(e) for e in ents]}, sort_keys=True))
             os.replace(mtmp, self.root / MANIFEST)  # atomic: old or new
+            # blobs are unlinked only AFTER the manifest stopped naming
+            # them — a crash between the two leaves orphans, never a
+            # manifest entry pointing at a missing blob
+            for d in drop:
+                try:
+                    (self.root / d.key).unlink()
+                except FileNotFoundError:
+                    pass
+                self.gc_records_total += 1
+                self.gc_bytes_total += d.nbytes
             self.put_bytes_total += len(buf)
         return entry
+
+    def disk_bytes(self) -> int:
+        """Bytes currently on disk (blobs only) — the retention bound."""
+        return sum(p.stat().st_size for p in self.root.glob("rec_*.bin"))
 
     def entries(self) -> list[ManifestEntry]:
         path = self.root / MANIFEST
@@ -121,22 +185,56 @@ class ObjectStoreTier:
     Latency is paid on the *flush worker* thread — the trainer never
     blocks on it, which is exactly the property the `zero-flush-stall`
     invariant checks.
+
+    Real object stores fail transiently, so ``put`` retries with bounded
+    exponential backoff: up to ``retry_attempts`` total attempts, sleeping
+    ``retry_backoff_s * 2**(attempt-1)`` between them (capped at
+    ``retry_backoff_cap_s``), all of it on the flush-worker thread.
+    ``transient_fail_steps`` maps a step to how many attempts fail before
+    one succeeds (the retry drill); ``fail_steps`` stays permanent. When
+    the budget is exhausted the final `TierPutError` propagates to the
+    caller — `FlushWorker` catches it, books a put failure, and the tier
+    simply lags (``durability_tier_lag_steps``); nothing raises into the
+    flush loop.
     """
 
     name = "object-store"
 
-    def __init__(self, latency_s: float = 0.0):
+    def __init__(self, latency_s: float = 0.0, retry_attempts: int = 1,
+                 retry_backoff_s: float = 0.0,
+                 retry_backoff_cap_s: float = 0.25,
+                 retain_epochs: "int | None" = None):
         self.latency_s = float(latency_s)
         self.fail_steps: set[int] = set()
+        self.transient_fail_steps: dict[int, int] = {}
+        self.retry_attempts = max(1, int(retry_attempts))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
+        self.retain_epochs = retain_epochs
         self.put_bytes_total = 0
+        self.retries_total = 0
+        self.gc_records_total = 0
+        self.gc_bytes_total = 0
+        self._transient_seen: dict[tuple[int, int], int] = {}
         self._blobs: dict[str, bytes] = {}
         self._entries: list[ManifestEntry] = []
         self._lock = threading.Lock()          # concurrent worker puts
 
-    def put(self, rec: FlushRecord) -> ManifestEntry:
+    def _put_once(self, rec: FlushRecord) -> ManifestEntry:
         if rec.step in self.fail_steps:
             raise TierPutError(
                 f"{self.name}: injected put failure at step {rec.step}")
+        budget = self.transient_fail_steps.get(rec.step, 0)
+        if budget:
+            k = (rec.step, rec.node)
+            with self._lock:
+                seen = self._transient_seen.get(k, 0)
+                if seen < budget:
+                    self._transient_seen[k] = seen + 1
+            if seen < budget:
+                raise TierPutError(
+                    f"{self.name}: transient put failure at step "
+                    f"{rec.step} (attempt {seen + 1}/{budget})")
         if self.latency_s > 0:
             time.sleep(self.latency_s)
         buf = rec.to_bytes()
@@ -145,8 +243,32 @@ class ObjectStoreTier:
         with self._lock:
             self._blobs[key] = buf
             self._entries.append(entry)
+            drop = _prune_plan(self._entries, self.retain_epochs)
+            if drop:
+                gone = {d.key for d in drop}
+                self._entries = [e for e in self._entries
+                                 if e.key not in gone]
+                for d in drop:
+                    self._blobs.pop(d.key, None)
+                    self.gc_records_total += 1
+                    self.gc_bytes_total += d.nbytes
             self.put_bytes_total += len(buf)
         return entry
+
+    def put(self, rec: FlushRecord) -> ManifestEntry:
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                return self._put_once(rec)
+            except TierPutError:
+                if attempt >= self.retry_attempts:
+                    raise          # budget spent: the worker books the lag
+                with self._lock:
+                    self.retries_total += 1
+                if self.retry_backoff_s > 0:
+                    time.sleep(min(self.retry_backoff_s * 2 ** (attempt - 1),
+                                   self.retry_backoff_cap_s))
 
     def entries(self) -> list[ManifestEntry]:
         with self._lock:

@@ -12,22 +12,63 @@ minimal repro bundle per violating scenario when --bundle-dir is given.
 ``replay`` re-runs a bundle (or a sampled seed, twice) and exits zero iff
 the outcome reproduces bit-identically — which is what makes every CI
 chaos failure a one-integer local repro.
+
+``--time-budget PATH`` additionally times every scenario and fails the
+run if the total wall clock exceeds ``tolerance`` x the committed
+baseline (``benchmarks/golden_budget.json``) — the guard that keeps the
+golden corpus from quietly doubling as scenarios accrete.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 
 from repro.harness.corpus import GOLDEN
 from repro.harness.runner import replay_bundle, run_scenario
 from repro.harness.scenario import repro_seed, sample_scenario
 
 
-def _run_many(scenarios, bundle_dir) -> int:
+def _check_time_budget(timings: dict, budget_path: str) -> int:
+    """Compare measured wall clock against the committed baseline.
+
+    The budget file maps scenario name -> baseline seconds plus a
+    ``tolerance`` multiplier; the check fails only on the TOTAL (single
+    scenarios jitter on shared CI runners), but prints any scenario
+    individually past tolerance so the offender is named. Scenarios
+    without a committed baseline are reported and excluded — add them to
+    the budget file when they land.
+    """
+    with open(budget_path) as f:
+        budget = json.load(f)
+    tol = float(budget.get("tolerance", 2.0))
+    baselines = budget["scenarios"]
+    unbudgeted = sorted(set(timings) - set(baselines))
+    if unbudgeted:
+        print(f"# time-budget: no baseline for {', '.join(unbudgeted)} "
+              f"(excluded — add to {budget_path})")
+    covered = {n: t for n, t in timings.items() if n in baselines}
+    for name, t in sorted(covered.items()):
+        if t > tol * baselines[name]:
+            print(f"# time-budget: {name} took {t:.1f}s "
+                  f"(baseline {baselines[name]:.1f}s, x{tol:g} allowed)")
+    total = sum(covered.values())
+    allowed = tol * sum(baselines[n] for n in covered)
+    verdict = "OK" if total <= allowed else "EXCEEDED"
+    print(f"# time-budget: total {total:.1f}s / allowed {allowed:.1f}s "
+          f"({len(covered)} budgeted scenario(s)) -> {verdict}")
+    return 0 if total <= allowed else 1
+
+
+def _run_many(scenarios, bundle_dir, budget_path=None) -> int:
     failed = 0
+    timings: dict = {}
     for sc in scenarios:
+        t0 = time.monotonic()
         result = run_scenario(sc, bundle_dir=bundle_dir)
-        print(result.describe())
+        timings[sc.name] = time.monotonic() - t0
+        print(f"{result.describe()}  [{timings[sc.name]:.1f}s]")
         if not result.passed:
             failed += 1
             if result.bundle_path:
@@ -35,7 +76,8 @@ def _run_many(scenarios, bundle_dir) -> int:
     n = len(scenarios)
     print(f"# {n - failed}/{n} scenarios passed"
           + (f", {failed} FAILED" if failed else ""))
-    return 1 if failed else 0
+    over = _check_time_budget(timings, budget_path) if budget_path else 0
+    return 1 if (failed or over) else 0
 
 
 def _cmd_run(args) -> int:
@@ -53,7 +95,8 @@ def _cmd_run(args) -> int:
         print("run: pass --corpus golden, --scenario NAME, or --seed N",
               file=sys.stderr)
         return 2
-    return _run_many(scenarios, args.bundle_dir)
+    return _run_many(scenarios, args.bundle_dir,
+                     budget_path=args.time_budget)
 
 
 def _cmd_sweep(args) -> int:
@@ -103,6 +146,10 @@ def main(argv=None) -> int:
     run.add_argument("--level", choices=["channel", "full"])
     run.add_argument("--bundle-dir",
                      help="write violation repro bundles here")
+    run.add_argument("--time-budget", metavar="PATH",
+                     help="committed wall-clock baseline JSON "
+                          "(benchmarks/golden_budget.json); fail if the "
+                          "total exceeds tolerance x baseline")
     run.set_defaults(fn=_cmd_run)
 
     sweep = sub.add_parser("sweep", help="run N seeded random scenarios")

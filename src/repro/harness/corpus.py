@@ -14,7 +14,7 @@ from __future__ import annotations
 from repro.harness.scenario import (ChannelSpec, DurabilitySpec,
                                     FabricFailure, FailureSchedule,
                                     Scenario, ShadowDeath, ShadowPlaneLoss,
-                                    TierFailure)
+                                    TierFailure, TrainNodeLoss)
 
 _RAIL = dict(kind="packetized", topology="rail-optimized")
 # bucket-sharded owner routing; small buckets so 3 owners all hold shards
@@ -180,6 +180,51 @@ GOLDEN: dict[str, Scenario] = {s.name: s for s in [
         channel=ChannelSpec(**_SHARD),
         durability=DurabilitySpec(enabled=True, compress=True,
                                   rebase_every=2)),
+
+    # -- elastic shrink: train ranks die with NO hot spare ------------------
+    # half the world dies after step 3; the run replans DP 8 -> 4,
+    # rebuilds channel + shadow plane, and resumes bit-identically
+    _sc("elastic-dp8-to-4", seed=101, steps=6,
+        channel=ChannelSpec(**_RAIL, n_dp_groups=2, ranks_per_group=4),
+        schedule=FailureSchedule(train_node_loss=(
+            TrainNodeLoss(step=3, ranks=(4, 5, 6, 7)),))),
+    # a non-power-of-two world: 8 -> 6 survivors regroup as 2 groups of 3
+    _sc("elastic-dp8-to-6", seed=102, steps=6,
+        channel=ChannelSpec(**_RAIL, n_dp_groups=2, ranks_per_group=4),
+        schedule=FailureSchedule(train_node_loss=(
+            TrainNodeLoss(step=3, ranks=(3, 6)),))),
+    # full level: the restore lands on an FSDP-flipped ShardingRules — the
+    # one layout change the 1-device smoke mesh can express
+    _sc("elastic-fsdp-flip", level="full", seed=103, steps=6,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(train_node_loss=(
+            TrainNodeLoss(step=3),))),
+    # shrink at 3, then the WHOLE rebuilt shadow plane dies at 5: recovery
+    # restores the post-shrink epoch from the durability tiers onto the
+    # shrunken layout
+    _sc("elastic-shrink-then-plane-loss", seed=104, steps=6,
+        shadow_nodes=3, n_leaves=4, cap_bytes=256,
+        channel=ChannelSpec(**_SHARD, n_dp_groups=2, ranks_per_group=4),
+        durability=DurabilitySpec(enabled=True),
+        schedule=FailureSchedule(
+            train_node_loss=(TrainNodeLoss(step=3, ranks=(5, 7)),),
+            plane_loss=(ShadowPlaneLoss(step=5),))),
+    # shrink under a compressed channel: the rebuilt stream restarts its
+    # error-feedback from the synced resume point, so the sharp EF bound
+    # must hold over the post-shrink steps alone
+    _sc("elastic-compressed-shrink", seed=105, steps=5, optimizer="sgd",
+        momentum=0.0, lr=0.1,
+        channel=ChannelSpec(kind="compressed", inner="packetized",
+                            topology="rail-optimized",
+                            n_dp_groups=2, ranks_per_group=4),
+        schedule=FailureSchedule(train_node_loss=(
+            TrainNodeLoss(step=3, ranks=(0, 1, 2, 3)),))),
+    # two shrinks in one run: 8 -> 6 -> 4, ranks named in ORIGINAL ids
+    _sc("elastic-double-shrink", seed=106, steps=6,
+        channel=ChannelSpec(**_RAIL, n_dp_groups=2, ranks_per_group=4),
+        schedule=FailureSchedule(train_node_loss=(
+            TrainNodeLoss(step=2, ranks=(6, 7)),
+            TrainNodeLoss(step=4, ranks=(4, 5))))),
 
     # -- consolidation under a wedged worker --------------------------------
     _sc("wedge-consolidate", seed=61, steps=4, shadow_async=True,

@@ -178,7 +178,8 @@ class StallAttribution(Invariant):
     name = "stall-attribution"
 
     KNOWN = frozenset(("send", "quantize", "inline-apply", "resync",
-                       "consolidate-wait", "copy-persist"))
+                       "consolidate-wait", "copy-persist",
+                       "elastic-reshard"))
 
     def applies(self, trace) -> bool:
         return trace.scenario.checkpointer == "checkmate"
@@ -359,6 +360,94 @@ class ShadowNodeDeath(Invariant):
                     yield self._v(rec.step,
                                   f"surviving shard leaf {part_name}[{k}] "
                                   f"diverged from trainer@{rec.shadow_step}")
+
+
+@register
+class ElasticResume(Invariant):
+    """An elastic shrink is invisible in the training trajectory: every
+    scheduled `TrainNodeLoss` actually reconfigured the run onto the
+    survivors, the reconfiguration is booked as the named
+    ``elastic-reshard`` stall stage, the rebuilt shadow plane re-attaches
+    bit-identical to the trainer at the resumed step and keeps advancing
+    on the shrunken layout, and the drill's world accounting is exact —
+    the new world is the old world minus the killed ranks and the
+    replanned DP width spans exactly the survivors. (Post-shrink steps
+    stay covered by replay-determinism / resume-bit-identity, whose
+    reference targets are DP-width-independent by construction.)"""
+    name = "elastic-resume"
+
+    def applies(self, trace) -> bool:
+        return bool(trace.scenario.schedule.train_node_loss)
+
+    def check_step(self, trace, rec):
+        if not rec.elastic:
+            return
+        if rec.restored_step is None:
+            yield self._v(rec.step, "elastic resume recorded without a "
+                                    "restore() having run")
+        if trace.scenario.channel.kind == "compressed":
+            return      # the shadow stream is intentionally lossy there
+        if rec.shadow_ckpt is None or rec.shadow_step is None:
+            return
+        ref = trace.states.get(rec.shadow_step)
+        if ref is None:
+            return
+        bad = tree_mismatch(rec.shadow_ckpt, ref)
+        if bad:
+            yield self._v(rec.step,
+                          f"re-attached shadow@{rec.shadow_step} != "
+                          f"trainer@{rec.shadow_step}: {bad}")
+
+    def check_end(self, trace):
+        sched = trace.scenario.schedule.train_node_loss
+        evs = trace.elastic_events
+        if len(evs) != len(sched):
+            yield self._v(None, f"{len(sched)} shrink(s) scheduled but "
+                                f"{len(evs)} reconfiguration(s) ran")
+            return
+        stages = getattr(trace.checkpointer, "stall_stages", None) or {}
+        if "elastic-reshard" not in stages:
+            yield self._v(None, "reconfiguration ran but no "
+                                "'elastic-reshard' stage was booked in the "
+                                "checkpointer's stall ledger")
+        for tl, ev in zip(sched, evs):
+            if ev["step"] != tl.step:
+                yield self._v(tl.step,
+                              f"shrink scheduled after step {tl.step} but "
+                              f"the drill ran at {ev['step']}")
+            if sorted(ev["killed"]) != sorted(tl.ranks):
+                yield self._v(tl.step,
+                              f"drill killed ranks {sorted(ev['killed'])}, "
+                              f"schedule names {sorted(tl.ranks)}")
+            if ev["resumed_step"] > ev["step"]:
+                yield self._v(tl.step,
+                              f"resume landed at {ev['resumed_step']}, "
+                              f"AHEAD of the shrink at {ev['step']}")
+            if trace.scenario.level != "channel":
+                continue            # full level: no modeled rank world
+            if ev["new_world"] != ev["old_world"] - len(ev["killed"]):
+                yield self._v(tl.step,
+                              f"world went {ev['old_world']} -> "
+                              f"{ev['new_world']} after killing "
+                              f"{len(ev['killed'])} rank(s)")
+            if ev["dp"] != ev["new_world"]:
+                yield self._v(tl.step,
+                              f"replanned dp={ev['dp']} does not span the "
+                              f"{ev['new_world']} survivors")
+            dead = set(ev["killed"]) & set(ev["survivors"])
+            if dead:
+                yield self._v(tl.step, f"killed ranks {sorted(dead)} "
+                                       f"listed as survivors")
+        last = evs[-1]
+        if (last["resumed_step"] < trace.scenario.steps
+                and not any(f > last["resumed_step"]
+                            for f in trace.scenario.schedule.fabric_steps)):
+            post = [r for r in trace.records
+                    if r.step > last["resumed_step"]
+                    and (r.applied or r.partial_applied or r.resync)]
+            if not post:
+                yield self._v(None, "no shadow apply ever landed on the "
+                                    "shrunken layout after the last shrink")
 
 
 @register

@@ -20,6 +20,7 @@ bit-identically (tests/test_harness.py replays bundles as pytest cases).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import tempfile
 import time
@@ -128,6 +129,7 @@ class StepRecord:
     resync: bool = False                 # healed via full-state copy
     restored_step: Optional[int] = None  # a restore() ran just before this
     plane_restore: bool = False          # ...and it came from the tiers
+    elastic: bool = False                # ...and it landed on a shrunken mesh
     first_seen: bool = True              # False = replay after a recovery
     sends: list = field(default_factory=list)
     polls: list = field(default_factory=list)
@@ -156,6 +158,7 @@ class Trace:
         self.durability = None               # DurableShadow when enabled
         self.tiers: list = []                # its Tier objects
         self.plane_losses: list[dict] = []   # total-loss drills, as observed
+        self.elastic_events: list[dict] = []  # shrink drills, as observed
         self.dur_tmpdir = None               # local-disk tier root; cleaned
         #                                      by run_scenario AFTER end-of-
         #                                      run invariants read the tier
@@ -299,6 +302,8 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
     from repro.core.buckets import layout_for_tree
     from repro.core.channel import StepEvent
     from repro.core.checkpoint import CheckmateCheckpointer
+    from repro.core.costmodel import ElasticMeshBudget, plan_elastic_mesh
+    from repro.core.elastic import rebuild_shadow
     from repro.core.shadow import (ConsolidationTimeout, ShadowCluster,
                                    ShadowNodeLoss)
     from repro.optim.functional import TrainState, apply_updates
@@ -359,8 +364,13 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
     apply_fn = jax.jit(lambda s, g: apply_updates(s, g, opt, sc.lr))
     pending_restore: Optional[int] = None
     pending_plane = False
+    pending_elastic = False
     fails = set(sc.schedule.train_fail_steps)
     planes = {p.step for p in sc.schedule.plane_loss}
+    shrinks = {t.step: t for t in sc.schedule.train_node_loss}
+    # the train-side world the channel models; shrink drills cut it down
+    world_ranks = list(range(sc.channel.n_dp_groups
+                             * sc.channel.ranks_per_group))
     last_ckpt = None
     step, executed = 0, 0
     try:
@@ -410,6 +420,7 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
             rec.partial_applied = len(ck.partial_steps) > before[3]
             rec.restored_step, pending_restore = pending_restore, None
             rec.plane_restore, pending_plane = pending_plane, False
+            rec.elastic, pending_elastic = pending_elastic, False
             rec.sends, rec.polls = chan.take_sends(), chan.take_polls()
             for d in deaths:            # phase "consolidate": dies between
                 if d.phase == "consolidate":    # the apply and the gather
@@ -452,6 +463,61 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                 rec.state = None            # already kept in trace.states
             last_ckpt = ckpt
             step = nxt
+            if nxt in shrinks:      # train ranks die AFTER the step: shrink
+                tl = shrinks.pop(nxt)
+                if dur is not None:
+                    dur.drain()     # settle in-flight epochs pre-migration
+                restored = ck.restore()          # books consolidate-wait
+                survivors = [r for r in world_ranks
+                             if r not in set(tl.ranks)]
+                plan = plan_elastic_mesh(survivors, ElasticMeshBudget())
+                old_world, new_world = len(world_ranks), plan.n_ranks
+                world_ranks = list(plan.survivors)
+                # the shrunken channel geometry: keep the group size if the
+                # new world still fills whole groups, else keep the group
+                # count, else collapse to one group of survivors
+                if new_world % sc.channel.ranks_per_group == 0:
+                    geo = (new_world // sc.channel.ranks_per_group,
+                           sc.channel.ranks_per_group)
+                elif new_world % sc.channel.n_dp_groups == 0:
+                    geo = (sc.channel.n_dp_groups,
+                           new_world // sc.channel.n_dp_groups)
+                else:
+                    geo = (1, new_world)
+                remaining = {s: f for s, f
+                             in sc.schedule.failures_at().items() if s > nxt}
+                spec = dataclasses.replace(
+                    sc.channel, n_dp_groups=geo[0], ranks_per_group=geo[1],
+                    ranks_per_leaf=min(sc.channel.ranks_per_leaf, geo[1]))
+                new_chan = InstrumentedChannel(
+                    spec.build(remaining, n_shadow_nodes=sc.shadow_nodes))
+                # the bucket layout + ownership map are re-derived for the
+                # new world; durability migrates (reattach) and the rebuilt
+                # plane cuts a fresh base at the resume step
+                shadow = rebuild_shadow(shadow, restored,
+                                        n_nodes=sc.shadow_nodes,
+                                        cap_bytes=sc.cap_bytes)
+                layout = shadow.layout
+                ck.reconfigure(shadow, channel=new_chan)  # elastic-reshard
+                chan = new_chan
+                trace.channel, trace.layout = chan, layout
+                trace.compressor = getattr(chan.inner, "compressor", None)
+                trace.shadow_partition = {
+                    n.node_id: {"buckets": list(n.bucket_ids),
+                                "leaves": list(n._leaves)}
+                    for n in shadow.nodes}
+                trace.elastic_events.append({
+                    "step": nxt, "killed": sorted(tl.ranks),
+                    "old_world": old_world, "new_world": new_world,
+                    "dp": plan.dp, "fsdp": plan.fsdp,
+                    "survivors": list(plan.survivors),
+                    "geometry": list(geo),
+                    "resumed_step": int(restored["step"])})
+                state = as_state(restored["params"], restored["mu"],
+                                 restored["nu"], restored["step"])
+                pending_restore = int(restored["step"])
+                pending_elastic = True
+                step = int(restored["step"])
             if nxt in planes:       # total shadow-plane loss AFTER the step
                 planes.discard(nxt)
                 from repro.durability.restore import restore_from_tiers
@@ -540,6 +606,20 @@ def _run_full(sc: Scenario, trace: Trace, engine: _Engine):
         ck = NoCheckpointer()
     trace.checkpointer = ck
 
+    # elastic shrink at full level: the drill restores onto an FSDP-flipped
+    # ShardingRules — the one layout change the 1-device smoke mesh can
+    # express. The TrainNodeLoss fires as an injected failure on the step
+    # AFTER tl.step ("ranks die after step"), and the loop's elastic path
+    # (train(..., elastic_rules=...)) does the reconfiguration.
+    fail_steps = tuple(sc.schedule.train_fail_steps)
+    elastic_rules = None
+    elastic_recovery = None
+    if sc.schedule.train_node_loss:
+        tl = sc.schedule.train_node_loss[0]
+        fail_steps = tuple(sorted(set(fail_steps) | {tl.step + 1}))
+        elastic_rules = ShardingRules(make_smoke_mesh(), fsdp=not rules.fsdp)
+        elastic_recovery = fail_steps.index(tl.step + 1) + 1
+
     seen = {"ncp": 0, "skip": 0, "resync": 0, "recov": 0}
 
     def hook(step, state, stats):
@@ -548,13 +628,23 @@ def _run_full(sc: Scenario, trace: Trace, engine: _Engine):
         if stats.recoveries > seen["recov"]:
             seen["recov"] = stats.recoveries
             rec.restored_step = stats.recovered_at[-1]
+            if (elastic_recovery is not None
+                    and stats.recoveries >= elastic_recovery
+                    and not trace.elastic_events):
+                rec.elastic = True
+                trace.elastic_events.append({
+                    "step": tl.step, "killed": sorted(tl.ranks),
+                    "fsdp": True,
+                    "resumed_step": int(rec.restored_step)})
         if shadow is not None:
             rec.resync = len(ck.resyncs) > seen["resync"]
             rec.gated = len(ck.skipped_steps) > seen["skip"]
             rec.applied = ck.n_checkpoints > seen["ncp"] and not rec.resync
             seen.update(ncp=ck.n_checkpoints, skip=len(ck.skipped_steps),
                         resync=len(ck.resyncs))
-            shadow_ck = shadow.consolidate()
+            # consolidate the checkpointer's CURRENT plane — an elastic
+            # reconfiguration swaps the cluster object mid-run
+            shadow_ck = ck.shadow.consolidate()
             rec.shadow_step = int(shadow_ck["step"])
             rec.shadow_ckpt = shadow_ck
             trace.final_shadow = shadow_ck
@@ -574,12 +664,12 @@ def _run_full(sc: Scenario, trace: Trace, engine: _Engine):
     state, stats = train(
         cfg, rules, steps=sc.steps, batch=sc.batch, seq=sc.seq, opt=opt,
         lr_fn=lr_fn, seed=sc.seed, state=s0, checkpointer=ck,
-        failure_plan=FailurePlan(sc.schedule.train_fail_steps),
-        step_hook=hook)
+        failure_plan=FailurePlan(fail_steps),
+        step_hook=hook, elastic_rules=elastic_rules)
     trace.stats = stats
     trace.final = checkpoint_from_state(state)
     if shadow is not None and sc.shadow_async:
-        shadow.shutdown()
+        ck.shadow.shutdown()
 
 
 def run_scenario(scenario: Scenario, *, bundle_dir=None) -> ScenarioResult:

@@ -144,6 +144,28 @@ class ShadowPlaneLoss:
 
 
 @dataclass(frozen=True)
+class TrainNodeLoss:
+    """Kill ``ranks`` train nodes after ``step`` with NO hot spare: the
+    job must elastically shrink onto the survivors (ROADMAP item 1).
+
+    The runner consolidates the shadow into a layout-agnostic
+    checkpoint, replans the largest feasible layout on the surviving
+    ranks (`repro.core.costmodel.plan_elastic_mesh`), rebuilds the
+    channel geometry + bucket layout + shadow ownership map for the
+    shrunken world (`repro.core.elastic.rebuild_shadow` +
+    `CheckmateCheckpointer.reconfigure`, booked as the
+    ``elastic-reshard`` stall stage), rewinds onto the checkpoint, and
+    resumes at the new DP width. ``ranks`` are ORIGINAL-world rank ids;
+    a second `TrainNodeLoss` at a later step shrinks again (double
+    shrink). At full level the drill restores onto an FSDP-flipped
+    `ShardingRules` — the one layout change expressible on the 1-device
+    smoke mesh.
+    """
+    step: int
+    ranks: tuple[int, ...] = (0,)
+
+
+@dataclass(frozen=True)
 class TierFailure:
     """Injected durability-tier write failure: every flush record for
     ``step`` raises `TierPutError` on the named tier (the record is still
@@ -191,6 +213,8 @@ class FailureSchedule:
       once; recovery goes through the durability tiers.
     * ``tier_fail`` — `TierFailure`: a tier refuses one step's flush
       records (restore must fall back to another tier).
+    * ``train_node_loss`` — `TrainNodeLoss`: train ranks die with no hot
+      spare; the job elastically shrinks onto the survivors.
     """
     train_fail_steps: tuple[int, ...] = ()
     fabric: tuple[FabricFailure, ...] = ()
@@ -199,6 +223,7 @@ class FailureSchedule:
     wedge_release_s: float = 1.5
     plane_loss: tuple[ShadowPlaneLoss, ...] = ()
     tier_fail: tuple[TierFailure, ...] = ()
+    train_node_loss: tuple[TrainNodeLoss, ...] = ()
 
     def failures_at(self) -> dict:
         """The fabric schedule in `PacketizedChannel(failures_at=...)`
@@ -380,6 +405,53 @@ class Scenario:
                 if not 1 <= t.step <= self.steps:
                     raise ValueError(f"{self.name}: tier_fail step "
                                      f"{t.step} outside 1..{self.steps}")
+        if self.schedule.train_node_loss:
+            if self.checkpointer != "checkmate":
+                raise ValueError(f"{self.name}: elastic shrink drills "
+                                 f"drive a CheckmateCheckpointer")
+            if self.schedule.wedge_node is not None \
+                    or self.schedule.shadow_death:
+                raise ValueError(
+                    f"{self.name}: train_node_loss cannot combine with "
+                    f"wedge / shadow_death drills — the shrink rebuilds "
+                    f"the whole shadow plane")
+            losses = self.schedule.train_node_loss
+            world = self.channel.n_dp_groups * self.channel.ranks_per_group
+            killed: set[int] = set()
+            prev = 0
+            for tl in losses:
+                if not 1 <= tl.step <= self.steps:
+                    raise ValueError(f"{self.name}: train_node_loss step "
+                                     f"{tl.step} outside 1..{self.steps}")
+                if tl.step <= prev:
+                    raise ValueError(f"{self.name}: train_node_loss steps "
+                                     f"must strictly increase")
+                prev = tl.step
+                if not tl.ranks:
+                    raise ValueError(f"{self.name}: train_node_loss with "
+                                     f"no ranks to kill")
+                if len(set(tl.ranks)) != len(tl.ranks):
+                    raise ValueError(f"{self.name}: duplicate ranks in "
+                                     f"one train_node_loss")
+                if self.level == "channel":
+                    bad = [r for r in tl.ranks if not 0 <= r < world]
+                    if bad:
+                        raise ValueError(
+                            f"{self.name}: train_node_loss ranks {bad} "
+                            f"outside the original world 0..{world - 1}")
+                    if killed & set(tl.ranks):
+                        raise ValueError(
+                            f"{self.name}: ranks "
+                            f"{sorted(killed & set(tl.ranks))} killed "
+                            f"twice across train_node_loss events")
+                    killed |= set(tl.ranks)
+            if self.level == "channel" and len(killed) >= world:
+                raise ValueError(f"{self.name}: train_node_loss kills the "
+                                 f"whole {world}-rank world — no survivor "
+                                 f"can host the job")
+            if self.level == "full" and len(losses) > 1:
+                raise ValueError(f"{self.name}: full-level shrink drills "
+                                 f"fire once (one FSDP flip)")
         if self.checkpointer != "checkmate" and self.level == "channel":
             raise ValueError(f"{self.name}: channel-level scenarios drive "
                              f"a CheckmateCheckpointer")
@@ -420,6 +492,9 @@ class Scenario:
             ShadowPlaneLoss(**p) for p in sched.get("plane_loss", ()))
         sched["tier_fail"] = tuple(
             TierFailure(**t) for t in sched.get("tier_fail", ()))
+        sched["train_node_loss"] = tuple(
+            TrainNodeLoss(**{**t, "ranks": tuple(t.get("ranks", (0,)))})
+            for t in sched.get("train_node_loss", ()))
         d["schedule"] = FailureSchedule(**sched)
         d["durability"] = DurabilitySpec(**d.get("durability", {}))
         d["invariants"] = tuple(d.get("invariants", ()))
@@ -539,6 +614,20 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
             tier_fail = (TierFailure(step=int(rng.integers(1, steps + 1)),
                                      tier="local-disk"),)
 
+    # elastic shrink drills (append-only draws: everything above must keep
+    # its draw order so pre-existing seeds expand identically)
+    node_loss: tuple[TrainNodeLoss, ...] = ()
+    world = spec.n_dp_groups * spec.ranks_per_group
+    if (level == "channel" and world >= 4 and steps >= 3
+            and not fabric and not deaths and not train_fails
+            and not plane_loss and not tier_fail
+            and rng.random() < 0.25):
+        n_kill = int(rng.integers(1, world // 2 + 1))
+        ranks = tuple(sorted(int(r) for r in rng.choice(
+            world, size=n_kill, replace=False)))
+        node_loss = (TrainNodeLoss(step=int(rng.integers(2, steps + 1)),
+                                   ranks=ranks),)
+
     return Scenario(
         name=f"sampled-{seed}", level=level, seed=int(seed) & 0x7FFFFFFF,
         steps=steps,
@@ -553,7 +642,8 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
                                  fabric=tuple(fabric),
                                  shadow_death=deaths,
                                  plane_loss=plane_loss,
-                                 tier_fail=tier_fail),
+                                 tier_fail=tier_fail,
+                                 train_node_loss=node_loss),
         durability=durability,
     ).validate()
 

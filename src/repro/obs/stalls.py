@@ -17,11 +17,13 @@ Stage vocabulary (KNOWN_STAGES):
 * ``resync``            — full-state re-replication after a desync
 * ``consolidate-wait``  — waiting on shadow consolidation during recovery
 * ``copy-persist``      — the copy-then-persist baselines' whole stall
+* ``elastic-reshard``   — rebuilding channel + shadow plane onto a
+                          reconfigured mesh after an elastic shrink
 """
 from __future__ import annotations
 
 KNOWN_STAGES = ("send", "quantize", "inline-apply", "resync",
-                "consolidate-wait", "copy-persist")
+                "consolidate-wait", "copy-persist", "elastic-reshard")
 
 
 def stall_attribution(ck) -> dict:

@@ -82,7 +82,8 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
           straggler_ema: float = 0.9,
           straggler_factor: float = 2.0,
           state: Optional[TrainState] = None,
-          step_hook: Optional[Callable] = None) -> tuple[TrainState, LoopStats]:
+          step_hook: Optional[Callable] = None,
+          elastic_rules=None) -> tuple[TrainState, LoopStats]:
     """Run ``steps`` iterations; on injected failure, restore from the
     checkpointer (Checkmate: shadow consolidation) and continue.
 
@@ -97,6 +98,18 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
     iteration (post checkpointer accounting; replayed iterations after a
     recovery call it again with the replayed step number) — the observation
     point `repro.harness` evaluates its per-step invariants from.
+
+    ``elastic_rules`` is the elastic-restart path (`repro.core.elastic`):
+    a `ShardingRules` for the post-failure mesh, or a callable
+    ``(failed_step) -> Optional[ShardingRules]`` (None = keep the current
+    layout). On recovery the loop re-partitions the restored checkpoint
+    onto those rules, recompiles the train step for the new mesh, rebuilds
+    the shadow plane + channel against the re-derived bucket layout
+    (`CheckmateCheckpointer.reconfigure`, booked as the
+    ``elastic-reshard`` stall stage), and resumes. The data stream needs
+    no rebuild: ``SyntheticStream.batch_at`` materializes the GLOBAL
+    batch and ``device_batch`` re-splits it per the new rules, so global
+    batch order is preserved across the shrink by construction.
     """
     mesh = rules.mesh
     failure_plan = failure_plan or FailurePlan()
@@ -137,6 +150,22 @@ def train(cfg: ModelConfig, rules: ShardingRules, *,
                 restored = checkpointer.restore()
             if restored is None:
                 raise
+            nr = (elastic_rules(step + 1) if callable(elastic_rules)
+                  else elastic_rules)
+            if nr is not None and nr is not rules:
+                # elastic restart: land the consolidated checkpoint on the
+                # reconfigured mesh and rebuild everything the old layout
+                # derived (step function, bucket layout, shadow plane,
+                # channel geometry)
+                rules, mesh = nr, nr.mesh
+                step_fn = jax.jit(
+                    build_train_step(cfg, mesh, rules, opt, lr_fn),
+                    donate_argnums=(0,))
+                if isinstance(checkpointer, CheckmateCheckpointer):
+                    from repro.core.elastic import rebuild_shadow
+                    checkpointer.reconfigure(
+                        rebuild_shadow(checkpointer.shadow, restored))
+                elastic_rules = None       # the switch fires once
             state = state_from_checkpoint(restored, cfg, rules)
             step = int(restored["step"])
             stats.recoveries += 1

@@ -163,3 +163,51 @@ def test_every_config_is_shadowable_within_default_budget():
     # the plan's per-node RSS proxy respects the budget everywhere
     for name, p in plans.items():
         assert p.bytes_per_node_max <= cm.ShadowBudget().usable_ram, name
+
+
+# -- elastic mesh planning ----------------------------------------------------
+
+def test_elastic_plan_widest_feasible_dp():
+    plan = cm.plan_elastic_mesh(8)
+    assert plan.dp == 8 and plan.n_ranks == 8 and not plan.fsdp
+    assert plan.survivors == tuple(range(8)) and plan.dropped == ()
+    assert plan.mesh_shape == (8, 1)
+    assert plan.axis_names == ("data", "model")
+
+
+def test_elastic_plan_respects_batch_divisibility():
+    """7 survivors with global_batch=8: dp 7, 6, 5 don't divide the batch,
+    so the plan drops to dp 4 and names the 3 idled ranks."""
+    plan = cm.plan_elastic_mesh(7, cm.ElasticMeshBudget(global_batch=8))
+    assert plan.dp == 4
+    assert plan.survivors == (0, 1, 2, 3) and plan.dropped == (4, 5, 6)
+
+
+def test_elastic_plan_flips_fsdp_under_memory_pressure():
+    """State too big for one replicated rank: the planner flips to FSDP,
+    dividing per-rank state by the DP width."""
+    budget = cm.ElasticMeshBudget(hbm_bytes_per_rank=100.0)
+    plan = cm.plan_elastic_mesh(4, budget, state_bytes=300.0)
+    assert plan.fsdp and plan.dp == 4
+    assert plan.state_bytes_per_rank <= budget.usable_hbm
+
+
+def test_elastic_plan_model_parallel_groups():
+    plan = cm.plan_elastic_mesh(8, cm.ElasticMeshBudget(model_parallel=2))
+    assert plan.mesh_shape == (4, 2)
+    assert plan.axis_names == ("data", "model")
+    # losing two ranks leaves 6 = 3 complete TP groups
+    plan = cm.plan_elastic_mesh(range(6),
+                                cm.ElasticMeshBudget(model_parallel=2))
+    assert plan.dp == 3 and plan.n_ranks == 6
+
+
+def test_elastic_plan_refuses_loudly():
+    with pytest.raises(cm.ElasticPlanError, match="min_dp"):
+        cm.plan_elastic_mesh(1, cm.ElasticMeshBudget(model_parallel=2))
+    with pytest.raises(cm.ElasticPlanError, match="global_batch"):
+        cm.plan_elastic_mesh(3, cm.ElasticMeshBudget(global_batch=7,
+                                                     min_dp=2))
+    with pytest.raises(cm.ElasticPlanError):
+        cm.plan_elastic_mesh(2, cm.ElasticMeshBudget(
+            hbm_bytes_per_rank=10.0, allow_fsdp=False), state_bytes=1e4)

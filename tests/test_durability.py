@@ -436,6 +436,130 @@ def test_partial_loss_hint_names_missing_shards(tmp_path):
         shadow.shutdown()
 
 
+# -- retention GC + object-store put retry (satellites) -----------------------
+
+def test_retention_gc_bounds_disk_over_epochs(tmp_path):
+    """retain_epochs: 20 flush epochs leave a bounded set of records on
+    disk — the retained window plus the chain back to the newest all-base
+    anchor — the newest base+delta chain survives, and restore stays
+    bit-identical to the live shadow."""
+    params = _tree()
+    layout = layout_for_tree(params, cap_bytes=600)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2)
+    tier = LocalDiskTier(tmp_path, retain_epochs=4)
+    dur = DurableShadow([tier], FlushPolicy(rebase_every=4)).attach(shadow)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    chan = InProcessChannel()
+    chan.open(layout)
+    try:
+        for step in range(1, 21):
+            chan.send(StepEvent(step=step, grads=_grads(params, step),
+                                lr=1e-3))
+            for d in chan.poll():
+                shadow.on_delivery(d)
+            dur.drain()
+        ents = tier.entries()
+        epochs = sorted({e.epoch for e in ents})
+        # 21 epochs were written (bootstrap base + 20 steps); only the
+        # window back to the anchor base epoch remains
+        assert dur.epochs_started == 21
+        assert len(epochs) <= 4 + 4           # retain + one rebase cycle
+        assert all(e.kind == "base" for e in ents if e.epoch == epochs[0])
+        assert tier.gc_records_total > 0
+        # no manifest entry points at a missing blob, and no pruned blob
+        # lingers on disk
+        on_disk = {p.name for p in tmp_path.glob("rec_*.bin")}
+        assert on_disk == {e.key for e in ents}
+        assert tier.disk_bytes() == sum(e.nbytes for e in ents)
+        ckpt = restore_from_tiers([tier], layout, n_nodes=2)
+        assert ckpt["step"] == 20
+        ref = shadow.consolidate(timeout=60)
+        for part in ("params", "mu", "nu"):
+            for k in ckpt[part]:
+                assert np.array_equal(ckpt[part][k], ref[part][k]), (part, k)
+    finally:
+        chan.close()
+        shadow.shutdown()
+
+
+def test_retention_never_cuts_newest_chain():
+    """With bases still ahead of the retention cutoff there is no safe
+    anchor below the window — nothing is pruned, the chain stays whole."""
+    tier = ObjectStoreTier(retain_epochs=2)
+    rng = np.random.default_rng(0)
+
+    def rec(epoch, kind):
+        payload = {}
+        if kind != "mark":
+            payload = {0: {"p": rng.standard_normal(8).astype(np.float32),
+                           "m": rng.standard_normal(8).astype(np.float32),
+                           "v": rng.standard_normal(8).astype(np.float32)}}
+        return FlushRecord(epoch=epoch, node=0, step=epoch, kind=kind,
+                           compressed=False, payload=payload)
+
+    for epoch, kind in enumerate(("base", "delta", "delta", "delta")):
+        tier.put(rec(epoch, kind))
+    # the only base (epoch 0) is BELOW the 2-epoch window: epochs 1+
+    # chain back to it, so the anchor keeps everything
+    assert sorted({e.epoch for e in tier.entries()}) == [0, 1, 2, 3]
+    assert tier.gc_records_total == 0
+    # a fresh base inside the window re-anchors; older epochs drop
+    tier.put(rec(4, "base"))
+    tier.put(rec(5, "delta"))
+    assert sorted({e.epoch for e in tier.entries()}) == [4, 5]
+    assert tier.gc_records_total == 4
+
+
+def test_object_store_put_retries_transient_failures():
+    tier = ObjectStoreTier(retry_attempts=3, retry_backoff_s=0.001)
+    tier.transient_fail_steps[12] = 2       # _record() is at step 12
+    entry = tier.put(_record())             # attempt 3 succeeds
+    assert tier.retries_total == 2
+    assert tier.entries() == [entry]
+    assert tier.read(entry).step == 12
+
+
+def test_retry_in_flush_plane_and_clean_give_up(tmp_path):
+    """Transient object-store failures are retried to success on the
+    flush-worker thread; when the budget is exhausted the tier gives up
+    cleanly — the put failure is booked, the epoch stays incomplete on
+    THAT tier only, and restore serves the newest point any tier has."""
+    params = _tree()
+    layout = layout_for_tree(params, cap_bytes=600)
+    shadow = ShadowCluster(layout, OptimizerConfig(lr=1e-3), n_nodes=2)
+    ost = ObjectStoreTier(retry_attempts=2)
+    ost.transient_fail_steps[1] = 1         # one flake: retry succeeds
+    ost.transient_fail_steps[2] = 5         # beyond the budget: give up
+    tiers = [LocalDiskTier(tmp_path), ost]
+    dur = DurableShadow(tiers).attach(shadow)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    shadow.bootstrap(params, zeros, zeros, 0)
+    chan = InProcessChannel()
+    chan.open(layout)
+    try:
+        for step in (1, 2, 3):
+            chan.send(StepEvent(step=step, grads=_grads(params, step),
+                                lr=1e-3))
+            for d in chan.poll():
+                shadow.on_delivery(d)
+            dur.drain()
+        # step 1: both nodes flaked once, retried, landed
+        assert {e.step for e in ost.entries()} == {0, 1, 3}
+        # step 2: budget exhausted -> booked as failures, never raised
+        # into the flush loop (the local tier is unaffected)
+        assert dur.put_failures == 2
+        assert ost.retries_total >= 2
+        assert dur.last_complete_step("local-disk") == 3
+        assert dur.last_complete_step("object-store") == 3
+        assert dur.newest_durable() == ("local-disk", 3)
+        ckpt = restore_from_tiers(tiers, layout, n_nodes=2)
+        assert ckpt["step"] == 3
+    finally:
+        chan.close()
+        shadow.shutdown()
+
+
 # -- costmodel: flush + disk budget terms -------------------------------------
 
 def _layout():

@@ -1,11 +1,16 @@
-"""Elastic scaling: a shadow-consolidated checkpoint restores onto a
-DIFFERENT mesh (changed DP width) and training continues identically —
-the restart path a 1000+-node deployment needs after losing a slice.
-Subprocess: multi-device meshes."""
+"""Elastic recovery: a shadow-consolidated checkpoint restores onto a
+DIFFERENT mesh (changed DP width, FSDP flip) and training continues — the
+restart path a 1000+-node deployment needs after losing a slice with no
+hot spare. The mesh is chosen by `repro.core.costmodel.plan_elastic_mesh`
+and realized by `repro.core.elastic`; captures flow through the
+first-class `CheckmateCheckpointer.on_step` path. Subprocess cases cover
+multi-device meshes; the tier case runs on the smoke mesh."""
 import os
 import subprocess
 import sys
 import textwrap
+
+import numpy as np
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -22,31 +27,37 @@ def run_sub(code, devices, timeout=600):
 
 
 def test_elastic_restore_across_meshes():
+    """DP 4 x TP 2 -> lose ranks 4..7 -> replan DP 2 x TP 2 on the
+    survivors, restore through `recover(new_rules=...)`, keep training."""
     out = run_sub("""
-        import numpy as np, jax, jax.numpy as jnp
+        import numpy as np, jax
         import repro.configs as C
         from repro.core.buckets import layout_for_tree
-        from repro.core.recovery import state_from_checkpoint
+        from repro.core.channel import InProcessChannel, StepEvent
+        from repro.core.checkpoint import CheckmateCheckpointer
+        from repro.core.costmodel import ElasticMeshBudget, plan_elastic_mesh
+        from repro.core.elastic import rules_from_plan
+        from repro.core.recovery import recover
         from repro.core.shadow import ShadowCluster
         from repro.data.synthetic import SyntheticStream, device_batch
-        from repro.dist.sharding import ShardingRules
         from repro.optim import OptimizerConfig
         from repro.train.step import build_train_step, make_train_state
 
         cfg = C.get("tinyllama-1.1b").reduced()
         opt = OptimizerConfig(lr=1e-3)
+        budget = ElasticMeshBudget(model_parallel=2)
 
-        def mesh_of(dp, tp):
-            return jax.make_mesh((dp, tp), ("data", "model"),
-                devices=jax.devices()[:dp*tp],
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
-
-        # phase 1: train 3 steps on a (4 data, 2 model) mesh w/ shadow
-        mesh_a = mesh_of(4, 2)
-        rules_a = ShardingRules(mesh_a)
+        # phase 1: the healthy world — 8 ranks as (4 data, 2 model),
+        # captures through the first-class checkpointer path
+        plan_a = plan_elastic_mesh(8, budget)
+        assert plan_a.mesh_shape == (4, 2) and not plan_a.dropped
+        rules_a = rules_from_plan(plan_a)
+        mesh_a = rules_a.mesh
         state = make_train_state(jax.random.PRNGKey(0), cfg, rules_a)
-        shadow = ShadowCluster(layout_for_tree(state.params), opt, n_nodes=2)
+        shadow = ShadowCluster(layout_for_tree(state.params), opt,
+                               n_nodes=2)
         shadow.bootstrap(state.params, state.mu, state.nu, 0)
+        ck = CheckmateCheckpointer(shadow, channel=InProcessChannel())
         step_a = jax.jit(build_train_step(cfg, mesh_a, rules_a, opt,
                                           lambda s: 1e-3))
         stream = SyntheticStream(cfg, 8, 32, seed=0)
@@ -54,25 +65,29 @@ def test_elastic_restore_across_meshes():
             for t in range(3):
                 batch = device_batch(stream.batch_at(t), rules_a)
                 state, m, g = step_a(state, batch)
-                shadow.on_gradients(t + 1, 1e-3,
-                                    {k: np.asarray(v) for k, v in g.items()})
+                ck.on_step(StepEvent(
+                    step=t + 1, lr=1e-3,
+                    grads={k: np.asarray(v) for k, v in g.items()}))
+        assert ck.n_checkpoints == 3
 
-        # phase 2: "pod lost" -> restore onto (2 data, 4 model), keep going
-        ckpt = shadow.consolidate()
-        assert ckpt["step"] == 3
-        mesh_b = mesh_of(2, 4)
-        rules_b = ShardingRules(mesh_b)
-        state_b = state_from_checkpoint(ckpt, cfg, rules_b)
+        # phase 2: ranks 4..7 lost -> replan on the survivors and land
+        # the consolidated checkpoint on the shrunken mesh
+        plan_b = plan_elastic_mesh(range(4), budget)
+        assert plan_b.dp == 2 and plan_b.mesh_shape == (2, 2)
+        rules_b = rules_from_plan(plan_b)
+        state_b, resume = recover(ck.shadow, cfg, rules_a,
+                                  new_rules=rules_b)
+        assert resume == 3 and int(state_b.step) == 3
         # SPMD-vs-CPU-replay agreement: <= 1 ULP f32 (the paper's own
-        # "8th decimal place" criterion, §6.5); bitwise equality holds for
-        # identical compile contexts (test_shadow/test_recovery).
+        # "8th decimal place" criterion, par.6.5); bitwise equality holds
+        # for identical compile contexts (test_shadow/test_recovery).
         for k in state_b.params:
             np.testing.assert_allclose(np.asarray(state_b.params[k]),
                                        np.asarray(state.params[k]),
                                        rtol=1e-6, atol=1e-7)
-        step_b = jax.jit(build_train_step(cfg, mesh_b, rules_b, opt,
+        step_b = jax.jit(build_train_step(cfg, rules_b.mesh, rules_b, opt,
                                           lambda s: 1e-3))
-        with mesh_b:
+        with rules_b.mesh:
             batch = device_batch(stream.batch_at(3), rules_b)
             state_b, m_b, _ = step_b(state_b, batch)
 
@@ -88,6 +103,130 @@ def test_elastic_restore_across_meshes():
         print("ELASTIC_OK", float(m_a["loss"]), float(m_b["loss"]))
     """, devices=8)
     assert "ELASTIC_OK" in out
+
+
+def test_fsdp_to_pure_dp_restore():
+    """An FSDP-sharded run restores onto a smaller pure-DP (replicated)
+    mesh: the planner flips the split, the consolidated host tree lands
+    exactly, and the next step compiles and runs."""
+    out = run_sub("""
+        import numpy as np, jax
+        import repro.configs as C
+        from repro.core.buckets import layout_for_tree
+        from repro.core.channel import InProcessChannel, StepEvent
+        from repro.core.checkpoint import CheckmateCheckpointer
+        from repro.core.costmodel import ElasticMeshBudget, plan_elastic_mesh
+        from repro.core.elastic import rules_from_plan
+        from repro.core.recovery import recover
+        from repro.core.shadow import ShadowCluster
+        from repro.data.synthetic import SyntheticStream, device_batch
+        from repro.optim import OptimizerConfig
+        from repro.train.step import build_train_step, make_train_state
+
+        cfg = C.get("tinyllama-1.1b").reduced()
+        opt = OptimizerConfig(lr=1e-3)
+
+        plan_a = plan_elastic_mesh(4, ElasticMeshBudget(), fsdp=True)
+        assert plan_a.fsdp and plan_a.dp == 4
+        rules_a = rules_from_plan(plan_a)
+        state = make_train_state(jax.random.PRNGKey(1), cfg, rules_a)
+        shadow = ShadowCluster(layout_for_tree(state.params), opt,
+                               n_nodes=2)
+        shadow.bootstrap(state.params, state.mu, state.nu, 0)
+        ck = CheckmateCheckpointer(shadow, channel=InProcessChannel())
+        step_a = jax.jit(build_train_step(cfg, rules_a.mesh, rules_a, opt,
+                                          lambda s: 1e-3))
+        stream = SyntheticStream(cfg, 8, 32, seed=1)
+        with rules_a.mesh:
+            for t in range(2):
+                batch = device_batch(stream.batch_at(t), rules_a)
+                state, m, g = step_a(state, batch)
+                ck.on_step(StepEvent(
+                    step=t + 1, lr=1e-3,
+                    grads={k: np.asarray(v) for k, v in g.items()}))
+
+        # the shrunken world drops FSDP: 2 survivors, fully replicated
+        plan_b = plan_elastic_mesh(2, ElasticMeshBudget())
+        assert not plan_b.fsdp and plan_b.dp == 2
+        rules_b = rules_from_plan(plan_b)
+        state_b, resume = recover(ck.shadow, cfg, rules_a,
+                                  new_rules=rules_b)
+        assert resume == 2
+        for k in state_b.params:
+            np.testing.assert_allclose(np.asarray(state_b.params[k]),
+                                       np.asarray(state.params[k]),
+                                       rtol=1e-6, atol=1e-7)
+        step_b = jax.jit(build_train_step(cfg, rules_b.mesh, rules_b, opt,
+                                          lambda s: 1e-3))
+        with rules_b.mesh:
+            batch = device_batch(stream.batch_at(2), rules_b)
+            state_b, m_b, _ = step_b(state_b, batch)
+        assert int(state_b.step) == 3
+        print("FSDP_DP_OK")
+    """, devices=4)
+    assert "FSDP_DP_OK" in out
+
+
+def test_recover_from_tiers_onto_reconfigured_mesh(tmp_path):
+    """Total plane loss + elastic mesh change in ONE recovery: the tiers
+    are read with the OLD capture layout (they wrote those records) and
+    only the final device_put targets the new rules — the smoke mesh's
+    FSDP flip, the layout change a single device can express."""
+    import jax
+
+    import repro.configs as C
+    from repro.core.buckets import layout_for_tree
+    from repro.core.channel import InProcessChannel, StepEvent
+    from repro.core.checkpoint import CheckmateCheckpointer
+    from repro.core.recovery import recover
+    from repro.core.shadow import ShadowCluster
+    from repro.data.synthetic import SyntheticStream, device_batch
+    from repro.dist.sharding import ShardingRules, make_smoke_mesh
+    from repro.durability import DurableShadow, LocalDiskTier
+    from repro.optim import OptimizerConfig
+    from repro.train.step import build_train_step, make_train_state
+
+    cfg = C.get("tinyllama-1.1b").reduced()
+    opt = OptimizerConfig(lr=1e-3)
+    rules_a = ShardingRules(make_smoke_mesh())
+    state = make_train_state(jax.random.PRNGKey(0), cfg, rules_a)
+    shadow = ShadowCluster(layout_for_tree(state.params), opt, n_nodes=2)
+    dur = DurableShadow([LocalDiskTier(tmp_path)]).attach(shadow)
+    shadow.bootstrap(state.params, state.mu, state.nu, 0)
+    ck = CheckmateCheckpointer(shadow, channel=InProcessChannel())
+    step_fn = jax.jit(build_train_step(cfg, rules_a.mesh, rules_a, opt,
+                                       lambda s: 1e-3))
+    stream = SyntheticStream(cfg, 4, 16, seed=0)
+    try:
+        with rules_a.mesh:
+            for t in range(3):
+                batch = device_batch(stream.batch_at(t), rules_a)
+                state, m, g = step_fn(state, batch)
+                ck.on_step(StepEvent(
+                    step=t + 1, lr=1e-3,
+                    grads={k: np.asarray(v) for k, v in g.items()}))
+        dur.drain()
+        for n in list(shadow.nodes):        # the WHOLE plane dies
+            shadow.kill_node(n.node_id)
+
+        rules_b = ShardingRules(make_smoke_mesh(), fsdp=True)
+        state_b, resume = recover(shadow, cfg, rules_a,
+                                  tiers=dur.tiers, new_rules=rules_b)
+        assert resume == 3
+        for k in state_b.params:
+            assert np.array_equal(np.asarray(state_b.params[k]),
+                                  np.asarray(state.params[k])), k
+        for k in state_b.mu:
+            assert np.array_equal(np.asarray(state_b.mu[k]),
+                                  np.asarray(state.mu[k])), k
+        step_b = jax.jit(build_train_step(cfg, rules_b.mesh, rules_b, opt,
+                                          lambda s: 1e-3))
+        with rules_b.mesh:
+            batch = device_batch(stream.batch_at(3), rules_b)
+            state_b, m2, _ = step_b(state_b, batch)
+        assert int(state_b.step) == 4
+    finally:
+        shadow.shutdown()
 
 
 def test_fsdp_zero1_capture_compiles():

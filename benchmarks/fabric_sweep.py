@@ -6,8 +6,23 @@
   single-switch idealization for the same workload,
 * failure drills — spine kill (reroute) and shadow-NIC kill (capture loss)
   mid-iteration.
+
+``--json`` mode benchmarks the calendar-queue fast path
+(`simulate_fabric(fast=True)`) against the per-frame oracle on the Fig 10
+512-rank sweep and writes ``BENCH_fabric.json``: min-of-N wall clock per
+replication factor, plus a full `FabricResult` equality check per row (the
+fast path is only admissible while it is bit-identical).  Exits nonzero if
+the aggregate speedup is below 3x or any row's results diverge — the CI
+gate for the fast engine.  Timing on shared CPU hosts is noisy (+-30%
+burst throttling), hence min-of-N, never means.
 """
 from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
 
 from benchmarks.common import csv_row
 from repro.net.simulator import (FailureSpec, simulate_fabric,
@@ -50,5 +65,73 @@ def run():
             f"ring_ok={snic.ring_completed} ok={snic.reassembled_ok}")
 
 
+def _min_time(fn, reps: int):
+    """(best wall-clock seconds, last result) over ``reps`` runs."""
+    best, result = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def run_json(out_path: str = "BENCH_fabric.json", reps: int = 3,
+             min_speedup: float = 3.0) -> int:
+    fails, rows = [], []
+    for rf in (1, 2, 4, 8):
+        cfg = dict(SCALE, replication_factor=rf)
+        t_oracle, oracle = _min_time(
+            lambda: simulate_fabric(fast=False, **cfg), reps)
+        t_fast, fast = _min_time(
+            lambda: simulate_fabric(fast=True, **cfg), reps)
+        identical = (dataclasses.asdict(oracle) == dataclasses.asdict(fast))
+        rows.append({
+            "replication_factor": rf,
+            "events": oracle.events,
+            "tx_over_rx": oracle.tx_over_rx,
+            "per_frame_s": t_oracle,
+            "fast_s": t_fast,
+            "speedup": t_oracle / t_fast,
+            "identical": identical,
+        })
+        if not identical:
+            diffs = [k for k, v in dataclasses.asdict(oracle).items()
+                     if v != getattr(fast, k)]
+            fails.append(f"rf={rf}: fast result diverges from the "
+                         f"per-frame oracle on {diffs}")
+    per_frame_total = sum(r["per_frame_s"] for r in rows)
+    fast_total = sum(r["fast_s"] for r in rows)
+    report = {
+        "workload": "Fig 10 rail sweep: 512 ranks / 2 DP groups, rf 1-8",
+        "scale": {k: (v if not isinstance(v, str) else v)
+                  for k, v in SCALE.items()},
+        "reps": reps,
+        "timing": "min-of-N per engine (shared-CPU noise is one-sided)",
+        "rows": rows,
+        "per_frame_total_s": per_frame_total,
+        "fast_total_s": fast_total,
+        "speedup": per_frame_total / fast_total,
+        "min_speedup_gate": min_speedup,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    if report["speedup"] < min_speedup:
+        fails.append(f"fast-path speedup {report['speedup']:.2f}x is below "
+                     f"the {min_speedup:.0f}x gate")
+    for msg in fails:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if fails else 0
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="fast-vs-oracle Fig 10 benchmark; write "
+                         "BENCH_fabric.json and gate on >= 3x + identity")
+    ap.add_argument("--out", default="BENCH_fabric.json")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    if args.json:
+        sys.exit(run_json(args.out, reps=args.reps))
     run()

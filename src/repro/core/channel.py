@@ -334,6 +334,8 @@ class PacketizedChannel:
             flats for the surviving owners.
         shadow_rails: shadow-rail leaf count (`repro.net.planner`); >1
             spreads the sharded owners' incast over independent leaves.
+        fast: run each send on the simulator's calendar-queue fast engine
+            (bit-identical to the per-frame oracle; see docs/netsim.md).
     """
     name = "packetized"
 
@@ -345,7 +347,8 @@ class PacketizedChannel:
                  shadow_nics: int = 2, pfc=None,
                  frame_quantum: Optional[int] = None,
                  failures_at: Optional[dict] = None,
-                 sharded: bool = False, shadow_rails: int = 1):
+                 sharded: bool = False, shadow_rails: int = 1,
+                 fast: bool = False):
         self.topology = _canon_topology(topology)
         self.n_dp_groups = n_dp_groups
         self.ranks_per_group = ranks_per_group
@@ -361,6 +364,11 @@ class PacketizedChannel:
         self.failures_at = dict(failures_at or {})
         self.sharded = sharded
         self.shadow_rails = shadow_rails
+        # calendar-queue fast engine vs the per-frame oracle — bit-identical
+        # results (tests/test_fabric_fastpath.py), so this is purely a
+        # wall-clock knob; recorded in scenario JSON so bundles replay on
+        # the exact engine that failed
+        self.fast = fast
         self.dead_shadow_nodes: set[int] = set()
         self._owners: Optional[dict] = None   # bucket_id -> owner node
         self._route_starts: list[int] = []    # owner step fn over total buf
@@ -574,7 +582,8 @@ class PacketizedChannel:
             failures=self._failures_for(event.step),
             frame_quantum=self.frame_quantum,
             shadow_route=self._owner_at if self.sharded else None,
-            shadow_cuts=self._route_starts[1:] if self.sharded else ())
+            shadow_cuts=self._route_starts[1:] if self.sharded else (),
+            fast=self.fast)
 
         def frame_tx(f):                     # injection: slice real bytes in
             off = f.dp_group * per + sim.wire_offset(f)

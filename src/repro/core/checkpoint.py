@@ -421,6 +421,7 @@ class CheckmateCheckpointer(BaseCheckpointer):
             # the survivors replaying (consolidate reports the holes)
         assert event.grads is not None, "Checkmate consumes captured gradients"
         n_skipped = len(self.skipped_steps)
+        lag0 = float(getattr(self.shadow, "lag_wait_s_total", 0.0))
         stall = float(self.channel.send(event) or 0.0)
         t1 = time.perf_counter()
         self._apply_deliveries()
@@ -434,9 +435,18 @@ class CheckmateCheckpointer(BaseCheckpointer):
         # inline apply is booked on top — so parts sum == stall + inline
         parts = dict(getattr(self.channel, "last_send_parts", None)
                      or {"send": stall})
+        # a bounded-lag shadow (ShadowCluster(max_lag_steps=...)) may have
+        # blocked this ingest until its backlog dropped under the bound —
+        # split that wait out of the inline hand-off as the named
+        # `apply-lag` stage (the zero-overhead budget a too-slow applier
+        # actually costs the trainer); parts stay sum-consistent
+        lag_wait = float(getattr(self.shadow, "lag_wait_s_total", 0.0)) - lag0
+        if lag_wait > 0.0:
+            parts["apply-lag"] = lag_wait
+            inline = max(0.0, inline - lag_wait)
         parts["inline-apply"] = inline
         self._parts = parts
-        return stall + inline
+        return sum(parts.values())
 
     def reconfigure(self, shadow: ShadowCluster,
                     channel: Optional[GradientChannel] = None) -> float:

@@ -27,6 +27,17 @@ Async mode runs one worker thread per node (the paper's timeliness
 requirement §6.3: shadow must finish before training starts the next
 optimizer step); queue depth and per-apply wall time are tracked so the
 timeliness condition is observable.
+
+Two overlap mechanisms keep a slow applier off the critical path (GoCkpt,
+PAPERS.md): the flat apply *double-buffers* deliveries — bucket i+1's
+host->device transfer is staged while bucket i's fused update runs — and a
+falling-behind async shadow may run with a bounded multi-step lag
+(``max_lag_steps``): the worker drains up to K pending deliveries per
+wakeup and replays them as K sequential fused updates on the
+already-resident flats (bit-identical to K separate applies by
+construction — the acceptance bar, see tests/test_flat_shadow.py), while
+the trainer blocks only when the backlog would exceed the bound; that wait
+is surfaced as the ``apply-lag`` stall stage (obs/stalls.py).
 """
 from __future__ import annotations
 
@@ -291,6 +302,29 @@ class ShadowNode:
                                           "node": self.node_id}):
             return self._apply(step, lr, flats, grad_scale)
 
+    def apply_batch(self, items: list[tuple]):
+        """Apply K pending deliveries as K *sequential* fused updates on the
+        already-resident flats — the bounded-lag catch-up path.
+
+        ``items`` is ``[(step, lr, flats, grad_scale), ...]`` in delivery
+        order. Sequential replay (not gradient summing) is deliberate: it is
+        bit-identical to K separate :meth:`apply` calls by construction,
+        which is the acceptance bar for lagged applies (a summed single
+        update would change Adam's moment trajectory). One batched span
+        covers the whole drain so catch-up is visible in traces.
+        """
+        if len(items) == 1:
+            step, lr, flats, grad_scale = items[0]
+            return self.apply(step, lr, flats, grad_scale)
+        with _obs.get().tracer.span("shadow.apply_batch",
+                                    track=f"shadow{self.node_id}",
+                                    args={"k": len(items),
+                                          "from_step": items[0][0],
+                                          "to_step": items[-1][0],
+                                          "node": self.node_id}):
+            for step, lr, flats, grad_scale in items:
+                self._apply(step, lr, flats, grad_scale)
+
     def _apply(self, step, lr, flats, grad_scale):
         t0 = time.perf_counter()
         if self.flat:
@@ -302,9 +336,17 @@ class ShadowNode:
             # them mid-apply (it would see invalidated buffers, not a torn
             # tree)
             with self.state_lock:
-                for bid in self.bucket_ids:
+                ids = self.bucket_ids
+                # double-buffered receive: stage bucket i+1's delivery
+                # (host->device transfer) before dispatching bucket i's
+                # fused update, so the transfer overlaps the async apply;
+                # same per-bucket update stream, so bit-identical
+                nxt = jnp.asarray(flats[ids[0]]) if ids else None
+                for j, bid in enumerate(ids):
+                    g, nxt = nxt, (jnp.asarray(flats[ids[j + 1]])
+                                   if j + 1 < len(ids) else None)
                     p, m, v = self._update_flat(
-                        self._pf[bid], jnp.asarray(flats[bid]),
+                        self._pf[bid], g,
                         self._mf[bid], self._vf[bid], step_f, lr_f, scale_f)
                     self._pf[bid] = p
                     self._mf[bid] = m
@@ -340,6 +382,12 @@ class ShadowStats:
     mean_apply_s: float
     max_apply_s: float
     per_node_apply_s: list[float]
+    # bounded-lag accounting (max_lag_steps runs; defaults keep the
+    # legacy construction sites valid)
+    lag_waits: int = 0             # times the trainer blocked on the bound
+    lag_wait_s: float = 0.0        # total seconds the trainer waited
+    batched_applies: int = 0       # multi-step worker drains (k >= 2)
+    max_batch: int = 1             # largest k a single drain replayed
 
 
 class ShadowCluster:
@@ -349,7 +397,15 @@ class ShadowCluster:
                  n_nodes: int = 1, async_mode: bool = False,
                  flat: bool = True,
                  apply_times_maxlen: int = APPLY_TIMES_MAXLEN,
-                 assignment: Optional[dict] = None):
+                 assignment: Optional[dict] = None,
+                 max_lag_steps: Optional[int] = None):
+        if max_lag_steps is not None:
+            if max_lag_steps < 1:
+                raise ValueError(f"max_lag_steps must be >= 1, "
+                                 f"got {max_lag_steps}")
+            if not async_mode:
+                raise ValueError("max_lag_steps bounds the async delivery "
+                                 "queue; sync mode never lags")
         self.layout = layout
         self.opt = opt
         self.n_nodes = n_nodes
@@ -369,11 +425,20 @@ class ShadowCluster:
         self.train_step_seen = 0
         self.max_queue_depth = 0
         self.dead_nodes: set[int] = set()
+        # bounded multi-step lag (None = legacy unbounded queue): a worker
+        # drains up to max_lag_steps pending deliveries per wakeup and the
+        # trainer blocks in _ingest while a node's backlog is at the bound
+        self.max_lag_steps = max_lag_steps
+        self.lag_waits = 0
+        self.lag_wait_s_total = 0.0
+        self.batched_applies = 0
+        self.max_batch = 1
         # optional repro.durability.DurableShadow (set by its attach());
         # duck-typed so core never imports the durability package
         self.durability = None
         self._queues: list[queue.Queue] = []
         self._drained: list[threading.Event] = []
+        self._lag_cvs: list[threading.Condition] = []
         self._workers: list[threading.Thread] = []
         if async_mode:
             self._start_workers()
@@ -389,38 +454,72 @@ class ShadowCluster:
             t.start()
             self._queues.append(q)
             self._drained.append(ev)
+            self._lag_cvs.append(threading.Condition())
             self._workers.append(t)
 
     def _worker(self, node: ShadowNode, q: queue.Queue,
                 drained: threading.Event):
         by_id = node._by_id
+        # batched drain bound: a bounded-lag shadow catches up by replaying
+        # up to K pending deliveries per wakeup; legacy (None) keeps the
+        # exact one-item-per-wakeup behavior
+        limit = self.max_lag_steps or 1
         while True:
             item = q.get()
-            if item is None:
-                q.task_done()
+            stop = item is None
+            batch = [] if stop else [item]
+            while not stop and len(batch) < limit:
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    stop = True           # shutdown sentinel: drain then exit
+                    break
+                batch.append(nxt)
+            if batch and node.node_id in self.dead_nodes:
+                # killed after these items were enqueued: its state is gone,
+                # applying would read a cleared partition
+                self._settle(node.node_id, q, drained, len(batch))
+                batch = []
+            if batch:
+                items = []
+                for step, lr, scale, grads, flats in batch:
+                    if flats is None:
+                        # legacy leaf-tree hand-off: bucket packing happens
+                        # HERE, on the shadow node — the caller only
+                        # enqueued a reference
+                        flats = {bid: pack_bucket(by_id[bid], grads, xp=np)
+                                 for bid in node.bucket_ids}
+                    items.append((step, lr, flats, scale))
+                node.apply_batch(items)
+                if len(items) > 1:
+                    self.batched_applies += 1
+                    if len(items) > self.max_batch:
+                        self.max_batch = len(items)
+                self._settle(node.node_id, q, drained,
+                             len(batch) + (1 if stop else 0))
+            elif stop:
+                self._settle(node.node_id, q, drained, 1)
+            if stop:
                 drained.set()
                 return
-            step, lr, scale, grads, flats = item
-            if node.node_id in self.dead_nodes:
-                # killed after this item was enqueued: its state is gone,
-                # applying would read a cleared partition
-                q.task_done()
-                with q.mutex:
-                    if q.unfinished_tasks == 0:
-                        drained.set()
-                continue
-            if flats is None:
-                # legacy leaf-tree hand-off: bucket packing happens HERE, on
-                # the shadow node — the caller only enqueued a reference
-                flats = {bid: pack_bucket(by_id[bid], grads, xp=np)
-                         for bid in node.bucket_ids}
-            node.apply(step, lr, flats, scale)
+
+    def _settle(self, node_id: int, q: queue.Queue,
+                drained: threading.Event, n: int):
+        """Mark ``n`` queue items done, refresh the drain signal, and wake a
+        trainer blocked on the lag bound (checked under the queue lock)."""
+        for _ in range(n):
             q.task_done()
-            # drain signal for the event-based consolidate wait: set only
-            # when no enqueued work remains (checked under the queue lock)
-            with q.mutex:
-                if q.unfinished_tasks == 0:
-                    drained.set()
+        # drain signal for the event-based consolidate wait: set only
+        # when no enqueued work remains
+        with q.mutex:
+            if q.unfinished_tasks == 0:
+                drained.set()
+        if self.max_lag_steps is not None:
+            cv = self._lag_cvs[node_id]
+            with cv:
+                cv.notify_all()
 
     # -- API -------------------------------------------------------------------
     def bootstrap(self, params, mu, nu, step: int = 0):
@@ -433,6 +532,24 @@ class ShadowCluster:
         params = {k: np.asarray(v) for k, v in params.items()}
         mu = {k: np.asarray(v) for k, v in mu.items()}
         nu = {k: np.asarray(v) for k, v in nu.items()}
+        # a full-state install supersedes any still-queued deliveries: with
+        # a lagged backlog, replaying a pre-resync gradient onto the freshly
+        # seeded state would regress it (no-op when queues are drained, the
+        # normal case)
+        for q in self._queues:
+            try:
+                while True:
+                    item = q.get_nowait()
+                    if item is None:      # never eat a shutdown sentinel
+                        q.put(None)       # (task_done below pairs our get
+                    q.task_done()         # with the re-put's increment)
+                    if item is None:
+                        break
+            except queue.Empty:
+                pass
+            while self._pending(q):       # an in-flight apply (already off
+                time.sleep(0.001)         # the queue) finishes on the OLD
+            #                               state before the install below
         self.dead_nodes.clear()
         for node in self.nodes:
             node.bootstrap(params, mu, nu, step)
@@ -465,6 +582,10 @@ class ShadowCluster:
             with q.mutex:
                 if q.unfinished_tasks == 0:
                     ev.set()
+            if self.max_lag_steps is not None:
+                cv = self._lag_cvs[node_id]
+                with cv:          # wake a trainer blocked on the dead node
+                    cv.notify_all()
         with node.state_lock:     # an in-flight apply finishes first
             node._pf, node._mf, node._vf = {}, {}, {}
             node.params, node.mu, node.nu = {}, {}, {}
@@ -538,14 +659,21 @@ class ShadowCluster:
         if self.async_mode:
             for node in targets:
                 q = self._queues[node.node_id]
+                if self.max_lag_steps is not None:
+                    self._lag_gate(node.node_id, q)
                 self._drained[node.node_id].clear()
                 sub = None if flats is None else \
                     {bid: flats[bid] for bid in node.bucket_ids}
                 q.put((step, lr, grad_scale, grads, sub))
                 # mutex-based depth (queue.qsize() is racy and unimplemented
                 # on some platforms); put() precedes, so depth >= 1 here
-                self.max_queue_depth = max(self.max_queue_depth,
-                                           self._pending(q))
+                depth = self._pending(q)
+                self.max_queue_depth = max(self.max_queue_depth, depth)
+                if self.max_lag_steps is not None:
+                    _obs.get().metrics.gauge(
+                        "shadow_lag_steps",
+                        "Shadow applier backlog at ingest (bounded by "
+                        "max_lag_steps)").set(depth, node=node.node_id)
             if self.durability is not None:
                 self.durability.notify(step)      # queue puts only
             return
@@ -564,6 +692,31 @@ class ShadowCluster:
     def _pending(q: queue.Queue) -> int:
         with q.mutex:
             return q.unfinished_tasks
+
+    def _lag_gate(self, node_id: int, q: queue.Queue):
+        """Block the caller (the trainer's ingest) while ``node_id``'s
+        backlog is at the lag bound — this wait IS the bounded-lag
+        contract: the shadow may trail by at most ``max_lag_steps``
+        iterations, and any time the trainer spends here is booked by the
+        checkpointer as the ``apply-lag`` stall stage."""
+        limit = self.max_lag_steps
+        if self._pending(q) < limit or node_id in self.dead_nodes:
+            return
+        t0 = time.perf_counter()
+        cv = self._lag_cvs[node_id]
+        with cv:
+            # timed wait (not bare) so a node killed mid-wait can't strand
+            # the trainer: the dead check re-runs each wakeup
+            while (self._pending(q) >= limit
+                   and node_id not in self.dead_nodes):
+                cv.wait(0.05)
+        dt = time.perf_counter() - t0
+        self.lag_waits += 1
+        self.lag_wait_s_total += dt
+        _obs.get().metrics.counter(
+            "shadow_lag_wait_seconds_total",
+            "Trainer wait for a backlogged shadow applier "
+            "(the apply-lag stall stage)").inc(dt, node=node_id)
 
     def consolidate(self, timeout: Optional[float] = None) -> dict:
         """Distributed gather: reassemble a full checkpoint from per-node
@@ -672,7 +825,11 @@ class ShadowCluster:
             max_queue_depth=self.max_queue_depth,
             mean_apply_s=total / count if count else 0.0,
             max_apply_s=max((n.apply_max_s for n in self.nodes), default=0.0),
-            per_node_apply_s=per_node)
+            per_node_apply_s=per_node,
+            lag_waits=self.lag_waits,
+            lag_wait_s=self.lag_wait_s_total,
+            batched_applies=self.batched_applies,
+            max_batch=self.max_batch)
 
     def shutdown(self):
         if self.durability is not None:

@@ -231,6 +231,30 @@ GOLDEN: dict[str, Scenario] = {s.name: s for s in [
         shadow_nodes=2,
         schedule=FailureSchedule(wedge_node=0, wedge_release_s=1.5)),
 
+    # -- bounded multi-step lag under a throttled applier --------------------
+    # every apply is deliberately slow, so the trainer outruns the shadow,
+    # hits the max_lag_steps bound (booked as the apply-lag stall stage),
+    # and the workers catch up with batched K-step replays; the fast fabric
+    # engine rides along so the lagged path is exercised on it too
+    _sc("slow-apply-clean", seed=111, steps=8, shadow_async=True,
+        shadow_nodes=2, max_lag_steps=3, apply_delay_s=0.03,
+        channel=ChannelSpec(**_RAIL, fast=True)),
+    # a mid-run link cut desyncs the stream while the applier is lagging:
+    # the resync's full-state copy must supersede the queued backlog
+    _sc("slow-apply-with-link-burst", seed=112, steps=10, shadow_async=True,
+        shadow_nodes=2, max_lag_steps=3, apply_delay_s=0.03,
+        channel=ChannelSpec(**_RAIL),
+        schedule=FailureSchedule(fabric=(
+            FabricFailure(step=3, kind="link", target=("leaf0", "spine0")),
+            FabricFailure(step=3, kind="shadow_nic", target="s0")))),
+    # sharded owners, each lagging independently: the final consolidate is
+    # a distributed gather across backlogged nodes and must still land
+    # bit-identical at the trainer's step
+    _sc("slow-apply-consolidate", seed=113, steps=8, shadow_nodes=3,
+        n_leaves=4, cap_bytes=256, shadow_async=True,
+        max_lag_steps=3, apply_delay_s=0.04,
+        channel=ChannelSpec(**_SHARD)),
+
     # -- full-stack: the real training loop ---------------------------------
     _sc("full-inprocess-recovery", level="full", seed=71, steps=8,
         schedule=FailureSchedule(train_fail_steps=(3, 6))),

@@ -177,8 +177,8 @@ class StallAttribution(Invariant):
     order to exactly ``stall_total`` (repro.obs.stalls)."""
     name = "stall-attribution"
 
-    KNOWN = frozenset(("send", "quantize", "inline-apply", "resync",
-                       "consolidate-wait", "copy-persist",
+    KNOWN = frozenset(("send", "quantize", "inline-apply", "apply-lag",
+                       "resync", "consolidate-wait", "copy-persist",
                        "elastic-reshard"))
 
     def applies(self, trace) -> bool:
@@ -297,6 +297,63 @@ class ShadowTrainerBitIdentity(Invariant):
         if bad:
             yield self._v(rec.step, f"shadow@{rec.shadow_step} != "
                                     f"trainer@{rec.shadow_step}: {bad}")
+
+
+@register
+class ApplyLagBound(Invariant):
+    """A bounded-lag shadow honors its contract end to end: the applier
+    never trails the trainer by more than ``max_lag_steps`` queued
+    deliveries (sampled right after every ingest), the trainer's wait on a
+    backlogged applier is booked as the named ``apply-lag`` stage, and a
+    throttled applier actually exercises the machinery — the bound blocks
+    at least once and (for bounds >= 3) a multi-step batched catch-up
+    replay runs. Bit-identity of lagged applies is not re-proved here: the
+    batched replay feeds the same consolidated tree `shadow-bit-identity`
+    checks at every consolidation point."""
+    name = "apply-lag-bound"
+
+    def applies(self, trace) -> bool:
+        return (trace.scenario.checkpointer == "checkmate"
+                and trace.scenario.max_lag_steps is not None)
+
+    def check_step(self, trace, rec):
+        k = trace.scenario.max_lag_steps
+        if rec.shadow_lag is not None and rec.shadow_lag > k:
+            yield self._v(rec.step, f"shadow lag {rec.shadow_lag} exceeds "
+                                    f"max_lag_steps={k}")
+
+    def check_end(self, trace):
+        st = trace.shadow_stats
+        if st is None:
+            return                  # full level: no cluster stats recorded
+        sc = trace.scenario
+        k = sc.max_lag_steps
+        if st.max_queue_depth > k:
+            yield self._v(None, f"delivery queue reached depth "
+                                f"{st.max_queue_depth}, past the lag bound "
+                                f"{k}")
+        if st.max_batch > max(k, 1):
+            yield self._v(None, f"a worker drained {st.max_batch} steps in "
+                                f"one batch, past the lag bound {k}")
+        stages = dict(getattr(trace.checkpointer, "stall_stages", {}) or {})
+        if st.lag_waits > 0 and "apply-lag" not in stages:
+            yield self._v(None, "trainer waited on a backlogged applier "
+                                "but no 'apply-lag' stage was booked")
+        if not (sc.apply_delay_s > 0 and sc.steps > k):
+            return                  # bound never provably under pressure
+        if sc.schedule.fabric or sc.schedule.train_fail_steps:
+            return                  # resync / restore settles the backlog
+            #                         mid-run, so pressure isn't guaranteed
+        if st.lag_waits == 0:
+            yield self._v(None, "throttled applier never backlogged to the "
+                                "bound — the apply-lag machinery was not "
+                                "exercised")
+        if k >= 3 and st.max_batch < 2:
+            # the gate admits at most k pending (one in flight + k-1
+            # queued), so a wake can only see a multi-item backlog for
+            # bounds >= 3
+            yield self._v(None, f"lag bound {k} under a throttled applier "
+                                f"but no multi-step batched apply ran")
 
 
 @register

@@ -127,6 +127,7 @@ class StepRecord:
     shadow_missing: Optional[dict] = None  # node -> buckets lost with it
     dead_nodes: tuple = ()               # dead owners at this consolidate
     resync: bool = False                 # healed via full-state copy
+    shadow_lag: Optional[int] = None     # async applier backlog after ingest
     restored_step: Optional[int] = None  # a restore() ran just before this
     plane_restore: bool = False          # ...and it came from the tiers
     elastic: bool = False                # ...and it landed on a shrunken mesh
@@ -159,6 +160,7 @@ class Trace:
         self.tiers: list = []                # its Tier objects
         self.plane_losses: list[dict] = []   # total-loss drills, as observed
         self.elastic_events: list[dict] = []  # shrink drills, as observed
+        self.shadow_stats = None             # final ShadowStats (channel lvl)
         self.dur_tmpdir = None               # local-disk tier root; cleaned
         #                                      by run_scenario AFTER end-of-
         #                                      run invariants read the tier
@@ -295,6 +297,20 @@ def _install_wedge(shadow, node_id: int, release_s: float):
     node.apply = wedged
 
 
+def _install_throttle(shadow, delay_s: float):
+    """Make every shadow apply deliberately slow (the slow-apply drills).
+    Wraps ``_apply`` (not ``apply``) so both the single and the batched
+    (`apply_batch`) paths pay the delay per replayed step."""
+    for node in shadow.nodes:
+        original = node._apply
+
+        def slowed(*a, _orig=original, **kw):
+            time.sleep(delay_s)
+            return _orig(*a, **kw)
+
+        node._apply = slowed
+
+
 def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
     import jax.numpy as jnp
 
@@ -317,7 +333,10 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
     zeros = {k: np.zeros_like(v) for k, v in params.items()}
 
     shadow = ShadowCluster(layout, opt, n_nodes=sc.shadow_nodes,
-                           async_mode=sc.shadow_async)
+                           async_mode=sc.shadow_async,
+                           max_lag_steps=sc.max_lag_steps)
+    if sc.apply_delay_s:
+        _install_throttle(shadow, sc.apply_delay_s)
     trace.layout = layout
     dur = None
     if sc.durability.enabled:
@@ -414,6 +433,11 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                 dur.drain()
 
             rec = StepRecord(step=nxt, stall=stall)
+            if sc.shadow_async:
+                # backlog sample point: right after ingest, before any
+                # consolidation settles it — the apply-lag-bound invariant
+                # checks this never exceeds max_lag_steps
+                rec.shadow_lag = int(shadow.stats().lag)
             rec.resync = len(ck.resyncs) > before[2]
             rec.gated = len(ck.skipped_steps) > before[1]
             rec.applied = ck.n_checkpoints > before[0] and not rec.resync
@@ -438,6 +462,12 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                 trace.wedge = {"raised": raised, "lagging": lagging,
                                "partial_step": partial,
                                "final_step": int(shadow_ck["step"])}
+            elif sc.max_lag_steps is not None and nxt < sc.steps:
+                # bounded-lag drill: consolidating every step would drain
+                # the very backlog the bound exists to absorb — settle only
+                # at the final step (bit-identity is still checked there,
+                # and the per-step lag bound via rec.shadow_lag)
+                shadow_ck = None
             else:
                 try:
                     shadow_ck = shadow.consolidate()
@@ -449,9 +479,10 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                         int(n): tuple(int(b) for b in bids)
                         for n, bids in e.missing_buckets.items()}
                     rec.dead_nodes = tuple(sorted(e.dead_nodes))
-            rec.shadow_step = int(shadow_ck["step"])
-            rec.shadow_ckpt = shadow_ck
-            trace.final_shadow = shadow_ck
+            if shadow_ck is not None:
+                rec.shadow_step = int(shadow_ck["step"])
+                rec.shadow_ckpt = shadow_ck
+                trace.final_shadow = shadow_ck
             rec.state = ckpt
             rec.first_seen = nxt not in trace.states
             if rec.first_seen:
@@ -551,6 +582,7 @@ def _run_channel(sc: Scenario, trace: Trace, engine: _Engine):
                 step = int(restored["step"])
         trace.final = last_ckpt
     finally:
+        trace.shadow_stats = shadow.stats()
         chan.close()
         if dur is not None:
             dur.drain()
@@ -593,7 +625,8 @@ def _run_full(sc: Scenario, trace: Trace, engine: _Engine):
     if sc.checkpointer == "checkmate":
         shadow = ShadowCluster(layout_for_tree(s0.params), opt,
                                n_nodes=sc.shadow_nodes,
-                               async_mode=sc.shadow_async)
+                               async_mode=sc.shadow_async,
+                               max_lag_steps=sc.max_lag_steps)
         shadow.bootstrap(s0.params, s0.mu, s0.nu, 0)
         chan = InstrumentedChannel(sc.channel.build(
             sc.schedule.failures_at(), n_shadow_nodes=sc.shadow_nodes))

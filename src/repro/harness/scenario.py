@@ -52,6 +52,11 @@ class ChannelSpec:
     replication_factor: int = 1
     sharded: bool = False              # packetized only: bucket->owner routing
     shadow_rails: int = 1
+    # fabric engine: False = per-frame oracle, True = calendar-queue fast
+    # path (bit-identical; tests/test_fabric_fastpath.py). Serialized into
+    # every scenario/bundle JSON so a violation replays on the exact
+    # engine that produced it.
+    fast: bool = False
 
     @property
     def has_fabric(self) -> bool:
@@ -77,7 +82,7 @@ class ChannelSpec:
                 shadow_nics=self.shadow_nics, n_channels=self.n_channels,
                 replication_factor=self.replication_factor,
                 sharded=self.sharded, shadow_rails=self.shadow_rails,
-                failures_at=failures_at)
+                failures_at=failures_at, fast=self.fast)
 
         if self.kind == "inprocess":
             if failures_at:
@@ -293,6 +298,14 @@ class Scenario:
     momentum: float = 0.9
     shadow_nodes: int = 2
     shadow_async: bool = False
+    # bounded multi-step shadow lag (async only): the applier may trail the
+    # trainer by at most this many queued deliveries; a worker at the bound
+    # catches up with one batched K-step replay, and the trainer's wait is
+    # booked as the `apply-lag` stall stage. None = legacy unbounded queue.
+    max_lag_steps: int | None = None
+    # throttle every shadow apply by this many seconds (a deliberately slow
+    # applier — the slow-apply golden drills); 0.0 = no throttle
+    apply_delay_s: float = 0.0
     checkpointer: str = "checkmate"    # checkmate | sync | none
     ckpt_freq: int = 1
     channel: ChannelSpec = field(default_factory=ChannelSpec)
@@ -452,6 +465,32 @@ class Scenario:
             if self.level == "full" and len(losses) > 1:
                 raise ValueError(f"{self.name}: full-level shrink drills "
                                  f"fire once (one FSDP flip)")
+        if self.apply_delay_s < 0:
+            raise ValueError(f"{self.name}: apply_delay_s must be >= 0")
+        if self.apply_delay_s and self.level != "channel":
+            raise ValueError(f"{self.name}: slow-apply throttles are "
+                             f"channel-level scenarios")
+        if self.max_lag_steps is not None:
+            if self.max_lag_steps < 1:
+                raise ValueError(f"{self.name}: max_lag_steps must be >= 1")
+            if not self.shadow_async:
+                raise ValueError(f"{self.name}: max_lag_steps bounds the "
+                                 f"async delivery queue — requires "
+                                 f"shadow_async")
+            # bounded-lag runs consolidate only at the END (consolidating
+            # every step would drain the backlog the drill exists to
+            # build), so drills that need per-step consolidation or
+            # per-step flush settlement cannot combine with it
+            if (self.schedule.wedge_node is not None
+                    or self.schedule.shadow_death
+                    or self.schedule.plane_loss
+                    or self.schedule.train_node_loss
+                    or self.durability.enabled):
+                raise ValueError(
+                    f"{self.name}: max_lag_steps cannot combine with wedge "
+                    f"/ shadow_death / plane_loss / elastic / durability "
+                    f"drills — those settle the shadow plane every step, "
+                    f"which defeats the lag bound under test")
         if self.checkpointer != "checkmate" and self.level == "channel":
             raise ValueError(f"{self.name}: channel-level scenarios drive "
                              f"a CheckmateCheckpointer")
@@ -628,6 +667,16 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
         node_loss = (TrainNodeLoss(step=int(rng.integers(2, steps + 1)),
                                    ranks=ranks),)
 
+    # fabric engine + bounded shadow lag (append-only draws, same rule as
+    # above: nothing before this point may change its draw order)
+    if spec.has_fabric and rng.random() < 0.5:
+        spec = dataclasses.replace(spec, fast=True)   # calendar-queue engine
+    max_lag_steps = None
+    if (shadow_async and not deaths and not plane_loss and not tier_fail
+            and not durability.enabled and not node_loss
+            and rng.random() < 0.5):
+        max_lag_steps = int(rng.integers(1, 5))
+
     return Scenario(
         name=f"sampled-{seed}", level=level, seed=int(seed) & 0x7FFFFFFF,
         steps=steps,
@@ -637,6 +686,7 @@ def sample_scenario(seed: int, level: str | None = None) -> Scenario:
         optimizer=optimizer, momentum=momentum,
         shadow_nodes=shadow_nodes,
         shadow_async=shadow_async,
+        max_lag_steps=max_lag_steps,
         channel=spec,
         schedule=FailureSchedule(train_fail_steps=train_fails,
                                  fabric=tuple(fabric),

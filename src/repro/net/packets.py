@@ -18,7 +18,7 @@ from dataclasses import dataclass, field
 MTU = 4096                      # payload bytes per wire frame (jumbo-ish)
 
 
-@dataclass
+@dataclass(slots=True)
 class Frame:
     """One simulated data-plane frame (or a coalesced run of them).
 

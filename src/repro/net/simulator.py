@@ -100,6 +100,10 @@ class FabricResult:
     pfc_pauses: int
     pfc_resumes: int
     latency: dict
+    # processed heap events — identical between fast=True and the
+    # per-frame oracle (the fast engine walks the exact same event
+    # stream, it just dispatches it cheaper); the differential suite
+    # (tests/test_fabric_fastpath.py) asserts full equality
     events: int
     # per-link PFC pause-duration account (was aggregate-only): total
     # link-paused virtual seconds, plus {"src->dst": {pauses, resumes,
@@ -113,7 +117,7 @@ class _Link:
     __slots__ = ("src", "dst", "rate_bps", "prop", "q", "qbytes", "busy",
                  "up", "pause_count", "sent_xoff", "cap", "xoff", "xon",
                  "epoch", "drops", "pause_events", "resume_events",
-                 "paused_since", "pause_s", "key")
+                 "paused_since", "pause_s", "key", "ser_chunk")
 
     def __init__(self, spec, bounded: bool, pfc: PfcConfig,
                  min_cap: int = 0):
@@ -177,6 +181,17 @@ class FabricSimulator:
             ``shadow_cuts`` and every piece is stamped with its owner.
         shadow_cuts: sorted total-buffer offsets where bucket ownership
             changes; tagged frames straddling a cut are split there.
+        fast: run the specialized event engine (``_run_fast``). It walks
+            the exact same heap with the exact same keys and float
+            arithmetic as the per-frame loop — every event fires at the
+            same instant in the same order — but the hot
+            serialize -> arrive -> route -> enqueue chain is inlined into
+            one dispatch loop with hoisted lookups, and every rare branch
+            (tagged/mirror traffic, kills, drops, PFC transitions,
+            multi-channel or sharded sends) falls back to the exact
+            per-frame methods mid-chain. Results are bit-exact against
+            ``fast=False`` including ``FabricResult.events``;
+            tests/test_fabric_fastpath.py is the differential suite.
     """
 
     def __init__(self, topo: Topology, *, grad_bytes_per_group: int,
@@ -186,8 +201,9 @@ class FabricSimulator:
                  retx_timeout_s: float = 100e-6, max_retx: int = 10,
                  max_time_s: float = 30.0,
                  frame_tx_hook=None, shadow_rx_hook=None,
-                 shadow_route=None, shadow_cuts=()):
+                 shadow_route=None, shadow_cuts=(), fast: bool = False):
         self.topo = topo
+        self.fast = bool(fast)
         self.pfc = pfc
         self.shadow_route = shadow_route
         self.shadow_cuts = sorted(shadow_cuts)
@@ -270,6 +286,12 @@ class FabricSimulator:
         self._seq = 0
         self.now = 0.0
         self.events = 0
+        # memoize the hot bound methods: every heap push reuses ONE object,
+        # so the fast loop can dispatch by identity (`fn is arrive`) and
+        # classic pushes skip re-binding. Reads still resolve through the
+        # instance, so both loops push the very same objects.
+        self._tx_done = self._tx_done
+        self._arrive = self._arrive
         self.retransmits = 0
         self.rerouted = 0
         self.mirror_lost = 0
@@ -279,6 +301,10 @@ class FabricSimulator:
             self._at(spec.at_s, self._fail, spec)
 
     # -- event plumbing ----------------------------------------------------
+    # Heap entries are (fire_t, seq, fn, arg): same-instant events fire in
+    # creation order. Both engines push through this one function (or an
+    # inline copy with identical keys), so event order never depends on
+    # which engine runs.
     def _at(self, t: float, fn, arg):
         self._seq += 1
         heapq.heappush(self._heap, (t, self._seq, fn, arg))
@@ -376,8 +402,7 @@ class FabricSimulator:
         if lk.busy or lk.pause_count or not lk.q or not lk.up:
             return
         lk.busy = True
-        f = lk.q[0]
-        self._after(f.payload_len * 8 / lk.rate_bps, self._tx_done,
+        self._after(lk.q[0].payload_len * 8 / lk.rate_bps, self._tx_done,
                     (lk, lk.epoch))
 
     def _tx_done(self, arg):
@@ -581,15 +606,370 @@ class FabricSimulator:
         for g in range(topo.n_dp_groups):
             for lr in range(topo.ranks_per_group):
                 self._send_round(g, lr, 0)
-        heap = self._heap
-        while heap:
-            t, _s, fn, arg = heapq.heappop(heap)
-            if t > self.max_time:
-                break
-            self.now = t
-            self.events += 1
-            fn(arg)
+        if self.fast:
+            self._run_fast()
+        else:
+            heap = self._heap
+            pop = heapq.heappop
+            max_time = self.max_time
+            events = 0
+            while heap:
+                item = pop(heap)
+                t = item[0]
+                if t > max_time:
+                    break
+                self.now = t
+                events += 1
+                item[2](item[3])
+            self.events = events
         return self._result()
+
+    def _run_fast(self):
+        """The fast engine: the exact event stream of the per-frame loop,
+        dispatched cheaper.
+
+        Two mechanically-verifiable equivalences carry the whole design:
+
+        * **Order.** The per-frame loop fires events in ``(fire_t, seq)``
+          order, and ``seq`` is globally monotonic in *push* order. So a
+          calendar queue — a dict from fire time to a FIFO bucket plus a
+          heap of distinct times — fires events in exactly the same order
+          (same instant => insertion order == seq order) while replacing
+          log-n 4-tuple comparisons with list appends. Slow-path methods
+          keep scheduling through ``self._at``, which is rebound to the
+          bucket push for the duration of the run.
+        * **Arithmetic.** ``_tx_done`` and ``_arrive`` (the two handlers
+          that are ~all events) are inlined with hoisted lookups but
+          compute the identical float expressions on identical inputs in
+          the identical sequence; every rare branch (tagged/mirror
+          traffic, kills, drops, PFC transitions, multi-channel or
+          sharded sends) falls back to the exact per-frame methods
+          mid-chain.
+
+        Results are therefore bit-identical by construction — including
+        ``FabricResult.events`` — and tests/test_fabric_fastpath.py
+        holds this engine to that bar against the per-frame loop."""
+        times: list = []            # heap of DISTINCT fire times
+        buckets: dict = {}          # fire time -> FIFO of flat event items
+        pop_t = heapq.heappop
+        push_t = heapq.heappush
+        txdone = self._tx_done
+        arrive = self._arrive
+
+        # bucket items are flat triples — (arrive, frame, node) /
+        # (txdone, link, epoch) / (other_fn, arg, None) — so the hot
+        # pushes allocate one tuple and the pop unpacks once
+        def fast_at(t2, fn, arg, _g=buckets.get):
+            if fn is arrive or fn is txdone:
+                item = (fn, arg[0], arg[1])
+            else:
+                item = (fn, arg, None)
+            b = _g(t2)
+            if b is None:
+                buckets[t2] = [item]
+                push_t(times, t2)
+            else:
+                b.append(item)
+
+        # drain events scheduled before the run (initial sends, failure
+        # timers) into the calendar in (fire_t, seq) order, then route
+        # every later self._at/_after through the calendar as well
+        for t2, _sq, fn, arg in sorted(self._heap):
+            fast_at(t2, fn, arg)
+        self._heap.clear()
+        self._at = fast_at          # instance attr shadows the method
+
+        links = self.links
+        kindof = self._kind
+        topo = self.topo
+        attach = topo.attach
+        host_of_rank = topo.host_of_rank
+        spine_set = self._spine_set
+        feeders = self._feeders
+        pfc_enabled = self.pfc.enabled
+        pause_prop = self.pfc.pause_prop_s
+        lat_ring = self._lat["ring"]
+        lat_mirror = self._lat["mirror"]
+        rx_round = self._rx_round
+        done_rounds = self._done_rounds
+        send_next = self._send_next
+        grl = self._group_rounds_left
+        group_done = self.group_done_s
+        rpg = topo.ranks_per_group
+        rpg_m1 = rpg - 1
+        multi_rank = rpg > 1
+        chunk_bytes = self.chunk_bytes
+        last_round = self.rounds - 1
+        max_time = self.max_time
+        bget = buckets.get
+        # the single-channel unsharded untagged send (one coalesced frame
+        # per chunk, no payload hook) is frequent enough to build inline
+        simple_send = (self.n_channels == 1 and self.shadow_route is None
+                       and self.frame_tx_hook is None
+                       and self.split[0] <= MTU * self.quantum)
+        nf0 = (chunk_bytes + MTU - 1) // MTU
+        # per-rank forwarding table: a ring frame to rank r always lands on
+        # r's access downlink from r's leaf (the topology is static; kills
+        # fall back to the exact methods via the `up` checks)
+        dst_info = []
+        for r in range(topo.n_ranks):
+            h = host_of_rank[r]
+            leaf = attach[h]
+            dst_info.append((leaf, links[(leaf, h)]))
+        access = [links[(h, attach[h])]
+                  for h in (host_of_rank[r] for r in range(topo.n_ranks))]
+        # full-chunk serialization time per link, precomputed with the
+        # oracle's exact expression (pl * 8 == chunk_bytes * 8 => same div)
+        for lk in links.values():
+            lk.ser_chunk = chunk_bytes * 8 / lk.rate_bps
+        counters_of = {s: dp.counters for s, dp in self.dataplanes.items()}
+        # one lookup per arrival: node -> (kind, payload) where payload is
+        # a forward-count cell for switches (untagged L2 forwards bump rx
+        # and tx by the same frame count, tallied here and merged into the
+        # slow-path-shared SwitchCounters after the loop) and the attached
+        # leaf's counters for shadow hosts (its ACK drop accounting)
+        fwd_count = {s: [0] for s in counters_of}
+        node_info = {}
+        for nd, kind in kindof.items():
+            if kind == _SWITCH:
+                node_info[nd] = (kind, fwd_count[nd])
+            elif kind == _HOST:
+                node_info[nd] = (kind, None)
+            else:
+                node_info[nd] = (kind, counters_of[attach[nd]])
+        # per-site bucket memos: same-instant events overwhelmingly push
+        # to the same future instant (equal rates / equal propagation), so
+        # remember the last (time, bucket) per push site. A memo hit can
+        # never alias a drained bucket: pushes target t2 >= now, drained
+        # buckets have time < now (the active bucket stays in the dict
+        # until fully processed, so zero-delay pushes stay correct too).
+        m1t = m2t = m3t = m4t = -1.0
+        m1b = m2b = m3b = m4b = None
+        events = 0
+        try:
+            while times:
+                tcur = pop_t(times)
+                if tcur > max_time:
+                    break
+                self.now = t = tcur
+                b = buckets[tcur]
+                i = 0
+                while True:
+                    n = len(b)      # same-instant pushes grow the bucket
+                    if i >= n:
+                        break
+                    for fn, a1, a2 in b[i:n]:
+                        if fn is arrive:
+                            f = a1
+                            node = a2
+                            info = node_info[node]
+                            kind = info[0]
+                            if kind == _SWITCH:
+                                if f.tagged:    # mirror path: exact
+                                    arrive((f, node))
+                                    continue
+                                info[1][0] += f.n_frames
+                                leaf_dst, nlk = dst_info[f.dst]
+                                if node != leaf_dst:
+                                    if node in spine_set:
+                                        nlk = links[(node, leaf_dst)]
+                                    else:
+                                        nh = self._route(
+                                            node, host_of_rank[f.dst], f)
+                                        if nh is None:
+                                            self._lost(f)
+                                            continue
+                                        nlk = links[(node, nh)]
+                                pl = f.payload_len
+                                # inline _enqueue (drops/dead links exact)
+                                if not nlk.up or (
+                                        nlk.cap is not None
+                                        and nlk.qbytes + pl > nlk.cap):
+                                    self._enqueue(nlk, f)
+                                    continue
+                                nlk.q.append(f)
+                                nlk.qbytes += pl
+                                if (nlk.qbytes >= nlk.xoff and pfc_enabled
+                                        and nlk.cap is not None
+                                        and not nlk.sent_xoff):
+                                    nlk.sent_xoff = True
+                                    for fd in feeders.get(nlk.src, []):
+                                        fast_at(t + pause_prop,
+                                                self._pause, fd)
+                                if nlk.busy or nlk.pause_count:
+                                    continue
+                                # inline _try_tx; the head IS f (idle +
+                                # unpaused means the queue was empty)
+                                nlk.busy = True
+                                t2 = t + (nlk.ser_chunk
+                                          if pl == chunk_bytes
+                                          else pl * 8 / nlk.rate_bps)
+                                if t2 == m3t:
+                                    m3b.append((txdone, nlk, nlk.epoch))
+                                else:
+                                    b2 = bget(t2)
+                                    if b2 is None:
+                                        buckets[t2] = b2 = [
+                                            (txdone, nlk, nlk.epoch)]
+                                        push_t(times, t2)
+                                    else:
+                                        b2.append((txdone, nlk,
+                                                   nlk.epoch))
+                                    m3t = t2
+                                    m3b = b2
+                            elif kind == _HOST:
+                                f.t_arrive = t
+                                d = t - f.t_send    # inline _stat("ring")
+                                nf = f.n_frames
+                                lat_ring[0] += nf
+                                lat_ring[1] += d * nf
+                                if d > lat_ring[2]:
+                                    lat_ring[2] = d
+                                rank = f.dst        # inline _host_recv
+                                g = f.dp_group
+                                lr = rank - g * rpg
+                                rnd = (lr - f.chunk) % rpg if multi_rank \
+                                    else 0
+                                dr = done_rounds[rank]
+                                pl = f.payload_len
+                                if pl == chunk_bytes:
+                                    # whole chunk in one frame: the byte
+                                    # accumulator can't be partial
+                                    if rnd in dr:
+                                        continue
+                                else:
+                                    acc = rx_round[rank]
+                                    got = acc.get(rnd, 0) + pl
+                                    acc[rnd] = got
+                                    if got < chunk_bytes or rnd in dr:
+                                        continue
+                                dr.add(rnd)
+                                left = grl[g] - 1
+                                grl[g] = left
+                                if left == 0:
+                                    group_done[g] = t
+                                # round rr-1 received releases send of rr
+                                rr = send_next[rank]
+                                while rr <= last_round and rr - 1 in dr:
+                                    send_next[rank] = rr + 1
+                                    if (not simple_send or lr == rpg_m1
+                                            or (lr == 0 and rr == 0)):
+                                        self._send_round(g, lr, rr)
+                                        rr += 1
+                                        continue
+                                    # inline _send_round: one untagged
+                                    # coalesced frame, positional args
+                                    sf = Frame(rank,
+                                               g * rpg + (lr + 1) % rpg,
+                                               0, chunk_bytes,
+                                               (lr + 1 - rr) % rpg,
+                                               0, 0, False, -1, -1, False,
+                                               g, 0, nf0, t)
+                                    rr += 1
+                                    nlk = access[rank]
+                                    # inline _enqueue (host NIC)
+                                    if not nlk.up or (
+                                            nlk.cap is not None
+                                            and nlk.qbytes + chunk_bytes
+                                            > nlk.cap):
+                                        self._enqueue(nlk, sf)
+                                        continue
+                                    nlk.q.append(sf)
+                                    nlk.qbytes += chunk_bytes
+                                    if (nlk.qbytes >= nlk.xoff
+                                            and pfc_enabled
+                                            and nlk.cap is not None
+                                            and not nlk.sent_xoff):
+                                        nlk.sent_xoff = True
+                                        for fd in feeders.get(nlk.src, []):
+                                            fast_at(t + pause_prop,
+                                                    self._pause, fd)
+                                    if nlk.busy or nlk.pause_count:
+                                        continue
+                                    # idle + unpaused: the head is sf
+                                    nlk.busy = True
+                                    t2 = t + nlk.ser_chunk
+                                    if t2 == m4t:
+                                        m4b.append((txdone, nlk,
+                                                    nlk.epoch))
+                                        continue
+                                    b2 = bget(t2)
+                                    if b2 is None:
+                                        buckets[t2] = b2 = [
+                                            (txdone, nlk, nlk.epoch)]
+                                        push_t(times, t2)
+                                    else:
+                                        b2.append((txdone, nlk,
+                                                   nlk.epoch))
+                                    m4t = t2
+                                    m4b = b2
+                            else:
+                                f.t_arrive = t
+                                d = t - f.t_send   # inline _stat("mirror")
+                                nf = f.n_frames
+                                lat_mirror[0] += nf
+                                lat_mirror[1] += d * nf
+                                if d > lat_mirror[2]:
+                                    lat_mirror[2] = d
+                                self._shadow_recv(node, f)
+                                # inline process_ack(): leaf drops the ACK
+                                info[1].dropped_acks += 1
+                        elif fn is txdone:
+                            lk = a1
+                            if a2 != lk.epoch:  # killed mid-serialize
+                                continue
+                            f = lk.q.popleft()
+                            lk.qbytes -= f.payload_len
+                            lk.busy = False
+                            if lk.sent_xoff and lk.qbytes <= lk.xon:
+                                lk.sent_xoff = False
+                                for fd in feeders.get(lk.src, []):
+                                    fast_at(t + pause_prop,
+                                            self._resume, fd)
+                            t2 = t + lk.prop
+                            if t2 == m1t:
+                                m1b.append((arrive, f, lk.dst))
+                            else:
+                                b2 = bget(t2)
+                                if b2 is None:
+                                    buckets[t2] = b2 = [
+                                        (arrive, f, lk.dst)]
+                                    push_t(times, t2)
+                                else:
+                                    b2.append((arrive, f, lk.dst))
+                                m1t = t2
+                                m1b = b2
+                            if lk.q and not lk.pause_count:  # _try_tx
+                                lk.busy = True
+                                pl = lk.q[0].payload_len
+                                t2 = t + (lk.ser_chunk
+                                          if pl == chunk_bytes
+                                          else pl * 8 / lk.rate_bps)
+                                if t2 == m2t:
+                                    m2b.append((txdone, lk, lk.epoch))
+                                    continue
+                                b2 = bget(t2)
+                                if b2 is None:
+                                    buckets[t2] = b2 = [
+                                        (txdone, lk, lk.epoch)]
+                                    push_t(times, t2)
+                                else:
+                                    b2.append((txdone, lk, lk.epoch))
+                                m2t = t2
+                                m2b = b2
+                        else:
+                            fn(a1)
+                    i = n
+                events += i
+                del buckets[tcur]
+        finally:
+            del self._at            # restore the heap-backed method
+        for node, cell in fwd_count.items():
+            if cell[0]:
+                c = counters_of[node]
+                c.rx_frames += cell[0]
+                c.tx_frames += cell[0]
+        self.events = events
 
     def _result(self) -> FabricResult:
         topo = self.topo
@@ -663,7 +1043,8 @@ def simulate_fabric(n_dp_groups: int, ranks_per_group: int,
                     pfc: PfcConfig = PfcConfig(), failures=(),
                     frame_quantum: int | None = None,
                     retx_timeout_s: float = 100e-6, max_retx: int = 10,
-                    max_time_s: float = 30.0) -> FabricResult:
+                    max_time_s: float = 30.0,
+                    fast: bool = False) -> FabricResult:
     """Run one multi-DP-group AllGather iteration on a simulated fabric.
 
     The main entry point for topology/replication sweeps; see the class
@@ -679,7 +1060,7 @@ def simulate_fabric(n_dp_groups: int, ranks_per_group: int,
         replication_factor=replication_factor, n_channels=n_channels,
         pfc=pfc, failures=failures, frame_quantum=frame_quantum,
         retx_timeout_s=retx_timeout_s, max_retx=max_retx,
-        max_time_s=max_time_s)
+        max_time_s=max_time_s, fast=fast)
     return sim.run()
 
 
@@ -892,6 +1273,9 @@ def main(argv=None):
                    metavar="KIND:TARGET[@US]",
                    help="failure injection, e.g. link:leaf0:spine0@120, "
                         "switch:spine1@80, shadow_nic:s0@50")
+    p.add_argument("--fast", action="store_true",
+                   help="inlined fast event engine (bit-exact results; "
+                        "see docs/netsim.md)")
     args = p.parse_args(argv)
 
     if args.ranks % args.dp_groups:
@@ -918,7 +1302,7 @@ def main(argv=None):
             topology=args.topology, n_shadow_nodes=args.shadow_nodes,
             link_gbps=args.link_gbps, replication_factor=rf,
             n_channels=args.channels, ranks_per_leaf=args.ranks_per_leaf,
-            n_spines=args.spines, failures=failures)
+            n_spines=args.spines, failures=failures, fast=args.fast)
         print(f"{rf:>3} {r.duration_s * 1e6:>9.1f} "
               f"{r.bus_bandwidth_gbps:>8.1f} {r.tx_over_rx:>6.3f} "
               f"{r.pfc_pauses:>6} {r.drops:>5} {r.retransmits:>5} "

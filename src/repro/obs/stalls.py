@@ -14,6 +14,9 @@ Stage vocabulary (KNOWN_STAGES):
                           the paper's zero-overhead claim)
 * ``quantize``          — gradient compression ahead of the wire
 * ``inline-apply``      — trainer-thread shadow apply (sync ingest mode)
+* ``apply-lag``         — trainer blocked on a bounded-lag shadow whose
+                          backlog hit ``max_lag_steps`` (the only cost a
+                          too-slow async applier may charge the trainer)
 * ``resync``            — full-state re-replication after a desync
 * ``consolidate-wait``  — waiting on shadow consolidation during recovery
 * ``copy-persist``      — the copy-then-persist baselines' whole stall
@@ -22,7 +25,7 @@ Stage vocabulary (KNOWN_STAGES):
 """
 from __future__ import annotations
 
-KNOWN_STAGES = ("send", "quantize", "inline-apply", "resync",
+KNOWN_STAGES = ("send", "quantize", "inline-apply", "apply-lag", "resync",
                 "consolidate-wait", "copy-persist", "elastic-reshard")
 
 

@@ -92,6 +92,28 @@ def test_fig10_sweep_512_ranks_two_groups():
     assert all(len(r.group_done_s) == 2 for r in rs)
 
 
+def test_topology_sweep_1024_ranks():
+    """1024 ranks across 4 DP groups on every topology flavor — the scale
+    the fast path exists for.  The calendar-queue engine (fast=True) keeps
+    the sweep affordable in CI while the differential suite
+    (tests/test_fabric_fastpath.py) pins it bit-identical to the oracle,
+    so the Fig 10 claims transfer."""
+    from repro.net.simulator import sweep_topology
+    rs = sweep_topology(
+        ("rail", "leaf-spine"), n_dp_groups=4, ranks_per_group=256,
+        grad_bytes_per_group=256 * 1024, n_shadow_nodes=4,
+        replication_factor=2, ranks_per_leaf=32, fast=True)
+    for name, r in rs.items():
+        assert r.n_ranks == 1024 and r.n_dp_groups == 4, name
+        assert r.ring_completed and r.reassembled_ok, name
+        assert r.drops == 0 and r.missing_captures == 0, name
+        assert r.duplicate_mirror_bytes == 0, name              # exactly once
+        assert sum(r.shadow_bytes.values()) == \
+            r.grad_bytes_per_group * 4 * 2, name
+        assert len(r.group_done_s) == 4, name
+        assert 1.0 <= r.tx_over_rx < 1.1, name                  # Fig 10 shape
+
+
 # -- resource semantics ------------------------------------------------------
 
 def test_pfc_pause_propagates_and_stays_lossless():

@@ -1,0 +1,166 @@
+"""Differential suite for the fabric fast path (`simulate_fabric(fast=True)`).
+
+The calendar-queue engine must be *bit-identical* to the per-frame oracle —
+not statistically close: every counter, verdict, timestamp, and PFC pause
+account in `FabricResult` has to match exactly, because `ChannelSpec.fast`
+is serialized into scenario/bundle JSON and a violation replayed on the
+other engine must reproduce the same trace.  A property sweep drives random
+topologies x DP-group shapes x failure specs through both engines and
+compares `dataclasses.asdict` of the results wholesale; any mismatch writes
+a harness-style repro bundle (config + seed + differing fields) so the case
+is replayable without re-running the sweep.
+"""
+import dataclasses
+import json
+import os
+import tempfile
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.net.pfc import PfcConfig
+from repro.net.simulator import FailureSpec, simulate_fabric
+
+TOPOLOGIES = ("single", "rail", "leaf-spine")
+FAILURE_KINDS = (None, "link", "switch", "shadow_nic")
+
+# counters the ISSUE pins by name (the wholesale asdict comparison subsumes
+# these, but a targeted list gives a readable first-divergence report)
+_PINNED = ("rx_frames", "tx_frames", "mirrored_frames", "drops",
+           "retransmits", "rerouted", "missing_captures",
+           "duplicate_mirror_bytes", "mirror_lost_frames", "reassembled_ok",
+           "ring_completed", "duration_s", "group_done_s", "pfc_pauses",
+           "pfc_resumes", "pfc_pause_s", "link_pfc", "events")
+
+
+def _failures(kind, topo, at_s):
+    """A valid one-shot `FailureSpec` for the drawn topology (planner
+    naming: single -> sw0; rail/leaf-spine -> leaf{i}/spine{i}; shadow
+    hosts -> s{i})."""
+    if kind is None:
+        return ()
+    if kind == "shadow_nic":
+        target = "s0"
+    elif kind == "switch":
+        target = "sw0" if topo == "single" else "spine0"
+    else:  # link: cut the shadow access link (single) or a leaf uplink
+        target = ("s0", "sw0") if topo == "single" else ("leaf0", "spine0")
+    return (FailureSpec(at_s=at_s, kind=kind, target=target),)
+
+
+def _bundle(config: dict, diffs: list[str]) -> Path:
+    """Write a harness-style repro bundle for a fast-vs-oracle divergence."""
+    bundle_dir = Path(os.environ.get(
+        "REPRO_BUNDLE_DIR",
+        Path(tempfile.gettempdir()) / "repro-fastpath-bundles"))
+    bundle_dir.mkdir(parents=True, exist_ok=True)
+    cfg = dict(config)
+    cfg["failures"] = [dataclasses.asdict(f) for f in cfg.get("failures", ())]
+    cfg["pfc"] = dataclasses.asdict(cfg["pfc"]) if "pfc" in cfg else None
+    payload = {
+        "seed": int(os.environ.get("REPRO_SEED", "0")),
+        "scenario": {"kind": "fabric-fastpath-differential", "config": cfg},
+        "failing_step": None,
+        "violations": [f"fast-path divergence: {d}" for d in diffs],
+    }
+    path = bundle_dir / "fastpath-divergence.json"
+    path.write_text(json.dumps(payload, indent=2, default=str))
+    return path
+
+
+def _assert_identical(**config):
+    oracle = simulate_fabric(fast=False, **config)
+    fast = simulate_fabric(fast=True, **config)
+    a, b = dataclasses.asdict(oracle), dataclasses.asdict(fast)
+    if a == b:
+        return oracle
+    diffs = [f"{k}: oracle={a[k]!r} fast={b[k]!r}"
+             for k in a if a[k] != b[k]]
+    pinned = [d for d in diffs if d.split(":")[0] in _PINNED] or diffs
+    path = _bundle(config, diffs)
+    pytest.fail(f"fast engine diverged from the per-frame oracle on "
+                f"{len(diffs)} field(s) (repro bundle: {path}):\n  "
+                + "\n  ".join(pinned[:8]))
+
+
+# -- the property: random shapes x failures, full-result equality ------------
+
+@given(st.integers(1, 3),                    # DP groups
+       st.integers(2, 8),                    # ranks per group
+       st.integers(1, 3),                    # shadow nodes
+       st.integers(1, 4),                    # replication factor
+       st.sampled_from(TOPOLOGIES),
+       st.sampled_from(FAILURE_KINDS),
+       st.integers(10, 300))                 # failure time, microseconds
+@settings(max_examples=24, deadline=None)
+def test_fast_matches_oracle_everywhere(groups, rpg, shadow, rf, topo,
+                                        fail, at_us):
+    """Bit-exact frame counters, delivery-completeness verdicts, and
+    identical timestamps / PFC pause accounting on every drawn config."""
+    _assert_identical(
+        n_dp_groups=groups, ranks_per_group=rpg,
+        grad_bytes_per_group=rpg * 8192, topology=topo,
+        n_shadow_nodes=shadow, replication_factor=rf,
+        ranks_per_leaf=4, n_spines=2,
+        failures=_failures(fail, topo, at_us * 1e-6))
+
+
+# -- targeted corners the sweep may not hit every run -------------------------
+
+def test_fast_matches_oracle_pfc_heavy():
+    """Tiny switch buffers force PAUSE/RESUME storms; the per-link pause
+    ledger (durations included) must match to the bit."""
+    r = _assert_identical(
+        n_dp_groups=2, ranks_per_group=6, grad_bytes_per_group=6 * 65536,
+        topology="leaf-spine", n_shadow_nodes=2, replication_factor=2,
+        ranks_per_leaf=4, n_spines=2,
+        pfc=PfcConfig(capacity_bytes=32768, xoff_frac=0.5, xon_frac=0.3))
+    assert r.pfc_pauses > 0          # the corner actually fired
+    assert r.pfc_pause_s > 0.0
+
+
+def test_fast_matches_oracle_lossy_retransmit():
+    """PFC off -> drops + retransmissions; retry timing must line up."""
+    r = _assert_identical(
+        n_dp_groups=1, ranks_per_group=8, grad_bytes_per_group=8 * (1 << 20),
+        topology="leaf-spine", ranks_per_leaf=2, n_spines=1,
+        spine_gbps=100.0, max_retx=200, max_time_s=5.0,
+        pfc=PfcConfig(enabled=False, capacity_bytes=64 * 1024))
+    assert r.drops > 0 and r.retransmits > 0
+    assert r.ring_completed            # TCP keeps training traffic alive
+    assert not r.reassembled_ok        # mirrors are not retransmitted
+
+
+def test_fast_matches_oracle_coalesced_frames():
+    """Macro-frame quantum changes event granularity, not outcomes — and
+    both engines must agree at every quantum."""
+    for quantum in (1, 4, 16):
+        _assert_identical(
+            n_dp_groups=1, ranks_per_group=4, grad_bytes_per_group=4 << 18,
+            topology="single", n_shadow_nodes=2, replication_factor=3,
+            frame_quantum=quantum)
+
+
+def test_fast_matches_oracle_multi_channel():
+    """Chunks striped over channels: per-channel capture streams must
+    reassemble identically on both engines."""
+    _assert_identical(
+        n_dp_groups=2, ranks_per_group=6, grad_bytes_per_group=6 * 30000,
+        topology="rail", n_channels=3, n_shadow_nodes=2, ranks_per_leaf=4)
+
+
+def test_divergence_writes_repro_bundle(tmp_path, monkeypatch):
+    """The mismatch path itself: a synthetic divergence emits a replayable
+    harness-style bundle naming the differing fields."""
+    monkeypatch.setenv("REPRO_BUNDLE_DIR", str(tmp_path))
+    cfg = dict(n_dp_groups=1, ranks_per_group=2, grad_bytes_per_group=16384,
+               topology="single",
+               failures=(FailureSpec(at_s=1e-4, kind="shadow_nic",
+                                     target="s0"),))
+    path = _bundle(cfg, ["rx_frames: oracle=10 fast=11"])
+    stored = json.loads(path.read_text())
+    assert stored["scenario"]["kind"] == "fabric-fastpath-differential"
+    assert stored["scenario"]["config"]["failures"][0]["kind"] == "shadow_nic"
+    assert stored["violations"] == [
+        "fast-path divergence: rx_frames: oracle=10 fast=11"]

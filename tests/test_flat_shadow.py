@@ -10,6 +10,8 @@ Pins the invariants the flat hot path rests on:
 * ``ShadowNode.apply_times`` is bounded while ``stats()`` stays exact;
 * the flat one-pass compressor path is bit-identical to the leaf path.
 """
+import time
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -30,9 +32,16 @@ def _tree(n_leaves: int, seed: int) -> dict:
 
 
 def _drive(layout, params, grad_steps, *, flat, opt, n_nodes=2,
-           async_mode=False, grad_scale=1.0):
+           async_mode=False, grad_scale=1.0, assignment=None,
+           max_lag_steps=None, apply_delay_s=0.0):
     shadow = ShadowCluster(layout, opt, n_nodes=n_nodes, flat=flat,
-                           async_mode=async_mode)
+                           async_mode=async_mode, assignment=assignment,
+                           max_lag_steps=max_lag_steps)
+    if apply_delay_s:
+        for node in shadow.nodes:       # throttle the fused apply itself so
+            orig = node._apply          # batched replays pay it per step
+            node._apply = (lambda *a, _o=orig:
+                           (time.sleep(apply_delay_s), _o(*a))[1])
     zeros = {k: np.zeros_like(v) for k, v in params.items()}
     shadow.bootstrap(params, zeros, zeros, 0)
     chan = InProcessChannel()
@@ -44,6 +53,7 @@ def _drive(layout, params, grad_steps, *, flat, opt, n_nodes=2,
             shadow.on_delivery(d)
     chan.close()
     ckpt = shadow.consolidate(timeout=60)
+    ckpt["shadow_stats"] = shadow.stats()
     shadow.shutdown()
     return ckpt
 
@@ -249,3 +259,81 @@ def test_alloc_flat_is_xla_aligned():
         buf = alloc_flat(n, np.float32)
         assert buf.size == n and buf.dtype == np.float32
         assert buf.ctypes.data % 64 == 0
+
+
+# -- batched K-step apply == K sequential applies, bitwise ---------------------
+
+@given(st.sampled_from(sorted(UPDATE_FNS)),
+       st.integers(1, 4),                     # lag depth K
+       st.sampled_from([False, True]),        # reference: sync / async
+       st.integers(0, 63))                    # sharded-assignment shuffle
+@settings(max_examples=8, deadline=None)
+def test_lagged_batched_apply_bit_identical(opt_name, k, ref_async, aseed):
+    """A bounded-lag shadow whose workers drain K-deep backlogs in batched
+    replays consolidates to the SAME bits as the unlagged path — across
+    optimizers, sync/async references, random sharded assignments, and lag
+    depths 1..4.  Sequential-replay semantics (not gradient summing) is the
+    acceptance bar: the optimizer's moment trajectory must be untouched."""
+    opt = OptimizerConfig(name=opt_name, lr=1e-3)
+    params = _tree(4, seed=7)
+    layout = layout_for_tree(params, cap_bytes=600)
+    n_nodes = 3
+    arng = np.random.default_rng(aseed)
+    assignment = {b.bucket_id: int(arng.integers(0, n_nodes))
+                  for b in layout.buckets}
+    grng = np.random.default_rng(17)
+    grad_steps = [{n: grng.standard_normal(v.shape).astype(np.float32) * 0.01
+                   for n, v in params.items()} for _ in range(5)]
+
+    lagged = _drive(layout, params, grad_steps, flat=True, opt=opt,
+                    n_nodes=n_nodes, async_mode=True, grad_scale=0.7,
+                    assignment=assignment, max_lag_steps=k,
+                    apply_delay_s=0.004)
+    ref = _drive(layout, params, grad_steps, flat=True, opt=opt,
+                 n_nodes=n_nodes, async_mode=ref_async, grad_scale=0.7,
+                 assignment=assignment)
+    assert lagged["step"] == ref["step"] == 5
+    st_ = lagged["shadow_stats"]
+    assert st_.max_queue_depth <= k             # the bound held
+    assert st_.max_batch <= max(k, 1)
+    for name in params:
+        assert np.array_equal(lagged["params"][name], ref["params"][name]), \
+            name
+        assert np.array_equal(lagged["mu"][name], ref["mu"][name]), name
+        assert np.array_equal(lagged["nu"][name], ref["nu"][name]), name
+
+
+def test_lagged_apply_exercises_batching_and_blocks_at_bound():
+    """With a deliberately slow applier and bound 3, the machinery must
+    actually engage: the trainer blocks at the bound (lag_waits > 0) and at
+    least one multi-step batched catch-up replay runs — while staying
+    bit-identical to the unthrottled reference."""
+    opt = OptimizerConfig(name="adamw", lr=1e-3)
+    params = _tree(3, seed=9)
+    layout = layout_for_tree(params, cap_bytes=600)
+    rng = np.random.default_rng(23)
+    grad_steps = [{n: rng.standard_normal(v.shape).astype(np.float32) * 0.01
+                   for n, v in params.items()} for _ in range(7)]
+
+    lagged = _drive(layout, params, grad_steps, flat=True, opt=opt,
+                    n_nodes=2, async_mode=True, max_lag_steps=3,
+                    apply_delay_s=0.02)
+    ref = _drive(layout, params, grad_steps, flat=True, opt=opt, n_nodes=2)
+    st_ = lagged["shadow_stats"]
+    assert st_.lag_waits > 0 and st_.lag_wait_s > 0.0
+    assert st_.batched_applies > 0 and st_.max_batch >= 2
+    assert st_.max_queue_depth <= 3
+    assert lagged["step"] == ref["step"] == 7
+    for name in params:
+        assert np.array_equal(lagged["params"][name], ref["params"][name]), \
+            name
+
+
+def test_max_lag_requires_async_and_positive_bound():
+    params = _tree(2, seed=10)
+    layout = layout_for_tree(params, cap_bytes=600)
+    opt = OptimizerConfig(lr=1e-3)
+    with pytest.raises(ValueError, match="async"):
+        ShadowCluster(layout, opt, async_mode=False, max_lag_steps=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        ShadowCluster(layout, opt, async_mode=True, max_lag_steps=0)

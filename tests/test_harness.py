@@ -129,6 +129,48 @@ def test_scenario_json_roundtrip():
     assert Scenario.from_json(multi.to_json()) == multi
 
 
+def test_fabric_mode_recorded_and_round_trips():
+    """Every scenario/bundle JSON pins the fabric engine it ran on
+    (`channel.fast`): a violation found on the calendar-queue fast path must
+    replay on that exact engine, not silently fall back to the oracle."""
+    fast = GOLDEN["slow-apply-clean"]               # fast=True golden
+    assert fast.channel.fast is True
+    d = fast.to_dict()
+    assert d["channel"]["fast"] is True
+    back = Scenario.from_dict(d)
+    assert back == fast and back.channel.fast is True
+    # the default stays the per-frame oracle, and it round-trips too
+    oracle = GOLDEN["slow-apply-with-link-burst"]
+    assert oracle.channel.fast is False
+    assert oracle.to_dict()["channel"]["fast"] is False
+    assert Scenario.from_dict(oracle.to_dict()).channel.fast is False
+    # build() hands the flag to the transport, which hands it to the engine
+    chan = fast.channel.build({}, fast.shadow_nodes)
+    assert chan.fast is True
+    assert oracle.channel.build({}, oracle.shadow_nodes).fast is False
+    # new lagged-apply knobs survive the same round trip
+    assert Scenario.from_dict(fast.to_dict()).max_lag_steps == \
+        fast.max_lag_steps
+    assert Scenario.from_dict(fast.to_dict()).apply_delay_s == \
+        fast.apply_delay_s
+
+
+def test_fast_engine_bundle_replays_on_fast_engine(tmp_path):
+    """A bundle produced under fast=True replays bit-identically — and the
+    replayed scenario still carries fast=True through the JSON."""
+    sc = Scenario(name="forced-bit-identity-on-fast-fabric", seed=6, steps=3,
+                  channel=ChannelSpec(kind="compressed", inner="packetized",
+                                      fast=True),
+                  invariants=("shadow-bit-identity",))
+    result = run_scenario(sc, bundle_dir=tmp_path)
+    assert not result.passed and result.bundle_path is not None
+    stored = json.loads(result.bundle_path.read_text())
+    assert stored["scenario"]["channel"]["fast"] is True
+    replayed, identical = replay_bundle(result.bundle_path)
+    assert identical
+    assert replayed.scenario.channel.fast is True
+
+
 def test_scenario_validation_rejects_inconsistent_specs():
     from repro.harness import FabricFailure
     with pytest.raises(ValueError, match="fabric"):
